@@ -1,0 +1,35 @@
+"""Paper Fig. 4/6: accelerator speedup over CPU vs batch size.
+
+CPU latencies are measured on this host; the accelerator is the analytic
+GPU-class device model (fixed transfer overhead + roofline compute).
+Validates: speedup grows with batch; the crossover batch varies per model;
+data transfer dominates small batches (paper: 60–80% of GPU time)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import MODELS, cpu_curves, emit, gpu_model
+
+BATCHES = (1, 4, 16, 64, 256, 1024)
+
+
+def main() -> None:
+    curves = cpu_curves()
+    for arch in MODELS:
+        cpu, gpu = curves[arch], gpu_model(arch)
+        speedups = {b: cpu.latency(b) / gpu.latency(b) for b in BATCHES}
+        crossover = next((b for b in BATCHES if speedups[b] > 1.0), None)
+        emit(f"fig4/{arch}/speedup_b1024", gpu.latency(1024) * 1e6,
+             f"speedup={speedups[1024]:.2f}x;crossover_batch={crossover}")
+        xfer = gpu.overhead_s + 1024 * gpu.in_bytes_per_sample / gpu.xfer_bw
+        emit(f"fig4/{arch}/gpu_transfer_frac_b1024",
+             xfer * 1e6, f"{xfer / gpu.latency(1024) * 100:.0f}% of GPU time")
+    mono = all(
+        curves[a].latency(1024) / gpu_model(a).latency(1024)
+        >= curves[a].latency(1) / gpu_model(a).latency(1) for a in MODELS)
+    emit("fig4/check_speedup_grows_with_batch", 0.0,
+         "PASS" if mono else "FAIL")
+
+
+if __name__ == "__main__":
+    main()

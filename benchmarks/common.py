@@ -1,0 +1,47 @@
+"""Shared benchmark plumbing: measured CPU curves, device models, CSV rows."""
+from __future__ import annotations
+
+import os
+
+import numpy as np
+
+from repro.configs.paper_models import BOTTLENECK, PAPER_MODELS, SLA_TARGETS
+from repro.core import infra
+from repro.core.latency_model import AnalyticalDeviceModel, ContentionModel
+
+MODELS = list(PAPER_MODELS)                    # the 8 DeepRecInfra models
+TIERS = ("low", "medium", "high")
+
+N_EXECUTORS = 40                               # paper: 40-core Skylake
+CPU_TDP_W = 125.0
+GPU_TDP_W = 250.0
+
+ART = os.environ.get("REPRO_ARTIFACTS", "artifacts")
+
+_rows: list[tuple] = []
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    """One CSV row per the harness contract: name,us_per_call,derived."""
+    _rows.append((name, us_per_call, derived))
+    print(f"{name},{us_per_call:.3f},{derived}")
+
+
+def rows():
+    return list(_rows)
+
+
+def cpu_curves(refresh: bool = False):
+    return infra.cpu_curves(MODELS, refresh=refresh)
+
+
+def gpu_model(arch: str) -> AnalyticalDeviceModel:
+    return infra.accelerator(arch, "gpu")
+
+
+def sla(arch: str, tier: str) -> float:
+    return SLA_TARGETS[arch].get(tier)
+
+
+BROADWELL_CONTENTION = ContentionModel(factor_at_full=1.6)   # inclusive L2/L3
+SKYLAKE_CONTENTION = ContentionModel(factor_at_full=1.0)     # exclusive

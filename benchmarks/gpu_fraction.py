@@ -1,0 +1,54 @@
+"""Paper Fig. 14: accelerator work-fraction and power-efficiency crossover
+vs tail-latency target (DLRM-RMC1).
+
+Validates: (a) offload unlocks tail latencies CPUs can't reach; (b) the
+fraction of work on the accelerator DECREASES as the SLA relaxes; (c) QPS/W
+crosses over — accelerator wins at strict targets, CPU-only at relaxed ones.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import (CPU_TDP_W, GPU_TDP_W, N_EXECUTORS, cpu_curves,
+                               emit, gpu_model, sla)
+from repro.core.query_gen import generate_queries
+from repro.core.scheduler import tune
+from repro.core.simulator import SchedulerConfig, simulate
+
+NQ = 600
+
+
+def main() -> None:
+    cpu = cpu_curves()["dlrm-rmc1"]
+    gpu = gpu_model("dlrm-rmc1")
+    base = sla("dlrm-rmc1", "medium")
+    fracs = {}
+    for mult, tag in ((0.6, "strict"), (1.0, "medium"), (1.8, "relaxed")):
+        target = base * mult
+        r_cpu = tune(cpu, target, n_executors=N_EXECUTORS, n_queries=NQ)
+        r_gpu = tune(cpu, target, accel=gpu, n_executors=N_EXECUTORS,
+                     n_queries=NQ)
+        # measure offload fraction at the tuned operating point
+        frac = 0.0
+        if r_gpu.offload_threshold:
+            qs = generate_queries(np.random.default_rng(0),
+                                  max(r_gpu.qps * 0.9, 1.0), 2000)
+            sim = simulate(qs, cpu,
+                           SchedulerConfig(batch_size=r_gpu.batch_size,
+                                           offload_threshold=r_gpu.offload_threshold,
+                                           n_executors=N_EXECUTORS), accel=gpu)
+            frac = sim.accel_frac_work
+        fracs[tag] = frac
+        w = CPU_TDP_W + (GPU_TDP_W if r_gpu.offload_threshold else 0.0)
+        emit(f"fig14/{tag}/cpu_qps", r_cpu.qps, f"target={target:.0f}ms")
+        emit(f"fig14/{tag}/gpu_qps", r_gpu.qps,
+             f"thr={r_gpu.offload_threshold};accel_work_frac={frac:.2f}")
+        emit(f"fig14/{tag}/qps_per_watt_cpu", r_cpu.qps / CPU_TDP_W, "")
+        emit(f"fig14/{tag}/qps_per_watt_gpu", r_gpu.qps / w, "")
+    emit("fig14/check_offload_frac_decreases_with_relaxed_sla", 0.0,
+         "PASS" if fracs["strict"] >= fracs["relaxed"] else
+         f"WARN strict={fracs['strict']:.2f} relaxed={fracs['relaxed']:.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,66 @@
+"""Paper Fig. 9 + 12: where the optimal per-request batch size lands.
+
+(a) across SLA targets + query-size distributions (DLRM-RMC1);
+(b) across models (embedding- vs MLP-bound);
+(c) across hardware platforms (Broadwell's inclusive-cache contention pushes
+    the optimum toward batch parallelism).
+"""
+from __future__ import annotations
+
+from benchmarks.common import (BROADWELL_CONTENTION, N_EXECUTORS,
+                               SKYLAKE_CONTENTION, cpu_curves, emit, sla)
+from repro.core.query_gen import LOGNORMAL, PRODUCTION
+from repro.core.scheduler import tune
+
+NQ = 600
+
+
+def main() -> None:
+    curves = cpu_curves()
+
+    # (a) SLA sweep + distribution sweep for DLRM-RMC1
+    opt_by_tier = {}
+    for tier in ("low", "medium", "high"):
+        r = tune(curves["dlrm-rmc1"], sla("dlrm-rmc1", tier), n_queries=NQ)
+        opt_by_tier[tier] = r.batch_size
+        emit(f"fig12a/dlrm-rmc1/{tier}/opt_batch", r.batch_size,
+             f"qps={r.qps:.0f}")
+    emit("fig12a/check_opt_batch_nondecreasing_with_sla", 0.0,
+         "PASS" if opt_by_tier["low"] <= opt_by_tier["high"] else "FAIL")
+
+    r_ln = tune(curves["dlrm-rmc1"], sla("dlrm-rmc1", "medium"),
+                size_dist=LOGNORMAL, n_queries=NQ)
+    r_pr = tune(curves["dlrm-rmc1"], sla("dlrm-rmc1", "medium"),
+                size_dist=PRODUCTION, n_queries=NQ)
+    emit("fig12a/dlrm-rmc1/lognormal_opt_batch", r_ln.batch_size,
+         f"production={r_pr.batch_size}")
+
+    # cross-application penalty (paper: up to 1.7×): run the lognormal-optimal
+    # batch under the production distribution
+    from repro.core.simulator import SchedulerConfig, max_qps_under_sla
+    q_cross = max_qps_under_sla(
+        curves["dlrm-rmc1"],
+        SchedulerConfig(batch_size=r_ln.batch_size, n_executors=N_EXECUTORS),
+        sla("dlrm-rmc1", "medium"), n_queries=NQ, iters=7)
+    emit("fig12a/lognormal_config_on_production_penalty",
+         r_pr.qps / max(q_cross, 1e-9),
+         f"paper_up_to=1.7x;{'PASS' if r_pr.qps >= q_cross else 'FAIL'}")
+
+    # (b) across models
+    for arch in ("dlrm-rmc1", "dlrm-rmc3", "wnd", "dien"):
+        r = tune(curves[arch], sla(arch, "high"), n_queries=NQ)
+        emit(f"fig12b/{arch}/opt_batch", r.batch_size, f"qps={r.qps:.0f}")
+
+    # (c) hardware: Broadwell-style contention favors larger batches
+    r_sky = tune(curves["dlrm-rmc3"], sla("dlrm-rmc3", "high"),
+                 contention=SKYLAKE_CONTENTION, n_queries=NQ)
+    r_bdw = tune(curves["dlrm-rmc3"], sla("dlrm-rmc3", "high"),
+                 contention=BROADWELL_CONTENTION, n_queries=NQ)
+    emit("fig12c/skylake_opt_batch", r_sky.batch_size, f"qps={r_sky.qps:.0f}")
+    emit("fig12c/broadwell_opt_batch", r_bdw.batch_size,
+         f"qps={r_bdw.qps:.0f};"
+         f"{'PASS' if r_bdw.batch_size >= r_sky.batch_size else 'FAIL'}")
+
+
+if __name__ == "__main__":
+    main()

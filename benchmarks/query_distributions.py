@@ -1,0 +1,38 @@
+"""Paper Fig. 5/6: query-size distribution properties.
+
+Validates: (a) the production distribution has a heavier tail than lognormal;
+(b) the top quartile of queries carries ~half the total work (Fig. 6);
+(c) Poisson arrivals hit the requested rate."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import query_gen as qg
+
+
+def main() -> None:
+    rng = np.random.default_rng(0)
+    prod = qg.PRODUCTION.sample(rng, 500_000)
+    ln = qg.LOGNORMAL.sample(rng, 500_000)
+
+    p75 = np.percentile(prod, 75)
+    share = prod[prod > p75].sum() / prod.sum()
+    emit("fig5/production_mean_size", float(prod.mean()),
+         f"p50={np.percentile(prod,50):.0f};p99={np.percentile(prod,99):.0f};max={prod.max()}")
+    emit("fig5/lognormal_mean_size", float(ln.mean()),
+         f"p99={np.percentile(ln,99):.0f}")
+    emit("fig6/top25pct_work_share", share * 100,
+         f"target~50%:{'PASS' if 0.4 < share < 0.65 else 'FAIL'}")
+    emit("fig5/tail_heavier_than_lognormal",
+         float(np.percentile(prod, 99) / np.percentile(ln, 99)),
+         "PASS" if np.percentile(prod, 99) > 1.5 * np.percentile(ln, 99) else "FAIL")
+
+    qs = qg.generate_queries(rng, 1000.0, 50_000)
+    dur = qs[-1].arrival - qs[0].arrival
+    emit("fig5/poisson_rate_error_pct",
+         abs(50_000 / dur - 1000.0) / 10.0, "arrival-rate check")
+
+
+if __name__ == "__main__":
+    main()

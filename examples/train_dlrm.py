@@ -1,0 +1,69 @@
+"""End-to-end driver: train a ~100M-parameter DLRM-class ranker for a few
+hundred steps with the full production stack — sparse-aware combined
+optimizer, fault-tolerant checkpointing (kill it mid-run and re-launch: it
+resumes), NaN guard, microbatching.
+
+    PYTHONPATH=src python examples/train_dlrm.py [--steps 200]
+"""
+import argparse
+import dataclasses
+
+import jax
+import numpy as np
+
+from repro.configs import get
+from repro.data import synthetic as syn
+from repro.models import recsys
+from repro.train import optim
+from repro.train.loop import train
+from repro.utils import param_count
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=256)
+    ap.add_argument("--ckpt", default="artifacts/ckpt_dlrm")
+    args = ap.parse_args()
+
+    # ~100M params: 10 tables × 300k rows × 32 dims ≈ 96M + dense towers
+    cfg = dataclasses.replace(get("dlrm-rmc1").config, vocab=300_000,
+                              hotness=16)
+    params = recsys.init(jax.random.PRNGKey(0), cfg)
+    n = param_count(params)
+    print(f"model: {cfg.name}  params: {n/1e6:.1f}M")
+
+    rng = np.random.default_rng(0)
+
+    def batches():
+        while True:
+            yield syn.recsys_batch(rng, cfg, args.batch)
+
+    # production recsys optimizer split: adagrad rows / adamw dense
+    opt = optim.combined(lambda path: "table" in str(path),
+                         optim.adagrad(0.02), optim.adamw(1e-3))
+
+    state = train(lambda p, b: recsys.loss_fn(p, cfg, b), opt, params,
+                  batches(), num_steps=args.steps, ckpt_dir=args.ckpt,
+                  ckpt_every=50, log_every=20, clip_norm=10.0)
+
+    eval_batch = syn.recsys_batch(np.random.default_rng(9), cfg, 4096)
+    loss = float(recsys.loss_fn(state.params, cfg, eval_batch))
+    logits = recsys.forward(state.params, cfg, eval_batch)
+    auc_pairs = _auc(np.asarray(logits), np.asarray(eval_batch["label"]))
+    print(f"final eval: loss {loss:.4f}  AUC {auc_pairs:.3f}")
+
+
+def _auc(scores: np.ndarray, labels: np.ndarray) -> float:
+    order = np.argsort(scores)
+    ranks = np.empty_like(order, dtype=np.float64)
+    ranks[order] = np.arange(1, len(scores) + 1)
+    pos = labels > 0.5
+    n_pos, n_neg = pos.sum(), (~pos).sum()
+    if n_pos == 0 or n_neg == 0:
+        return 0.5
+    return float((ranks[pos].sum() - n_pos * (n_pos + 1) / 2) / (n_pos * n_neg))
+
+
+if __name__ == "__main__":
+    main()

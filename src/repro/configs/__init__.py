@@ -1,0 +1,30 @@
+"""Config registry: 10 assigned architectures + 8 DeepRecInfra paper models.
+
+``--arch <id>`` anywhere in the launchers resolves through here.
+"""
+from repro.configs import (  # noqa: F401 — registration side effects
+    autoint,
+    bert4rec,
+    gcn_cora,
+    granite_moe_1b_a400m,
+    mind,
+    paper_models,
+    phi3_mini_3_8b,
+    qwen2_0_5b,
+    qwen3_moe_30b_a3b,
+    xdeepfm,
+    yi_34b,
+)
+from repro.configs.registry import ArchSpec, get, list_archs  # noqa: F401
+from repro.configs.shapes import (  # noqa: F401
+    FULL_ATTENTION_SKIPS,
+    GNN_SHAPES,
+    LM_SHAPES,
+    RECSYS_SHAPES,
+    shapes_for_family,
+)
+
+ASSIGNED_ARCHS = [
+    "granite-moe-1b-a400m", "qwen3-moe-30b-a3b", "qwen2-0.5b", "yi-34b",
+    "phi3-mini-3.8b", "gcn-cora", "mind", "xdeepfm", "autoint", "bert4rec",
+]

@@ -1,0 +1,3 @@
+"""DeepRecSys core: DeepRecInfra (query gen, device models, simulator) and
+DeepRecSched (hill-climbing scheduler)."""
+from repro.core import costs, infra, latency_model, query_gen, scheduler, simulator  # noqa: F401

@@ -1,0 +1,87 @@
+"""DeepRecInfra orchestration (paper Fig. 8): models × SLA targets × query
+patterns → an experiment harness the scheduler plugs into.
+
+The CPU executor curves are *measured* on this host by timing the real JAX
+models at a ladder of batch sizes (cached to an artifact so benchmarks are
+reproducible); the accelerator curves come from the analytic device model
+with GPU/TPU constants.
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import numpy as np
+
+from repro.configs import get
+from repro.configs.paper_models import SLA_TARGETS
+from repro.core import latency_model as lat
+from repro.data import synthetic as syn
+from repro.models import recsys
+
+ARTIFACT_DIR = os.environ.get("REPRO_ARTIFACTS", "artifacts")
+_CURVE_PATH = os.path.join(ARTIFACT_DIR, "cpu_latency_curves.json")
+
+# measured models use mid-size configs (full vocab tables would only slow the
+# gather without changing the latency/batch *shape* on this host)
+_MEASURE_VOCAB = 20_000
+_BATCH_LADDER = (1, 4, 16, 64, 256, 1024)
+
+
+def _measure_cfg(arch: str):
+    import dataclasses
+    cfg = get(arch).config
+    return dataclasses.replace(
+        cfg, vocab=min(cfg.vocab, _MEASURE_VOCAB),
+        item_vocab=min(cfg.item_vocab, _MEASURE_VOCAB) if cfg.item_vocab else 0)
+
+
+@functools.lru_cache(maxsize=None)
+def _jitted_apply(arch: str, batch: int):
+    cfg = _measure_cfg(arch)
+    params = recsys.init(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    batch_data = syn.recsys_batch(rng, cfg, batch, with_label=False)
+    fwd = jax.jit(lambda p, b: recsys.forward(p, cfg, b))
+
+    def run():
+        jax.block_until_ready(fwd(params, batch_data))
+    return run
+
+
+def measure_cpu_curve(arch: str, batches=_BATCH_LADDER, iters: int = 3
+                      ) -> lat.TableDeviceModel:
+    import time
+    secs = []
+    for b in batches:
+        run = _jitted_apply(arch, b)
+        run()                                     # compile + warm
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            run()
+        secs.append((time.perf_counter() - t0) / iters)
+    return lat.TableDeviceModel(np.asarray(batches, float), np.asarray(secs, float))
+
+
+def cpu_curves(archs, *, refresh: bool = False) -> dict[str, lat.TableDeviceModel]:
+    """Measured curves, cached to the artifact file."""
+    curves: dict[str, lat.TableDeviceModel] = {}
+    if os.path.exists(_CURVE_PATH) and not refresh:
+        curves = lat.load_curves(_CURVE_PATH)
+    missing = [a for a in archs if a not in curves]
+    for a in missing:
+        print(f"[infra] measuring CPU latency curve for {a} ...")
+        curves[a] = measure_cpu_curve(a)
+    if missing:
+        os.makedirs(ARTIFACT_DIR, exist_ok=True)
+        lat.save_curves(_CURVE_PATH, curves)
+    return {a: curves[a] for a in archs}
+
+
+def accelerator(arch: str, kind: str = "gpu") -> lat.AnalyticalDeviceModel:
+    return lat.accelerator_model(get(arch).config, kind)
+
+
+def sla_ms(arch: str, tier: str = "medium") -> float:
+    return SLA_TARGETS[arch].get(tier)

@@ -1,0 +1,130 @@
+"""Executor latency models (pluggable ``DeviceModel``).
+
+* ``TableDeviceModel`` — interpolates a *measured* (batch → latency) curve;
+  benchmarks calibrate it by timing the real JAX models on this host.
+* ``AnalyticalDeviceModel`` — roofline-style:
+      latency(B) = overhead + in_bytes(B)/xfer_bw + max(flops(B)/peak,
+                                                        mem_bytes(B)/mem_bw)
+  Instantiated with GPU-class constants it reproduces the paper's Fig. 4/6
+  behavior (fixed transfer cost → only large batches win); with TPU-v5e
+  constants it is the accelerator model used for TPU-native serving.
+
+Contention: CPU executors can take a multiplicative slowdown as a function
+of simultaneously-busy executors — the paper's inclusive-cache Broadwell
+effect (§VI-A "optimizing across hardware platforms").
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Callable, Protocol
+
+import numpy as np
+
+
+class DeviceModel(Protocol):
+    def latency(self, batch: int) -> float: ...
+
+
+@dataclasses.dataclass
+class TableDeviceModel:
+    """Piecewise log-linear interpolation of measured latencies."""
+    batches: np.ndarray            # sorted, >=1
+    seconds: np.ndarray
+
+    def latency(self, batch: int) -> float:
+        b = max(int(batch), 1)
+        lb = np.log(b)
+        lx = np.log(self.batches)
+        ly = np.log(self.seconds)
+        if b <= self.batches[0]:
+            return float(self.seconds[0])
+        if b >= self.batches[-1]:
+            # extrapolate with the final marginal cost per item
+            slope = ((self.seconds[-1] - self.seconds[-2])
+                     / (self.batches[-1] - self.batches[-2]))
+            return float(self.seconds[-1] + slope * (b - self.batches[-1]))
+        return float(np.exp(np.interp(lb, lx, ly)))
+
+    def to_json(self) -> dict:
+        return {"batches": self.batches.tolist(), "seconds": self.seconds.tolist()}
+
+    @classmethod
+    def from_json(cls, d: dict) -> "TableDeviceModel":
+        return cls(np.asarray(d["batches"], float), np.asarray(d["seconds"], float))
+
+
+@dataclasses.dataclass
+class AnalyticalDeviceModel:
+    """Three-term analytic executor."""
+    flops_per_sample: float
+    mem_bytes_per_sample: float
+    in_bytes_per_sample: float
+    peak_flops: float              # /s
+    mem_bw: float                  # B/s
+    xfer_bw: float                 # B/s (PCIe for GPU; host infeed for TPU)
+    overhead_s: float              # kernel launch / RPC / batching overhead
+
+    def latency(self, batch: int) -> float:
+        b = max(int(batch), 1)
+        compute = (b * self.flops_per_sample) / self.peak_flops
+        memory = (b * self.mem_bytes_per_sample) / self.mem_bw
+        xfer = (b * self.in_bytes_per_sample) / self.xfer_bw
+        return self.overhead_s + xfer + max(compute, memory)
+
+
+# hardware-constant presets
+GPU_1080TI = dict(peak_flops=11.3e12, mem_bw=484e9, xfer_bw=12e9,
+                  overhead_s=2.5e-3)
+TPU_V5E = dict(peak_flops=197e12, mem_bw=819e9, xfer_bw=50e9,
+               overhead_s=0.5e-3)
+
+
+def accelerator_model(cfg, kind: str = "gpu") -> AnalyticalDeviceModel:
+    """Build the accelerator model for a recsys config from analytic costs."""
+    from repro.core import costs
+    hw = GPU_1080TI if kind == "gpu" else TPU_V5E
+    return AnalyticalDeviceModel(
+        flops_per_sample=costs.recsys_flops_per_sample(cfg),
+        mem_bytes_per_sample=costs.recsys_embed_bytes_per_sample(cfg),
+        in_bytes_per_sample=costs.recsys_activation_bytes_per_sample(cfg),
+        **hw)
+
+
+@dataclasses.dataclass
+class ContentionModel:
+    """latency multiplier vs #busy executors (inclusive-cache contention)."""
+    factor_at_full: float = 1.0    # 1.0 → no contention (Skylake-like)
+
+    def multiplier(self, busy: int, total: int) -> float:
+        if total <= 1 or self.factor_at_full <= 1.0:
+            return 1.0
+        frac = busy / total
+        return 1.0 + (self.factor_at_full - 1.0) * frac
+
+
+# ---------------------------------------------------------- calibration
+
+
+def measure_curve(apply_fn: Callable[[int], None],
+                  batches=(1, 4, 16, 64, 256, 1024), iters: int = 5) -> TableDeviceModel:
+    """Time ``apply_fn(batch)`` (expected to block) per batch size."""
+    import time
+    secs = []
+    for b in batches:
+        apply_fn(b)                                 # warmup/compile
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            apply_fn(b)
+        secs.append((time.perf_counter() - t0) / iters)
+    return TableDeviceModel(np.asarray(batches, float), np.asarray(secs, float))
+
+
+def save_curves(path: str, curves: dict[str, TableDeviceModel]) -> None:
+    with open(path, "w") as f:
+        json.dump({k: v.to_json() for k, v in curves.items()}, f, indent=1)
+
+
+def load_curves(path: str) -> dict[str, TableDeviceModel]:
+    with open(path) as f:
+        return {k: TableDeviceModel.from_json(v) for k, v in json.load(f).items()}

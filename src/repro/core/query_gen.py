@@ -1,0 +1,112 @@
+"""Real-time query modeling (DeepRecInfra §III-C).
+
+Arrival process
+    Queries for recommendation services arrive Poisson (paper profiling of a
+    production datacenter); fixed and lognormal inter-arrival supported for
+    the ablations prior work assumed.
+
+Working-set (query) size
+    The number of candidate items per query.  The paper's production
+    distribution (Fig. 5) has a *heavier tail* than lognormal: most queries
+    are small, but the top quartile of queries carries ~half the total work,
+    and sizes cap around ~1000 candidates.  We model it as a lognormal body
+    mixed with a Pareto tail, clipped to ``max_size`` — the constants are
+    calibrated so that (a) p75 splits total work ~50/50 and (b) mean size is
+    a few tens (benchmarks/query_distributions.py asserts both).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Query:
+    qid: int
+    arrival: float            # seconds
+    size: int                 # candidate items to score
+
+
+# ------------------------------------------------------------- size dists
+
+
+@dataclasses.dataclass(frozen=True)
+class SizeDist:
+    kind: str                 # fixed | normal | lognormal | production
+    mean: float = 130.0
+    sigma: float = 0.5
+    max_size: int = 1000
+    tail_frac: float = 0.08   # production: mixture weight of the Pareto tail
+    tail_alpha: float = 1.5   # production: Pareto shape (heavy)
+    tail_xm: float = 250.0    # production: Pareto scale
+
+    def sample(self, rng: np.random.Generator, n: int) -> np.ndarray:
+        if self.kind == "fixed":
+            s = np.full(n, self.mean)
+        elif self.kind == "normal":
+            s = rng.normal(self.mean, self.sigma * self.mean / 4, size=n)
+        elif self.kind == "lognormal":
+            mu = np.log(self.mean) - self.sigma ** 2 / 2
+            s = rng.lognormal(mu, self.sigma, size=n)
+        elif self.kind == "production":
+            # lognormal body + Pareto tail, calibrated to paper Fig. 5/6:
+            # top-quartile queries carry ~50% of total work; sizes reach 1000
+            body_mean = self.mean * 0.9
+            mu = np.log(body_mean) - self.sigma ** 2 / 2
+            body = rng.lognormal(mu, self.sigma, size=n)
+            tail = self.tail_xm * (1.0 + rng.pareto(self.tail_alpha, size=n))
+            pick_tail = rng.random(n) < self.tail_frac
+            s = np.where(pick_tail, tail, body)
+        else:
+            raise ValueError(self.kind)
+        return np.clip(np.round(s), 1, self.max_size).astype(np.int64)
+
+
+PRODUCTION = SizeDist("production")
+LOGNORMAL = SizeDist("lognormal")
+
+
+# --------------------------------------------------------------- arrivals
+
+
+@dataclasses.dataclass(frozen=True)
+class ArrivalDist:
+    kind: str = "poisson"     # poisson | fixed | lognormal
+
+    def inter_arrivals(self, rng: np.random.Generator, qps: float,
+                       n: int) -> np.ndarray:
+        mean = 1.0 / qps
+        if self.kind == "poisson":
+            return rng.exponential(mean, size=n)
+        if self.kind == "fixed":
+            return np.full(n, mean)
+        if self.kind == "lognormal":
+            sigma = 0.5
+            mu = np.log(mean) - sigma ** 2 / 2
+            return rng.lognormal(mu, sigma, size=n)
+        raise ValueError(self.kind)
+
+
+def generate_queries(rng: np.random.Generator, qps: float, n: int,
+                     size_dist: SizeDist = PRODUCTION,
+                     arrival: ArrivalDist = ArrivalDist()) -> list[Query]:
+    times = np.cumsum(arrival.inter_arrivals(rng, qps, n))
+    sizes = size_dist.sample(rng, n)
+    return [Query(i, float(t), int(s)) for i, (t, s) in enumerate(zip(times, sizes))]
+
+
+def query_stream(seed: int, qps: float, size_dist: SizeDist = PRODUCTION,
+                 arrival: ArrivalDist = ArrivalDist(),
+                 chunk: int = 1024) -> Iterator[Query]:
+    """Endless stream (for the live serving runtime)."""
+    rng = np.random.default_rng(seed)
+    t0 = 0.0
+    qid = 0
+    while True:
+        qs = generate_queries(rng, qps, chunk, size_dist, arrival)
+        for q in qs:
+            yield Query(qid, q.arrival + t0, q.size)
+            qid += 1
+        t0 += qs[-1].arrival

@@ -1,0 +1,85 @@
+"""DeepRecSched (paper §IV): hill-climbing over the two knobs.
+
+1. per-request batch size — start at 1, climb the pow-2 ladder while the
+   achievable QPS under the p95 SLA improves;
+2. accelerator query-size threshold — start at 1 (everything offloaded),
+   climb while QPS improves.
+
+The static production baseline splits the *largest* query evenly over all
+executors (batch = max_size / n_executors — e.g. 25 on a 40-core Skylake),
+which is what the paper doubles.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+from repro.core.latency_model import ContentionModel, DeviceModel
+from repro.core.query_gen import PRODUCTION, SizeDist
+from repro.core.simulator import SchedulerConfig, max_qps_under_sla
+
+BATCH_LADDER = (1, 2, 4, 8, 16, 32, 64, 128, 256, 512, 1024)
+
+
+@dataclasses.dataclass
+class TuneResult:
+    batch_size: int
+    offload_threshold: int | None
+    qps: float
+    trace: list[tuple]                   # (knob, value, qps) visited
+
+
+def static_baseline(max_size: int, n_executors: int) -> int:
+    return max(1, max_size // n_executors)
+
+
+def tune(cpu: DeviceModel, sla_ms: float, *, accel: DeviceModel | None = None,
+         n_executors: int = 40, size_dist: SizeDist = PRODUCTION,
+         contention: ContentionModel | None = None,
+         batch_ladder: Sequence[int] = BATCH_LADDER,
+         patience: int = 1, n_queries: int = 1500, seed: int = 0) -> TuneResult:
+    """Run DeepRecSched's two hill climbs; returns the tuned config."""
+    trace = []
+
+    def qps_for(batch: int, thr: int | None) -> float:
+        cfg = SchedulerConfig(batch_size=batch, offload_threshold=thr,
+                              n_executors=n_executors)
+        q = max_qps_under_sla(cpu, cfg, sla_ms, accel=accel,
+                              size_dist=size_dist, contention=contention,
+                              n_queries=n_queries, seed=seed)
+        return q
+
+    # ---- knob 1: batch size (CPU path), no offload during this climb
+    best_b, best_q = batch_ladder[0], qps_for(batch_ladder[0], None)
+    trace.append(("batch", best_b, best_q))
+    misses = 0
+    for b in batch_ladder[1:]:
+        q = qps_for(b, None)
+        trace.append(("batch", b, q))
+        if q > best_q:
+            best_b, best_q, misses = b, q, 0
+        else:
+            misses += 1
+            if misses > patience:
+                break
+
+    if accel is None:
+        return TuneResult(best_b, None, best_q, trace)
+
+    # ---- knob 2: offload threshold (paper: start at 1 = all accelerated)
+    thr_ladder = [1, 25, 50, 100, 150, 200, 300, 450, 700, size_dist.max_size + 1]
+    best_t, best_tq = thr_ladder[0], qps_for(best_b, thr_ladder[0])
+    trace.append(("threshold", best_t, best_tq))
+    misses = 0
+    for t in thr_ladder[1:]:
+        q = qps_for(best_b, t)
+        trace.append(("threshold", t, q))
+        if q > best_tq:
+            best_t, best_tq, misses = t, q, 0
+        else:
+            misses += 1
+            if misses > patience:
+                break
+    if best_tq >= best_q:
+        return TuneResult(best_b, best_t, best_tq, trace)
+    return TuneResult(best_b, None, best_q, trace)

@@ -1,0 +1,68 @@
+"""Collective helpers: compute/communication overlap primitives.
+
+``overlapped_all_gather_matmul`` — the TP-MLP hot path.  Instead of
+all-gather(x) → x@W (serializing the ICI transfer before the MXU work), the
+ring variant ppermutes one shard per step and multiplies the resident shard
+while the next one is in flight — the classic Megatron/TPU overlap that the
+XLA "latency hiding scheduler" can then software-pipeline.  Used inside
+shard_map; validated against the unoverlapped reference in tests on a
+multi-device host mesh.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def ring_all_gather(x: jax.Array, axis_name: str) -> jax.Array:
+    """All-gather along ``axis_name`` implemented as an N-step ppermute ring
+    (building block for overlap; semantically == lax.all_gather tiled)."""
+    n = lax.axis_size(axis_name)
+    idx = lax.axis_index(axis_name)
+    perm = [(i, (i + 1) % n) for i in range(n)]
+    chunks = [x]
+    cur = x
+    for _ in range(n - 1):
+        cur = lax.ppermute(cur, axis_name, perm)
+        chunks.append(cur)
+    # chunk j on device i originated at (i - j) mod n; roll into canonical order
+    stacked = jnp.stack(chunks)                       # (n, ...)
+    order = (idx - jnp.arange(n)) % n
+    # scatter chunks to their source positions
+    canon = jnp.zeros_like(stacked)
+    canon = canon.at[order].set(stacked)
+    return canon.reshape((-1,) + x.shape[1:])
+
+
+def overlapped_all_gather_matmul(x_shard: jax.Array, w: jax.Array,
+                                 axis_name: str) -> jax.Array:
+    """Compute all_gather(x, axis) @ w with ring overlap.
+
+    x_shard (Bs, K) is this device's batch shard; w (K, N) is resident.
+    Returns the full (B, N) product (B = Bs × axis size).  Each ring step
+    multiplies the chunk that just arrived while forwarding it onward, so
+    ICI transfer of chunk i+1 hides under the MXU work of chunk i.
+    """
+    n = lax.axis_size(axis_name)
+    idx = lax.axis_index(axis_name)
+    perm = [(i, (i + 1) % n) for i in range(n)]
+    bs = x_shard.shape[0]
+    out = jnp.zeros((bs * n, w.shape[1]), x_shard.dtype)
+
+    cur = x_shard
+    src = idx
+    for _ in range(n):
+        y = cur @ w                                   # MXU work for this chunk
+        out = lax.dynamic_update_slice(out, y, (src * bs, 0))
+        cur = lax.ppermute(cur, axis_name, perm)      # overlaps with next matmul
+        src = (src - 1) % n
+    return out
+
+
+def reduce_scatter_matmul(x: jax.Array, w_shard: jax.Array,
+                          axis_name: str) -> jax.Array:
+    """Row-parallel matmul: x (B, Ks) @ w_shard (Ks, N) → psum_scatter over
+    batch.  The row-sharded half of the Megatron pair."""
+    y = x @ w_shard
+    return lax.psum_scatter(y, axis_name, scatter_dimension=0, tiled=True)

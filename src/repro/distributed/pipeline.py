@@ -1,0 +1,85 @@
+"""GPipe-style pipeline parallelism via shard_map + lax.ppermute.
+
+For very deep LMs (yi-34b, 60L) the alternative to pure TP: stages hold
+L/S contiguous layers; microbatches stream through the stage ring.  The
+schedule is the classic GPipe fill-steady-drain loop — with M microbatches
+and S stages, bubble fraction = (S-1)/(M+S-1).
+
+The stage function is user-supplied (params_stage, x) → x so any layer body
+(dense or MoE) pipelines.  Stage params live stacked on a leading ``pipe``
+axis and are sharded over the mesh's ``pipe`` axis; shard_map gives each
+device its stage's slice.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+
+def gpipe_forward(stage_fn: Callable, stage_params, x_micro: jax.Array,
+                  *, axis_name: str = "pipe"):
+    """Run microbatches through the stage ring.  Called INSIDE shard_map.
+
+    stage_params: this device's stage slice.
+    x_micro (M, mb, ...): all microbatches (replicated view); stage 0 feeds
+    them in order, stage S-1 emits outputs in arrival order.
+    Returns (M, mb, ...) outputs (valid on the last stage; callers psum or
+    ppermute the result home as needed).
+    """
+    s = lax.axis_size(axis_name)
+    sid = lax.axis_index(axis_name)
+    m = x_micro.shape[0]
+    steps = m + s - 1
+    perm = [(i, (i + 1) % s) for i in range(s)]
+
+    mb_shape = x_micro.shape[1:]
+    buf = jnp.zeros(mb_shape, x_micro.dtype)          # stage input register
+    outs = jnp.zeros((m,) + mb_shape, x_micro.dtype)
+
+    def body(t, carry):
+        buf, outs = carry
+        # stage 0 ingests microbatch t (when in range)
+        feed = lax.dynamic_index_in_dim(x_micro, jnp.minimum(t, m - 1), 0,
+                                        keepdims=False)
+        cur = jnp.where(sid == 0, jnp.where(t < m, feed, jnp.zeros_like(feed)), buf)
+        y = stage_fn(stage_params, cur)
+        # last stage records microbatch t-(s-1)
+        out_idx = t - (s - 1)
+        write = (sid == s - 1) & (out_idx >= 0)
+        outs = lax.cond(
+            write,
+            lambda o: lax.dynamic_update_index_in_dim(
+                o, y, jnp.maximum(out_idx, 0), 0),
+            lambda o: o, outs)
+        # forward activations to the next stage
+        buf = lax.ppermute(y, axis_name, perm)
+        return buf, outs
+
+    _, outs = lax.fori_loop(0, steps, body, (buf, outs))
+    return outs
+
+
+def make_pipelined_fn(stage_fn: Callable, mesh, *, num_microbatches: int,
+                      axis_name: str = "pipe"):
+    """Wrap a stage function into a full-model forward over a ``pipe`` mesh
+    axis.  stage_params must carry a leading (S, ...) stage axis."""
+    @partial(jax.shard_map, mesh=mesh,
+             in_specs=(P(axis_name), P()), out_specs=P(),
+             check_vma=False)
+    def fwd(stacked_stage_params, x):
+        my_stage = jax.tree_util.tree_map(lambda a: a[0], stacked_stage_params)
+        mbs = x.reshape((num_microbatches, -1) + x.shape[1:])
+        outs = gpipe_forward(stage_fn, my_stage, mbs, axis_name=axis_name)
+        # only the last stage holds real outputs; broadcast them to all
+        s = lax.axis_size(axis_name)
+        sid = lax.axis_index(axis_name)
+        outs = jnp.where(sid == s - 1, outs, jnp.zeros_like(outs))
+        outs = lax.psum(outs, axis_name)
+        return outs.reshape((-1,) + outs.shape[2:])
+
+    return fwd

@@ -1,0 +1,45 @@
+"""Process-wide toggles.
+
+SCAN_UNROLL — when True, internal lax.scan loops (flash-attention chunks,
+chunked cross-entropy, GRU steps) fully unroll.  The dry-run's roofline
+accounting needs this: XLA's HLO cost analysis counts a while-loop body
+ONCE regardless of trip count (verified empirically), so loops must be
+unrolled for ``cost_analysis()`` to report true FLOPs/bytes.  Execution
+paths leave it False (loops compile faster and run identically).
+"""
+from __future__ import annotations
+
+import contextlib
+
+SCAN_UNROLL = False
+
+# sequence parallelism: when set to a PartitionSpec (e.g. P('data','model',None)),
+# the LM residual stream is constrained to it between layers — prefill's
+# activation all-gathers shrink to the (much narrower) KV gathers.  Set by
+# the cell builder before lowering; None = plain TP.
+SEQ_SPEC = None
+
+# accounting mode also widens flash-attention chunks so the unrolled block
+# count stays compilable at 32k context (totals are chunk-size invariant)
+ACCOUNTING_FLASH_CHUNKS = (2048, 4096)
+
+
+def scan_unroll() -> bool | int:
+    return True if SCAN_UNROLL else 1
+
+
+def flash_chunks(default_q: int, default_kv: int) -> tuple[int, int]:
+    if SCAN_UNROLL:
+        return ACCOUNTING_FLASH_CHUNKS
+    return default_q, default_kv
+
+
+@contextlib.contextmanager
+def unrolled_scans():
+    global SCAN_UNROLL
+    prev = SCAN_UNROLL
+    SCAN_UNROLL = True
+    try:
+        yield
+    finally:
+        SCAN_UNROLL = prev

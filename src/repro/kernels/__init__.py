@@ -1,0 +1,4 @@
+"""Pallas TPU kernels for the perf-critical operators (paper Fig. 3):
+embedding-bag gather-pool, DLRM dot interaction, xDeepFM CIN, flash-decode
+attention.  ``ops`` holds the jit'd public wrappers; ``ref`` the oracles."""
+from repro.kernels import ops, ref  # noqa: F401

@@ -1,0 +1,52 @@
+"""Pallas TPU kernel for one xDeepFM CIN layer.
+
+x⁰ (B, F, D), xᵏ (B, H, D), W (H·F, Hn) → (B, Hn, D):
+    out[b, n, d] = Σ_{h,f} W[h·F+f, n] · xᵏ[b,h,d] · x⁰[b,f,d]
+
+The fusion matters: materializing the outer-product interaction maps
+(B, H·F, D) in HBM is the naive cost (H·F can be 200·39 = 7800 rows per
+sample); the kernel builds each sample's (H·F, TILE_D) block in VMEM and
+immediately contracts it against W on the MXU, so the interaction tensor
+never touches HBM.  Grid: (batch tiles × D tiles); W stays VMEM-resident
+across all steps (Pallas hoists the invariant block).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def cin_layer(x0: jax.Array, xk: jax.Array, w: jax.Array, *, tile_b: int = 8,
+              tile_d: int = 128, interpret: bool = False) -> jax.Array:
+    """→ (B, Hn, D).  B % tile_b == 0, D % tile_d == 0 (ops pads)."""
+    b, f, d = x0.shape
+    h = xk.shape[1]
+    hn = w.shape[1]
+    assert w.shape[0] == h * f
+    assert b % tile_b == 0 and d % tile_d == 0, (b, d)
+
+    def kernel(x0_ref, xk_ref, w_ref, o_ref):
+        x0b = x0_ref[...]                          # (TB, F, TD)
+        xkb = xk_ref[...]                          # (TB, H, TD)
+        wb = w_ref[...]                            # (H*F, Hn)
+        # outer product along fields, kept in VMEM
+        inter = (xkb[:, :, None, :] * x0b[:, None, :, :]).reshape(
+            tile_b, h * f, tile_d)                 # (TB, H*F, TD)
+        out = jax.lax.dot_general(
+            inter, wb, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)    # (TB, TD, Hn)
+        o_ref[...] = jnp.swapaxes(out, 1, 2).astype(o_ref.dtype)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(b // tile_b, d // tile_d),
+        in_specs=[
+            pl.BlockSpec((tile_b, f, tile_d), lambda i, j: (i, 0, j)),
+            pl.BlockSpec((tile_b, h, tile_d), lambda i, j: (i, 0, j)),
+            pl.BlockSpec((h * f, hn), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile_b, hn, tile_d), lambda i, j: (i, 0, j)),
+        out_shape=jax.ShapeDtypeStruct((b, hn, d), x0.dtype),
+        interpret=interpret,
+    )(x0, xk, w)

@@ -1,0 +1,68 @@
+"""Pallas TPU embedding-bag kernel (the paper's dominant operator for
+DLRM-RMC1/2 and DIN — Fig. 3 "embedding dominated").
+
+TPU adaptation of the CPU gather+pool loop: the table lives in HBM and rows
+stream into VMEM one (1, D) block per grid step, selected by the
+scalar-prefetched index array (``PrefetchScalarGridSpec``) — the TPU-native
+replacement for irregular cache-resident gathers.  The grid is
+(bag_tile, hotness, row_in_tile); TPU grids execute sequentially, so pooling
+accumulates in the output VMEM block, which stays resident across all
+(hotness × tile) steps of one bag tile: bytes moved = H rows fetched + 1
+output row written per bag — the streaming minimum.
+
+D is padded to the 128-lane boundary by the wrapper in ``ops.py``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def embedding_bag(table: jax.Array, idx: jax.Array, *, mode: str = "sum",
+                  tile_b: int = 8, interpret: bool = False) -> jax.Array:
+    """table (V, D), idx (B, H) int32 → (B, D) pooled (sum/mean).
+
+    B must be a multiple of ``tile_b`` and D a multiple of 128 (``ops``
+    pads); V is unconstrained (rows stream from HBM).
+    """
+    b, h = idx.shape
+    v, d = table.shape
+    assert b % tile_b == 0, (b, tile_b)
+
+    grid = (b // tile_b, h, tile_b)
+
+    def row_index(bt, hh, i, idx_ref):
+        # dynamic row select from the scalar-prefetched indices
+        return (idx_ref[bt * tile_b + i, hh], 0)
+
+    def out_index(bt, hh, i, idx_ref):
+        return (bt, 0)
+
+    def kernel(idx_ref, row_ref, out_ref):
+        hh = pl.program_id(1)
+        i = pl.program_id(2)
+
+        @pl.when((hh == 0) & (i == 0))
+        def _init():
+            out_ref[...] = jnp.zeros_like(out_ref)
+
+        # accumulate in f32 (the output buffer dtype) — bf16 accumulation
+        # over H rows loses ~2^-8 per step
+        out_ref[i, :] += row_ref[0, :].astype(jnp.float32)
+
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[pl.BlockSpec((1, d), row_index)],
+            out_specs=pl.BlockSpec((tile_b, d), out_index),
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, d), jnp.float32),
+        interpret=interpret,
+    )(idx, table)
+    if mode == "mean":
+        out = out / h
+    return out.astype(table.dtype)

@@ -1,0 +1,87 @@
+"""Pallas TPU flash-decode attention (online softmax over KV tiles).
+
+One new token attends to a KV cache of length T under a per-sequence valid
+length ``pos`` — the serving hot loop for ``decode_32k``.  The classic
+decode problem is memory-bound: the whole KV cache must stream HBM→VMEM
+once; the kernel keeps the (G, D) query block and the running (m, l, acc)
+online-softmax state in VMEM scratch across KV tiles, so nothing but K/V is
+re-read and the output is written once at the final tile.
+
+Layout: q (B, Hkv, G, D) grouped queries, k/v (B, T, Hkv, D); grid
+(B, Hkv, T/tile_t).  ``pos`` is scalar-prefetched for the causal mask.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG = -1e30
+
+
+def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                     pos: jax.Array, *, tile_t: int = 128,
+                     interpret: bool = False) -> jax.Array:
+    """q (B, Hq, D), k/v (B, T, Hkv, D), pos (B,) → (B, Hq, D)."""
+    b, hq, d = q.shape
+    t, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    assert t % tile_t == 0, (t, tile_t)
+    qg = q.reshape(b, hkv, g, d)
+    n_tiles = t // tile_t
+
+    def kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref):
+        bi = pl.program_id(0)
+        ti = pl.program_id(2)
+
+        @pl.when(ti == 0)
+        def _init():
+            m_ref[...] = jnp.full_like(m_ref, _NEG)
+            l_ref[...] = jnp.zeros_like(l_ref)
+            acc_ref[...] = jnp.zeros_like(acc_ref)
+
+        qb = q_ref[0, 0].astype(jnp.float32)              # (G, D)
+        kb = k_ref[0, :, 0].astype(jnp.float32)           # (TT, D)
+        vb = v_ref[0, :, 0].astype(jnp.float32)           # (TT, D)
+        s = jax.lax.dot_general(qb, kb, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        s = s / (d ** 0.5)                                # (G, TT)
+        span = ti * tile_t + jax.lax.broadcasted_iota(jnp.int32, (1, tile_t), 1)
+        valid = span < pos_ref[bi]
+        s = jnp.where(valid, s, _NEG)
+
+        m_prev = m_ref[...]                               # (G, 1)
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)                            # (G, TT)
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, vb, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+        @pl.when(ti == n_tiles - 1)
+        def _finalize():
+            o_ref[0, 0] = (acc_ref[...] / l_ref[...]).astype(o_ref.dtype)
+
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(b, hkv, n_tiles),
+            in_specs=[
+                pl.BlockSpec((1, 1, g, d), lambda bi, hi, ti, pos: (bi, hi, 0, 0)),
+                pl.BlockSpec((1, tile_t, 1, d), lambda bi, hi, ti, pos: (bi, ti, hi, 0)),
+                pl.BlockSpec((1, tile_t, 1, d), lambda bi, hi, ti, pos: (bi, ti, hi, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, g, d), lambda bi, hi, ti, pos: (bi, hi, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((g, 1), jnp.float32),
+                pltpu.VMEM((g, 1), jnp.float32),
+                pltpu.VMEM((g, d), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, hkv, g, d), q.dtype),
+        interpret=interpret,
+    )(pos, qg, k, v)
+    return out.reshape(b, hq, d)

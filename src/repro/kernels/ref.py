@@ -1,0 +1,59 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth
+each kernel's shape/dtype sweep asserts against)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def embedding_bag(table: jax.Array, idx: jax.Array,
+                  weights: jax.Array | None = None, *, mode: str = "sum") -> jax.Array:
+    """table (V, D), idx (B, H) → (B, D)."""
+    rows = jnp.take(table, idx, axis=0)
+    if weights is not None:
+        rows = rows * weights[..., None]
+    out = rows.sum(axis=1)
+    if mode == "mean":
+        out = out / idx.shape[1]
+    return out
+
+
+def tril_pairs(f: int) -> np.ndarray:
+    """Flat indices of the strict lower triangle of an f×f matrix."""
+    li, lj = np.tril_indices(f, k=-1)
+    return (li * f + lj).astype(np.int32)
+
+
+def dot_interaction_packed(feats: jax.Array) -> jax.Array:
+    """feats (B, F, D) → (B, F(F-1)/2) packed pairwise dots."""
+    b, f, _ = feats.shape
+    z = jnp.einsum("bfd,bgd->bfg", feats, feats).reshape(b, f * f)
+    return z[:, tril_pairs(f)]
+
+
+def cin_layer(x0: jax.Array, xk: jax.Array, w: jax.Array) -> jax.Array:
+    """x0 (B, F, D), xk (B, H, D), w (H*F, Hn) → (B, Hn, D)."""
+    b, f, d = x0.shape
+    h = xk.shape[1]
+    inter = jnp.einsum("bhd,bfd->bhfd", xk, x0).reshape(b, h * f, d)
+    return jnp.einsum("bmd,mh->bhd", inter, w)
+
+
+def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                     pos: jax.Array) -> jax.Array:
+    """Grouped decode attention with a position-masked KV cache.
+
+    q (B, Hq, D); k, v (B, T, Hkv, D); pos (B,) valid-length per sequence.
+    → (B, Hq, D)
+    """
+    b, hq, d = q.shape
+    t, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    qg = q.reshape(b, hkv, g, d)
+    logits = jnp.einsum("bhgd,bthd->bhgt", qg, k) / jnp.sqrt(d).astype(q.dtype)
+    mask = (jnp.arange(t)[None] < pos[:, None])[:, None, None]      # (B,1,1,T)
+    logits = jnp.where(mask, logits.astype(jnp.float32), -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bhgt,bthd->bhgd", probs, v)
+    return out.reshape(b, hq, d)

@@ -1,0 +1,36 @@
+"""Production mesh construction.
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches jax device state — the dry-run must set XLA_FLAGS before any jax
+device initialization.
+"""
+from __future__ import annotations
+
+import jax
+
+SINGLE_POD = (16, 16)
+MULTI_POD = (2, 16, 16)
+
+
+def _auto(n: int):
+    return (jax.sharding.AxisType.Auto,) * n
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = MULTI_POD if multi_pod else SINGLE_POD
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+
+
+def make_host_mesh(n_data: int | None = None, n_model: int = 1):
+    """Small mesh over whatever devices exist (tests / local runs)."""
+    n = jax.device_count()
+    n_data = n_data if n_data is not None else n // n_model
+    return jax.make_mesh((n_data, n_model), ("data", "model"),
+                         axis_types=_auto(2))
+
+
+def batch_axes(mesh) -> tuple[str, ...]:
+    """The axes a global batch shards over (pod+data when present)."""
+    names = mesh.axis_names
+    return tuple(a for a in ("pod", "data") if a in names)

@@ -1,0 +1,63 @@
+"""Serving launcher: DeepRecSched over DeepRecInfra for one model.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch dlrm-rmc1 --tier medium
+    PYTHONPATH=src python -m repro.launch.serve --arch wnd --accel gpu
+
+Measures this host's latency curve for the model (cached artifact), runs the
+hill-climbing tuner against the discrete-event tier, and prints the
+static-vs-tuned capacity with the tuned operating point validated under
+production faults.
+"""
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+from repro.configs.paper_models import SLA_TARGETS
+from repro.core import infra
+from repro.core.query_gen import generate_queries
+from repro.core.scheduler import static_baseline, tune
+from repro.core.simulator import (FaultConfig, SchedulerConfig,
+                                  max_qps_under_sla, simulate)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="dlrm-rmc1")
+    ap.add_argument("--tier", default="medium", choices=["low", "medium", "high"])
+    ap.add_argument("--accel", default=None, choices=[None, "gpu", "tpu"])
+    ap.add_argument("--executors", type=int, default=40)
+    args = ap.parse_args()
+
+    cpu = infra.cpu_curves([args.arch])[args.arch]
+    sla_ms = SLA_TARGETS[args.arch].get(args.tier)
+    accel = infra.accelerator(args.arch, args.accel) if args.accel else None
+
+    b0 = static_baseline(1000, args.executors)
+    q0 = max_qps_under_sla(cpu, SchedulerConfig(batch_size=b0,
+                                                n_executors=args.executors),
+                           sla_ms, n_queries=800, iters=7)
+    r = tune(cpu, sla_ms, accel=accel, n_executors=args.executors,
+             n_queries=800)
+    print(f"[serve] {args.arch} @ {args.tier} (p95 ≤ {sla_ms:.0f} ms)")
+    print(f"  static  B={b0:<5d}              → {q0:8.0f} QPS")
+    print(f"  tuned   B={r.batch_size:<5d} thr={str(r.offload_threshold):<6s}"
+          f" → {r.qps:8.0f} QPS  ({r.qps / max(q0, 1e-9):.2f}×)")
+
+    qs = generate_queries(np.random.default_rng(0), 0.7 * r.qps, 3000)
+    sim = simulate(qs, cpu,
+                   SchedulerConfig(batch_size=r.batch_size,
+                                   offload_threshold=r.offload_threshold,
+                                   n_executors=args.executors),
+                   accel=accel,
+                   faults=FaultConfig(straggler_frac=0.02, straggler_mult=4.0,
+                                      hedge_factor=3.0, fail_times=(2.0,)))
+    status = "OK" if sim.p95_ms <= sla_ms else "VIOLATED"
+    print(f"  @70% load w/ faults: p95 {sim.p95_ms:.1f} ms ({status}); "
+          f"hedges={sim.hedges} requeued={sim.requeued} "
+          f"accel_work={sim.accel_frac_work:.0%}")
+
+
+if __name__ == "__main__":
+    main()

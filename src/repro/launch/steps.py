@@ -1,0 +1,367 @@
+"""Cell programs: for every (arch × shape) pair, the step function to lower,
+its ShapeDtypeStruct arguments, and the in/out sharding trees.
+
+A *cell* is what the dry-run compiles: train_step for training shapes,
+serve_step (forward / prefill / decode / retrieval scoring) for inference
+shapes — per the assignment, ``decode_*`` lowers one new token against a
+full KV cache, NOT train_step.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import FULL_ATTENTION_SKIPS, get, shapes_for_family
+from repro.configs.shapes import GNNShape, LMShape, RecShape
+from repro.core import costs
+from repro.data import synthetic as syn
+from repro.distributed import sharding as shd
+from repro.launch.mesh import batch_axes
+from repro.layers import moe as moe_lib
+from repro.models import gnn, lm, recsys
+from repro.train import optim
+from repro.train.microbatch import accumulated_grads
+
+Spec = jax.ShapeDtypeStruct
+
+
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    shape: str
+    kind: str                        # train | serve | prefill | decode | retrieval
+    fn: Callable                     # positional-args step function
+    args: tuple                      # ShapeDtypeStruct pytrees
+    in_shardings: tuple
+    out_shardings: Any               # tree or None (infer)
+    model_flops: float               # 6·N·D / 2·N·D convention (§Roofline)
+    note: str = ""
+
+    @property
+    def name(self) -> str:
+        return f"{self.arch}×{self.shape}"
+
+
+class SkippedCell(Exception):
+    pass
+
+
+def _shardings(mesh, pspecs):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), pspecs,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def _opt_pspecs(opt_kind: str, param_pspecs):
+    """Optimizer-state pspec tree matching repro.train.optim layouts."""
+    if opt_kind == "adamw":
+        return {"mu": param_pspecs, "nu": param_pspecs, "count": P()}
+    if opt_kind == "adagrad":
+        return param_pspecs
+    if opt_kind == "combined":          # {sparse: adagrad, dense: adamw}
+        return {"sparse": param_pspecs,
+                "dense": {"mu": param_pspecs, "nu": param_pspecs, "count": P()}}
+    raise ValueError(opt_kind)
+
+
+def _zero1_pspecs(param_pspecs, params_shape, data_axis: str = "data",
+                  data_size: int = 16):
+    """ZeRO-1: shard optimizer moments over `data` too — put the axis on the
+    first spec-free dim whose size divides (Adam f32 state is 4× the bf16
+    weights; TP-only sharding of it cannot fit a 16 GB v5e for ≥30B models)."""
+    def one(spec, leaf):
+        if leaf.ndim == 0 or data_axis in tuple(spec):
+            return spec
+        dims = list(tuple(spec) + (None,) * (leaf.ndim - len(tuple(spec))))
+        for i, (d, sz) in enumerate(zip(dims, leaf.shape)):
+            if d is None and sz % data_size == 0 and sz >= data_size:
+                dims[i] = data_axis
+                return P(*dims)
+        return spec
+    return jax.tree_util.tree_map(one, param_pspecs, params_shape,
+                                  is_leaf=lambda x: isinstance(x, P))
+
+
+def _eval_shape_tree(fn, *args):
+    return jax.eval_shape(fn, *args)
+
+
+# ------------------------------------------------------------------- LM
+
+
+def _lm_cell(arch: str, shape: LMShape, mesh, *, smoke: bool = False,
+             fsdp: bool = False, layers_override: int | None = None) -> Cell:
+    spec = get(arch)
+    cfg = spec.smoke_config if smoke else spec.config
+    if layers_override is not None:
+        # roofline accounting builds L∈{1,2} unrolled variants and
+        # extrapolates (XLA cost analysis counts while-loop bodies once)
+        cfg = dataclasses.replace(cfg, n_layers=layers_override,
+                                  scan_layers=False)
+    if shape.name in FULL_ATTENTION_SKIPS:
+        raise SkippedCell(
+            f"{arch}×{shape.name}: pure full-attention arch; 524k decode "
+            "needs sub-quadratic attention (DESIGN.md §Arch-applicability)")
+    # Optimizer state is always ZeRO-1-sharded (see _zero1_pspecs); full
+    # FSDP (fsdp=True) remains available but is NOT the default — under
+    # scanned layers XLA keeps the gathered stacks live (measured 175 GiB/dev
+    # for yi-34b), so TP+ZeRO-1 is the production posture here.
+    baxes = batch_axes(mesh)
+    params_shape = _eval_shape_tree(lambda: lm.init(jax.random.PRNGKey(0), cfg))
+    p_pspecs = shd.lm_param_pspecs(params_shape, scan_layers=cfg.scan_layers,
+                                   fsdp=fsdp,
+                                   model_axis_size=mesh.shape["model"])
+    p_sh = _shardings(mesh, p_pspecs)
+    psh_tree = jax.tree_util.tree_map(
+        lambda s, sh: Spec(s.shape, s.dtype, sharding=sh), params_shape, p_sh)
+
+    # MoE layers dispatch locally per data shard (shard_map TP+EP hybrid) —
+    # global-sort dispatch under plain pjit costs 100×+ in collectives
+    moe_fn = (moe_lib.make_sharded_moe(mesh, top_k=cfg.top_k,
+                                       batch_axes=baxes)
+              if cfg.is_moe else None)
+
+    if shape.kind == "train":
+        opt = optim.adamw(3e-4)
+        opt_shape = _eval_shape_tree(opt.init, params_shape)
+        moments = _zero1_pspecs(p_pspecs, params_shape,
+                                data_size=mesh.shape["data"])
+        o_pspecs = {"mu": moments, "nu": moments, "count": P()}
+        o_sh = _shardings(mesh, o_pspecs)
+        batch_specs = syn.lm_specs(cfg, shape.global_batch, shape.seq_len)
+        b_pspecs = shd.lm_batch_pspecs(batch_specs, baxes)
+        b_sh = _shardings(mesh, b_pspecs)
+        # microbatch ladder: activation memory ∝ tokens/microbatch
+        n_micro = 8 if cfg.param_count > 2e10 else (
+            4 if cfg.param_count > 2e9 else 1)
+
+        def train_step(params, opt_state, batch):
+            loss, grads = accumulated_grads(
+                lambda p, b: lm.loss_fn(p, cfg, b, moe_fn=moe_fn),
+                params, batch, n_micro)
+            new_p, new_o = opt.update(grads, opt_state, params)
+            return new_p, new_o, loss
+
+        tokens = shape.global_batch * shape.seq_len
+        return Cell(arch, shape.name, "train", train_step,
+                    (params_shape, opt_shape, batch_specs),
+                    (p_sh, o_sh, b_sh),
+                    (p_sh, o_sh, NamedSharding(mesh, P())),
+                    costs.lm_model_flops(cfg, tokens, train=True),
+                    note=f"microbatches={n_micro}")
+
+    if shape.kind == "prefill":
+        batch_specs = syn.lm_specs(cfg, shape.global_batch, shape.seq_len)
+        tok = batch_specs["tokens"]
+        b_sh = _shardings(mesh, shd.lm_batch_pspecs({"tokens": tok}, baxes))
+
+        def prefill_step(params, tokens):
+            return lm.prefill(params, cfg, tokens, shape.seq_len, moe_fn=moe_fn)
+
+        tokens = shape.global_batch * shape.seq_len
+        return Cell(arch, shape.name, "prefill", prefill_step,
+                    (params_shape, {"tokens": tok}["tokens"]),
+                    (p_sh, b_sh["tokens"]), None,
+                    costs.lm_model_flops(cfg, tokens, train=False))
+
+    # decode: one token, full KV cache of seq_len
+    tok_spec, cache_specs = syn.decode_specs(cfg, shape.global_batch, shape.seq_len)
+    c_pspecs = shd.lm_cache_pspecs(cache_specs, baxes,
+                                   model_axis_size=mesh.shape["model"])
+    c_sh = _shardings(mesh, c_pspecs)
+    t_sh = NamedSharding(mesh, P(baxes if len(baxes) > 1 else baxes[0]))
+
+    def decode(params, token, caches):
+        return lm.decode_step(params, cfg, token, caches, moe_fn=moe_fn)
+
+    # per-token decode touches all active params once
+    flops = costs.lm_flops_per_token(cfg, train=False) * shape.global_batch
+    return Cell(arch, shape.name, "decode", decode,
+                (params_shape, tok_spec, cache_specs),
+                (p_sh, t_sh, c_sh), None, flops,
+                note=f"KV cache len {shape.seq_len}")
+
+
+# --------------------------------------------------------------- recsys
+
+
+def _recsys_cell(arch: str, shape: RecShape, mesh, *, smoke: bool = False) -> Cell:
+    spec = get(arch)
+    cfg = spec.smoke_config if smoke else spec.config
+    baxes = batch_axes(mesh)
+    params_shape = _eval_shape_tree(lambda: recsys.init(jax.random.PRNGKey(0), cfg))
+    p_pspecs = shd.recsys_param_pspecs(params_shape,
+                                       model_axis_size=mesh.shape["model"])
+    p_sh = _shardings(mesh, p_pspecs)
+    per_sample = costs.recsys_flops_per_sample(cfg)
+
+    if shape.kind == "train":
+        opt = optim.combined(lambda path: "table" in str(path),
+                             optim.adagrad(0.01), optim.adamw(1e-3))
+        opt_shape = _eval_shape_tree(opt.init, params_shape)
+        o_sh = _shardings(mesh, _opt_pspecs("combined", p_pspecs))
+        batch_specs = syn.recsys_specs(cfg, shape.batch)
+        b_sh = _shardings(mesh, shd.recsys_batch_pspecs(batch_specs, baxes))
+
+        def train_step(params, opt_state, batch):
+            loss, grads = jax.value_and_grad(
+                lambda p: recsys.loss_fn(p, cfg, batch))(params)
+            new_p, new_o = opt.update(grads, opt_state, params)
+            return new_p, new_o, loss
+
+        return Cell(arch, shape.name, "train", train_step,
+                    (params_shape, opt_shape, batch_specs),
+                    (p_sh, o_sh, b_sh),
+                    (p_sh, o_sh, NamedSharding(mesh, P())),
+                    3 * per_sample * shape.batch)
+
+    if shape.kind == "retrieval":
+        n_cand = shape.n_candidates
+        batch_specs = syn.recsys_specs(cfg, shape.batch, n_candidates=n_cand,
+                                       with_label=False)
+        if cfg.interaction in ("mind", "bidir-seq"):
+            fn = lambda params, batch: recsys.score_candidates(params, cfg, batch)
+            flops = per_sample * shape.batch + 2 * cfg.embed_dim * n_cand
+        else:
+            # CTR rankers: bulk-score 10⁶ candidate rows (chunked batched
+            # forward — never a loop over candidates)
+            batch_specs = syn.recsys_specs(cfg, n_cand, with_label=False)
+            fn = lambda params, batch: recsys.bulk_forward(params, cfg, batch)
+            flops = per_sample * n_cand
+        b_sh = _shardings(mesh, shd.recsys_batch_pspecs(batch_specs, baxes))
+        return Cell(arch, shape.name, "retrieval", fn,
+                    (params_shape, batch_specs), (p_sh, b_sh), None, flops)
+
+    # serve (p99 / bulk)
+    batch_specs = syn.recsys_specs(cfg, shape.batch, with_label=False)
+    b_sh = _shardings(mesh, shd.recsys_batch_pspecs(batch_specs, baxes))
+    fn = lambda params, batch: recsys.bulk_forward(params, cfg, batch)
+    return Cell(arch, shape.name, "serve", fn,
+                (params_shape, batch_specs), (p_sh, b_sh), None,
+                per_sample * shape.batch)
+
+
+# ------------------------------------------------------------------ GNN
+
+
+def _pad_up(n: int, mult: int = 512) -> int:
+    return ((n + mult - 1) // mult) * mult
+
+
+def _gnn_cell(arch: str, shape: GNNShape, mesh, *, smoke: bool = False) -> Cell:
+    from repro.configs.gcn_cora import config_for_shape
+    spec = get(arch)
+    cfg = spec.smoke_config if smoke else config_for_shape(shape)
+    baxes = batch_axes(mesh)
+    opt = optim.adamw(1e-2)
+
+    if shape.kind == "full":
+        params_shape = _eval_shape_tree(lambda: gnn.init(jax.random.PRNGKey(0), cfg))
+        p_sh = _shardings(mesh, shd.gnn_param_pspecs(params_shape))
+        opt_shape = _eval_shape_tree(opt.init, params_shape)
+        o_sh = _shardings(mesh, _opt_pspecs("adamw", shd.gnn_param_pspecs(params_shape)))
+        # pad node/edge counts to the mesh batch axes (self-loop padding rows
+        # — explicit input shardings need divisible leading dims)
+        batch_specs = syn.gnn_full_specs(cfg, _pad_up(shape.n_nodes),
+                                         _pad_up(shape.n_edges))
+        b_sh = _shardings(mesh, shd.gnn_batch_pspecs(batch_specs, baxes))
+
+        def train_step(params, opt_state, batch):
+            loss, grads = jax.value_and_grad(
+                lambda p: gnn.loss_fn(p, cfg, batch))(params)
+            new_p, new_o = opt.update(grads, opt_state, params)
+            return new_p, new_o, loss
+
+        return Cell(arch, shape.name, "train", train_step,
+                    (params_shape, opt_shape, batch_specs),
+                    (p_sh, o_sh, b_sh),
+                    (p_sh, o_sh, NamedSharding(mesh, P())),
+                    3 * costs.gcn_flops(cfg, shape.n_nodes, shape.n_edges))
+
+    if shape.kind == "minibatch":
+        params_shape = _eval_shape_tree(lambda: gnn.init(jax.random.PRNGKey(0), cfg))
+        p_sh = _shardings(mesh, shd.gnn_param_pspecs(params_shape))
+        opt_shape = _eval_shape_tree(opt.init, params_shape)
+        o_sh = _shardings(mesh, _opt_pspecs("adamw", shd.gnn_param_pspecs(params_shape)))
+        x_spec, blocks = syn.minibatch_block_specs(cfg, shape.batch_nodes,
+                                                   shape.fanouts)
+        ei_specs = tuple(b[0] for b in blocks)
+        sizes = tuple((b[1], b[2]) for b in blocks)
+        lbl_spec = Spec((shape.batch_nodes,), jnp.int32)
+        bx = baxes if len(baxes) > 1 else baxes[0]
+        x_sh = NamedSharding(mesh, P(bx, None))
+        ei_sh = tuple(NamedSharding(mesh, P(None, bx)) for _ in ei_specs)
+        l_sh = NamedSharding(mesh, P(bx))
+
+        def train_step(params, opt_state, x_input, eis, labels):
+            def loss_f(p):
+                blks = [(ei, n_src, n_dst)
+                        for ei, (n_src, n_dst) in zip(eis, sizes)]
+                logits = gnn.forward_blocks(p, cfg, x_input, blks).astype(jnp.float32)
+                logp = jax.nn.log_softmax(logits, axis=-1)
+                return -jnp.take_along_axis(logp, labels[:, None], axis=-1).mean()
+            loss, grads = jax.value_and_grad(loss_f)(params)
+            new_p, new_o = opt.update(grads, opt_state, params)
+            return new_p, new_o, loss
+
+        n_edges_tot = sum(e.shape[1] for e in ei_specs)
+        return Cell(arch, shape.name, "train", train_step,
+                    (params_shape, opt_shape, x_spec, ei_specs, lbl_spec),
+                    (p_sh, o_sh, x_sh, ei_sh, l_sh),
+                    (p_sh, o_sh, NamedSharding(mesh, P())),
+                    3 * costs.gcn_flops(cfg, x_spec.shape[0], n_edges_tot),
+                    note=f"sampled fanout {shape.fanouts}")
+
+    # batched small graphs
+    params_shape = _eval_shape_tree(lambda: gnn.init(jax.random.PRNGKey(0), cfg))
+    p_sh = _shardings(mesh, shd.gnn_param_pspecs(params_shape))
+    opt_shape = _eval_shape_tree(opt.init, params_shape)
+    o_sh = _shardings(mesh, _opt_pspecs("adamw", shd.gnn_param_pspecs(params_shape)))
+    batch_specs = syn.molecule_specs(cfg, shape.batch, shape.nodes_per_graph,
+                                     shape.edges_per_graph)
+    b_sh = _shardings(mesh, shd.gnn_batch_pspecs(batch_specs, baxes))
+
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: gnn.graph_loss_fn(p, cfg, batch))(params)
+        new_p, new_o = opt.update(grads, opt_state, params)
+        return new_p, new_o, loss
+
+    per_graph = costs.gcn_flops(cfg, shape.nodes_per_graph, shape.edges_per_graph)
+    return Cell(arch, shape.name, "train", train_step,
+                (params_shape, opt_shape, batch_specs),
+                (p_sh, o_sh, b_sh),
+                (p_sh, o_sh, NamedSharding(mesh, P())),
+                3 * per_graph * shape.batch)
+
+
+# ---------------------------------------------------------------- public
+
+
+def build_cell(arch: str, shape_name: str, mesh, *, smoke: bool = False,
+               fsdp: bool = False, layers_override: int | None = None) -> Cell:
+    spec = get(arch)
+    shape = shapes_for_family(spec.family)[shape_name]
+    if spec.family == "lm":
+        return _lm_cell(arch, shape, mesh, smoke=smoke, fsdp=fsdp,
+                        layers_override=layers_override)
+    if spec.family == "recsys":
+        return _recsys_cell(arch, shape, mesh, smoke=smoke)
+    if spec.family == "gnn":
+        return _gnn_cell(arch, shape, mesh, smoke=smoke)
+    raise ValueError(spec.family)
+
+
+def all_cells() -> list[tuple[str, str]]:
+    """The 40 assigned (arch × shape) pairs, in registry order."""
+    from repro.configs import ASSIGNED_ARCHS
+    out = []
+    for arch in ASSIGNED_ARCHS:
+        fam = get(arch).family
+        for shape_name in shapes_for_family(fam):
+            out.append((arch, shape_name))
+    return out

@@ -1,0 +1,68 @@
+"""Generic training launcher: ``--arch <id>`` from the registry.
+
+    PYTHONPATH=src python -m repro.launch.train --arch xdeepfm --steps 100
+    PYTHONPATH=src python -m repro.launch.train --arch qwen2-0.5b --smoke
+
+Runs on the host devices (CPU here; the same step functions lower to the
+production meshes via launch.dryrun).  Smoke configs by default so the
+launcher is usable in-container; ``--full`` uses the published config.
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import numpy as np
+
+from repro.configs import get
+from repro.data import synthetic as syn
+from repro.models import gnn, lm, recsys
+from repro.train import optim
+from repro.train.loop import train
+from repro.utils import param_count
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=32)
+    ap.add_argument("--seq", type=int, default=64, help="LM sequence length")
+    ap.add_argument("--full", action="store_true",
+                    help="published config (needs real accelerators)")
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--microbatches", type=int, default=1)
+    args = ap.parse_args()
+
+    spec = get(args.arch)
+    cfg = spec.config if args.full else spec.smoke_config
+    rng = np.random.default_rng(0)
+    key = jax.random.PRNGKey(0)
+
+    if spec.family == "recsys":
+        params = recsys.init(key, cfg)
+        loss_fn = lambda p, b: recsys.loss_fn(p, cfg, b)
+        batches = iter(lambda: syn.recsys_batch(rng, cfg, args.batch), None)
+        opt = optim.combined(lambda path: "table" in str(path),
+                             optim.adagrad(0.02), optim.adamw(1e-3))
+    elif spec.family == "lm":
+        params = lm.init(key, cfg)
+        loss_fn = lambda p, b: lm.loss_fn(p, cfg, b)
+        batches = iter(lambda: syn.lm_batch(rng, cfg, args.batch, args.seq), None)
+        opt = optim.adamw(3e-4)
+    else:
+        params = gnn.init(key, cfg)
+        g = syn.random_graph(rng, 400, 3200, cfg.d_feat, cfg.n_classes)
+        loss_fn = lambda p, b: gnn.loss_fn(p, cfg, b)
+        batches = iter(lambda: g, None)
+        opt = optim.adamw(1e-2)
+
+    print(f"[train] {args.arch} ({spec.family}) params={param_count(params)/1e6:.2f}M")
+    state = train(loss_fn, opt, params, batches, num_steps=args.steps,
+                  ckpt_dir=args.ckpt, log_every=max(args.steps // 10, 1),
+                  num_microbatches=args.microbatches, clip_norm=10.0)
+    print(f"[train] done at step {state.step}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+from repro.layers import attention, embedding, interactions, mlp, moe, norms, rnn  # noqa: F401

@@ -1,0 +1,184 @@
+"""Multi-head / grouped-query attention with RoPE and a decode KV cache.
+
+Used by the LM architectures (qwen2/qwen3-moe/yi/phi3/granite — all GQA) and,
+without RoPE/causality, by AutoInt and BERT4Rec field/sequence attention.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro import flags
+from repro.layers.mlp import init_linear, linear
+
+NEG_INF = -1e9  # large-negative that is bf16-safe
+
+
+def init_attention(rng, d_model: int, n_heads: int, n_kv_heads: int,
+                   head_dim: int, *, qkv_bias: bool = False, dtype=jnp.float32):
+    rq, rk, rv, ro = jax.random.split(rng, 4)
+    return {
+        "wq": init_linear(rq, d_model, n_heads * head_dim, bias=qkv_bias, dtype=dtype),
+        "wk": init_linear(rk, d_model, n_kv_heads * head_dim, bias=qkv_bias, dtype=dtype),
+        "wv": init_linear(rv, d_model, n_kv_heads * head_dim, bias=qkv_bias, dtype=dtype),
+        "wo": init_linear(ro, n_heads * head_dim, d_model, bias=False, dtype=dtype),
+    }
+
+
+# -------------------------------------------------------------------- RoPE
+
+
+def rope_freqs(head_dim: int, *, base: float = 10000.0) -> jax.Array:
+    return 1.0 / (base ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, freqs: jax.Array) -> jax.Array:
+    """x (B, S, H, D), positions (B, S) or (S,) → rotated x."""
+    angles = positions[..., None].astype(jnp.float32) * freqs       # (B?, S, D/2)
+    if angles.ndim == 2:                                            # (S, D/2)
+        angles = angles[None]
+    cos, sin = jnp.cos(angles)[:, :, None, :], jnp.sin(angles)[:, :, None, :]
+    x1, x2 = x[..., 0::2], x[..., 1::2]
+    xr1 = x1 * cos - x2 * sin
+    xr2 = x1 * sin + x2 * cos
+    out = jnp.stack([xr1, xr2], axis=-1).reshape(x.shape)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------- full attn
+
+
+def flash_sdpa(q, k, v, *, causal: bool = True, q_chunk: int = 256,
+               kv_chunk: int = 512) -> jax.Array:
+    """Pure-JAX flash attention: outer scan over query chunks, inner scan
+    over KV chunks with online softmax — peak logits memory is
+    (B, Hkv, G, q_chunk, kv_chunk) instead of (…, S, T).  The XLA execution
+    path for long sequences (the Pallas kernel covers decode on real TPU).
+    """
+    b, s, hq, d = q.shape
+    t, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    q_chunk, kv_chunk = flags.flash_chunks(q_chunk, kv_chunk)
+    qc = min(q_chunk, s)
+    kc = min(kv_chunk, t)
+    assert s % qc == 0 and t % kc == 0, (s, t, qc, kc)
+    nq, nk = s // qc, t // kc
+    scale = 1.0 / d ** 0.5
+
+    qr = q.reshape(b, nq, qc, hkv, g, d).transpose(1, 0, 3, 4, 2, 5)
+    kr = k.reshape(b, nk, kc, hkv, d).transpose(1, 0, 3, 2, 4)
+    vr = v.reshape(b, nk, kc, hkv, d).transpose(1, 0, 3, 2, 4)
+    q_off = jnp.arange(qc)
+    k_off = jnp.arange(kc)
+
+    def q_body(_, qin):
+        qi, iq = qin                                   # (b,hkv,g,qc,d), scalar
+
+        @jax.checkpoint
+        def kv_body(carry, kin):
+            m, l, acc = carry
+            kj, vj, jk = kin
+            sij = jnp.einsum("bhgqd,bhkd->bhgqk", qi, kj).astype(jnp.float32)
+            sij = sij * scale
+            if causal:
+                valid = (iq * qc + q_off)[:, None] >= (jk * kc + k_off)[None, :]
+                sij = jnp.where(valid[None, None, None], sij, NEG_INF)
+            m_new = jnp.maximum(m, sij.max(-1))
+            p = jnp.exp(sij - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l_new = l * alpha + p.sum(-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bhgqk,bhkd->bhgqd", p.astype(v.dtype), vj).astype(jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        init = (jnp.full((b, hkv, g, qc), NEG_INF, jnp.float32),
+                jnp.zeros((b, hkv, g, qc), jnp.float32),
+                jnp.zeros((b, hkv, g, qc, d), jnp.float32))
+        (m, l, acc), _ = jax.lax.scan(kv_body, init, (kr, vr, jnp.arange(nk)),
+                                      unroll=flags.scan_unroll())
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return None, out.astype(q.dtype)               # (b,hkv,g,qc,d)
+
+    # checkpoint both scan bodies: backward recomputes each chunk's score
+    # matrix instead of stacking nq×nk of them (the difference between
+    # ~0.2 GiB and ~30 GiB of temps at 4k train — see EXPERIMENTS.md §Perf)
+    q_body = jax.checkpoint(q_body)
+    _, outs = jax.lax.scan(q_body, None, (qr, jnp.arange(nq)),
+                           unroll=flags.scan_unroll())
+    # (nq, b, hkv, g, qc, d) → (b, s, hq, d)
+    return outs.transpose(1, 0, 4, 2, 3, 5).reshape(b, s, hq, d)
+
+
+# above this many score elements per head, _sdpa switches to the flash path
+_FLASH_THRESHOLD = 2048 * 2048
+
+
+def _sdpa(q, k, v, mask, *, attn_fn=None, causal_hint: bool = False):
+    """q (B,S,Hq,D), k/v (B,T,Hkv,D) grouped; mask broadcastable (B,1,S,T)."""
+    b, s, hq, d = q.shape
+    hkv = k.shape[2]
+    group = hq // hkv
+    if attn_fn is not None:
+        return attn_fn(q, k, v, mask)
+    if causal_hint and s == k.shape[1] and s * s > _FLASH_THRESHOLD:
+        return flash_sdpa(q, k, v, causal=True)
+    qg = q.reshape(b, s, hkv, group, d)
+    logits = jnp.einsum("bshgd,bthd->bhgst", qg, k) / jnp.sqrt(d).astype(q.dtype)
+    if mask is not None:
+        logits = jnp.where(mask[:, :, None] if mask.ndim == 4 else mask, logits, NEG_INF)
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1).astype(q.dtype)
+    out = jnp.einsum("bhgst,bthd->bshgd", probs, v)
+    return out.reshape(b, s, hq, d)
+
+
+def attention(params, x: jax.Array, *, n_heads: int, n_kv_heads: int,
+              head_dim: int, causal: bool = True, positions=None,
+              freqs=None, attn_fn=None) -> jax.Array:
+    b, s, _ = x.shape
+    q = linear(params["wq"], x).reshape(b, s, n_heads, head_dim)
+    k = linear(params["wk"], x).reshape(b, s, n_kv_heads, head_dim)
+    v = linear(params["wv"], x).reshape(b, s, n_kv_heads, head_dim)
+    if freqs is not None:
+        pos = positions if positions is not None else jnp.arange(s)
+        q, k = apply_rope(q, pos, freqs), apply_rope(k, pos, freqs)
+    mask = None
+    if causal and s * s <= _FLASH_THRESHOLD:
+        mask = jnp.tril(jnp.ones((s, s), bool))[None, None]          # (1,1,S,S)
+    out = _sdpa(q, k, v, mask, attn_fn=attn_fn, causal_hint=causal)
+    return linear(params["wo"], out.reshape(b, s, n_heads * head_dim))
+
+
+# ------------------------------------------------------------------- decode
+
+
+def init_kv_cache(batch: int, max_len: int, n_kv_heads: int, head_dim: int,
+                  *, dtype=jnp.float32):
+    shape = (batch, max_len, n_kv_heads, head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype),
+            "pos": jnp.zeros((batch,), jnp.int32)}
+
+
+def decode_attention(params, x: jax.Array, cache: dict, *, n_heads: int,
+                     n_kv_heads: int, head_dim: int, freqs=None,
+                     attn_fn=None):
+    """One-token decode.  x (B, 1, d_model); cache holds (B, T, Hkv, D).
+
+    Returns (output (B, 1, d_model), updated cache).  The KV write is an
+    in-place dynamic-update at each sequence's current position.
+    """
+    b = x.shape[0]
+    q = linear(params["wq"], x).reshape(b, 1, n_heads, head_dim)
+    k = linear(params["wk"], x).reshape(b, 1, n_kv_heads, head_dim)
+    v = linear(params["wv"], x).reshape(b, 1, n_kv_heads, head_dim)
+    pos = cache["pos"]                                              # (B,)
+    if freqs is not None:
+        q = apply_rope(q, pos[:, None], freqs)
+        k = apply_rope(k, pos[:, None], freqs)
+    bidx = jnp.arange(b)
+    new_k = cache["k"].at[bidx, pos].set(k[:, 0])
+    new_v = cache["v"].at[bidx, pos].set(v[:, 0])
+    t = cache["k"].shape[1]
+    mask = (jnp.arange(t)[None] <= pos[:, None])[:, None, None]      # (B,1,1,T)
+    out = _sdpa(q, new_k, new_v, mask, attn_fn=attn_fn)
+    out = linear(params["wo"], out.reshape(b, 1, n_heads * head_dim))
+    return out, {"k": new_k, "v": new_v, "pos": pos + 1}

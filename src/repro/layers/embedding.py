@@ -1,0 +1,98 @@
+"""Embedding tables and EmbeddingBag.
+
+JAX has no native ``nn.EmbeddingBag`` and no CSR sparse — the gather+pool
+primitive IS part of this system (kernel taxonomy §B.6 / §B.11).  Two layouts:
+
+* fixed-hotness: indices ``(..., H)`` (every bag has exactly H lookups, the
+  layout used by DLRM-RMC*/DIN synthetic workloads and by our dry-run shapes);
+* ragged: flat ``indices (N,)`` + ``offsets (B+1,)`` (torch EmbeddingBag
+  layout), pooled via ``jax.ops.segment_sum``.
+
+Both have Pallas TPU kernels in ``repro.kernels.embedding_bag``; these jnp
+implementations are the reference path and the CPU execution path.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def init_table(rng, vocab: int, dim: int, *, dtype=jnp.float32, scale: float | None = None):
+    scale = scale if scale is not None else 1.0 / dim ** 0.5
+    return (jax.random.normal(rng, (vocab, dim)) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------- fixed-hotness
+
+
+def embedding_bag(table: jax.Array, idx: jax.Array, *, mode: str = "sum",
+                  weights: jax.Array | None = None) -> jax.Array:
+    """Pooled lookup.  ``table (V, D)``, ``idx (..., H)`` → ``(..., D)``.
+
+    ``weights`` (same shape as idx) enables weighted-sum pooling (DIN's
+    attention-weighted pooling reuses this).
+    """
+    rows = jnp.take(table, idx, axis=0)          # (..., H, D)
+    if weights is not None:
+        rows = rows * weights[..., None]
+    if mode == "sum":
+        return rows.sum(axis=-2)
+    if mode == "mean":
+        return rows.mean(axis=-2)
+    if mode == "max":
+        return rows.max(axis=-2)
+    if mode == "none":
+        return rows                               # (..., H, D) unpooled
+    raise ValueError(f"unknown pooling mode {mode!r}")
+
+
+# ---------------------------------------------------------------------- ragged
+
+
+def segment_ids_from_offsets(offsets: jax.Array, total: int) -> jax.Array:
+    """offsets (B+1,) → segment id per element (total,)."""
+    return jnp.searchsorted(offsets, jnp.arange(total, dtype=offsets.dtype),
+                            side="right") - 1
+
+
+def embedding_bag_ragged(table: jax.Array, indices: jax.Array, offsets: jax.Array,
+                         *, num_bags: int, mode: str = "sum") -> jax.Array:
+    """torch.nn.EmbeddingBag layout: flat ``indices (N,)``, ``offsets (B+1,)``."""
+    rows = jnp.take(table, indices, axis=0)                       # (N, D)
+    seg = segment_ids_from_offsets(offsets, indices.shape[0])
+    if mode == "sum":
+        return jax.ops.segment_sum(rows, seg, num_segments=num_bags)
+    if mode == "mean":
+        s = jax.ops.segment_sum(rows, seg, num_segments=num_bags)
+        cnt = jax.ops.segment_sum(jnp.ones_like(seg, dtype=rows.dtype), seg,
+                                  num_segments=num_bags)
+        return s / jnp.maximum(cnt, 1.0)[:, None]
+    if mode == "max":
+        return jax.ops.segment_max(rows, seg, num_segments=num_bags)
+    raise ValueError(f"unknown pooling mode {mode!r}")
+
+
+# ----------------------------------------------------------- compressed tables
+
+
+def hashed_lookup(table: jax.Array, idx: jax.Array) -> jax.Array:
+    """Hash trick: fold arbitrary ids into the table's vocab."""
+    return jnp.take(table, idx % table.shape[0], axis=0)
+
+
+def init_qr_tables(rng, vocab: int, dim: int, *, num_buckets: int, dtype=jnp.float32):
+    """Quotient-remainder compositional embedding [arXiv:1909.02107]."""
+    rq, rr = jax.random.split(rng)
+    n_q = -(-vocab // num_buckets)  # ceil
+    return {
+        "q": init_table(rq, n_q, dim, dtype=dtype),
+        "r": init_table(rr, num_buckets, dim, dtype=dtype),
+        "num_buckets": num_buckets,
+    }
+
+
+def qr_lookup(params, idx: jax.Array, *, combine: str = "mult") -> jax.Array:
+    nb = params["num_buckets"]
+    q = jnp.take(params["q"], idx // nb, axis=0)
+    r = jnp.take(params["r"], idx % nb, axis=0)
+    return q * r if combine == "mult" else q + r

@@ -1,0 +1,81 @@
+"""MLP stacks: the Dense-FC / Predict-FC blocks of the generalized
+recommendation architecture (paper Fig. 2) and transformer FFNs."""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+_ACTS = {
+    "relu": jax.nn.relu,
+    "gelu": jax.nn.gelu,
+    "silu": jax.nn.silu,
+    "tanh": jnp.tanh,
+    "sigmoid": jax.nn.sigmoid,
+    "identity": lambda x: x,
+}
+
+
+def activation(name: str):
+    return _ACTS[name]
+
+
+def init_linear(rng, d_in: int, d_out: int, *, bias: bool = True, dtype=jnp.float32,
+                scale: float | None = None):
+    scale = scale if scale is not None else (1.0 / max(d_in, 1)) ** 0.5
+    p = {"w": (jax.random.normal(rng, (d_in, d_out)) * scale).astype(dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def linear(params, x):
+    y = x @ params["w"]
+    if "b" in params:
+        y = y + params["b"]
+    return y
+
+
+def init_mlp(rng, d_in: int, widths: Sequence[int], *, bias: bool = True,
+             dtype=jnp.float32):
+    """A stack of Linear layers; activation applied between (not after) layers
+    by ``mlp`` below."""
+    params = []
+    rngs = jax.random.split(rng, len(widths))
+    prev = d_in
+    for r, w in zip(rngs, widths):
+        params.append(init_linear(r, prev, w, bias=bias, dtype=dtype))
+        prev = w
+    return params
+
+
+def mlp(params, x, *, act: str = "relu", final_act: str | None = None):
+    """Apply an MLP stack.  ``act`` between hidden layers, ``final_act`` (or
+    none) after the last layer — matches the paper's Predict-FC stacks where
+    the last layer emits a logit."""
+    f = _ACTS[act]
+    n = len(params)
+    for i, p in enumerate(params):
+        x = linear(p, x)
+        if i < n - 1:
+            x = f(x)
+        elif final_act is not None:
+            x = _ACTS[final_act](x)
+    return x
+
+
+def init_ffn_swiglu(rng, d_model: int, d_ff: int, *, dtype=jnp.float32):
+    """LLaMA-style gated FFN: (silu(x W_g) * x W_u) W_d."""
+    r1, r2, r3 = jax.random.split(rng, 3)
+    return {
+        "wg": init_linear(r1, d_model, d_ff, bias=False, dtype=dtype),
+        "wu": init_linear(r2, d_model, d_ff, bias=False, dtype=dtype),
+        "wd": init_linear(r3, d_ff, d_model, bias=False, dtype=dtype),
+    }
+
+
+def ffn_swiglu(params, x):
+    g = jax.nn.silu(linear(params["wg"], x))
+    u = linear(params["wu"], x)
+    return linear(params["wd"], g * u)

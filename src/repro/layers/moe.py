@@ -1,0 +1,173 @@
+"""Top-k routed Mixture-of-Experts (GShard-style capacity dispatch).
+
+Expert weights carry a leading E axis which the distribution layer shards
+over the ``model`` mesh axis (expert parallelism).  Dispatch/combine are
+dense one-hot einsums — collective-free under EP until the final combine,
+which XLA lowers to a reduce-scatter/all-gather pair on the sharded axis.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.layers.mlp import init_linear, linear
+
+
+def init_moe(rng, d_model: int, d_ff: int, n_experts: int, top_k: int,
+             *, dtype=jnp.float32):
+    rr, rg, ru, rd = jax.random.split(rng, 4)
+    scale = (1.0 / d_model) ** 0.5
+    return {
+        "router": init_linear(rr, d_model, n_experts, bias=False, dtype=dtype),
+        "wg": (jax.random.normal(rg, (n_experts, d_model, d_ff)) * scale).astype(dtype),
+        "wu": (jax.random.normal(ru, (n_experts, d_model, d_ff)) * scale).astype(dtype),
+        "wd": (jax.random.normal(rd, (n_experts, d_ff, d_model)) * (1.0 / d_ff) ** 0.5).astype(dtype),
+    }
+
+
+def moe_capacity(num_tokens: int, n_experts: int, top_k: int,
+                 capacity_factor: float = 1.25) -> int:
+    cap = int(num_tokens * top_k * capacity_factor / n_experts)
+    return max(cap, 1)
+
+
+def apply_moe(params, x: jax.Array, *, top_k: int, capacity_factor: float = 1.25):
+    """x (B, S, d) → (y (B, S, d), aux) with load-balance aux loss.
+
+    Sort-based dispatch (production formulation): assignments are sorted by
+    expert id, ranked within expert, and scatter/gathered through a dense
+    (E, C, d) buffer — O(T·k·d) memory, unlike the GShard one-hot einsum
+    whose (T, E, C) dispatch tensor is O(T²) since C ∝ T.  Over-capacity
+    assignments drop (k-major priority: a token's first choice wins first);
+    the residual outside the layer carries dropped tokens through.
+
+    ``n_experts`` comes from the expert weight stack (scan/stack-safe:
+    params are pure arrays).
+    """
+    n_experts = params["wg"].shape[0]
+    b, s, d = x.shape
+    t = b * s
+    xt = x.reshape(t, d)
+
+    logits = linear(params["router"], xt).astype(jnp.float32)       # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    topw, topi = jax.lax.top_k(probs, top_k)                        # (T, K)
+    topw = topw / jnp.maximum(topw.sum(-1, keepdims=True), 1e-9)    # renormalize
+
+    cap = moe_capacity(t, n_experts, top_k, capacity_factor)
+    # flatten K-major so k=0 (highest router weight) sorts first per expert
+    e_flat = topi.T.reshape(-1)                                     # (K·T,)
+    tok_flat = jnp.tile(jnp.arange(t), top_k)
+    w_flat = topw.T.reshape(-1)
+    order = jnp.argsort(e_flat)                                     # stable
+    se, stok = e_flat[order], tok_flat[order]
+    sw = w_flat[order]
+    start = jnp.searchsorted(se, jnp.arange(n_experts))             # (E,)
+    rank = jnp.arange(t * top_k) - start[se]
+    keep = rank < cap
+    slot = jnp.where(keep, se * cap + rank, n_experts * cap)        # dummy last
+
+    buf = jnp.zeros((n_experts * cap + 1, d), xt.dtype).at[slot].set(xt[stok])
+    xin = buf[:-1].reshape(n_experts, cap, d)                       # (E, C, d)
+    g = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xin, params["wg"]))
+    u = jnp.einsum("ecd,edf->ecf", xin, params["wu"])
+    eo = jnp.einsum("ecf,efd->ecd", g * u, params["wd"])            # (E, C, d)
+    yflat = jnp.concatenate(
+        [eo.reshape(n_experts * cap, d), jnp.zeros((1, d), eo.dtype)])
+    contrib = yflat[slot] * (sw * keep).astype(eo.dtype)[:, None]
+    y = jax.ops.segment_sum(contrib, stok, num_segments=t)
+    y = y.astype(x.dtype).reshape(b, s, d)
+
+    # load-balance auxiliary loss (Switch): E · Σ_e f_e · p_e
+    frac = jnp.zeros(n_experts).at[topi.reshape(-1)].add(1.0) / (t * top_k)
+    pmean = probs.mean(axis=0)
+    aux = n_experts * jnp.sum(frac * pmean)
+    dropped = 1.0 - keep.sum() / jnp.asarray(t * top_k, jnp.float32)
+    return y, {"aux_loss": aux, "dropped_frac": dropped}
+
+
+def make_sharded_moe(mesh, *, top_k: int, batch_axes: tuple[str, ...],
+                     capacity_factor: float = 1.25):
+    """Production MoE under SPMD: local dispatch + expert parallelism.
+
+    Under plain pjit the sort-based dispatch becomes a GLOBAL sort over all
+    tokens (measured: 249 s of collectives / 407 GiB for qwen3-moe prefill).
+    The fix is the TP+EP hybrid every large MoE system uses: activations are
+    batch-sharded over the data axes and replicated over `model`; each model
+    rank routes its LOCAL tokens, keeps only ITS expert slice (E/m experts),
+    runs the sort-based dispatch locally (capacity ∝ local tokens), and a
+    single psum over `model` combines expert outputs — the only collective.
+
+    Returns moe_fn(layer_params, x (B,S,d)) → (y, aux) for forward()'s
+    ``moe_fn`` hook.  Composes inside jit/scan.
+    """
+    from functools import partial
+
+    from jax.sharding import PartitionSpec as P
+
+    bx = batch_axes if len(batch_axes) > 1 else batch_axes[0]
+    all_axes = tuple(mesh.axis_names)
+    param_specs = {"router": jax.tree_util.tree_map(lambda _: P(), {"w": 0}),
+                   "wg": P("model", None, None), "wu": P("model", None, None),
+                   "wd": P("model", None, None)}
+
+    @partial(jax.shard_map, mesh=mesh,
+             in_specs=(param_specs, P(bx, None, None)),
+             out_specs=(P(bx, None, None), (P(), P())), check_vma=False)
+    def moe_fn(params, x):
+        m = jax.lax.axis_size("model")
+        rank = jax.lax.axis_index("model")
+        e_local = params["wg"].shape[0]               # E/m experts on this rank
+        n_experts = e_local * m
+        b, s, d = x.shape
+        t = b * s
+        xt = x.reshape(t, d)
+
+        logits = linear(params["router"], xt).astype(jnp.float32)
+        probs = jax.nn.softmax(logits, axis=-1)
+        topw, topi = jax.lax.top_k(probs, top_k)
+        topw = topw / jnp.maximum(topw.sum(-1, keepdims=True), 1e-9)
+
+        cap = moe_capacity(t, n_experts, top_k, capacity_factor)
+        e_flat = topi.T.reshape(-1)
+        tok_flat = jnp.tile(jnp.arange(t), top_k)
+        w_flat = topw.T.reshape(-1)
+        # keep only this rank's expert slice
+        lo = rank * e_local
+        mine = (e_flat >= lo) & (e_flat < lo + e_local)
+        e_loc = jnp.where(mine, e_flat - lo, e_local)  # e_local = overflow bin
+        order = jnp.argsort(e_loc)
+        se, stok, sw = e_loc[order], tok_flat[order], w_flat[order]
+        start = jnp.searchsorted(se, jnp.arange(e_local))
+        rank_in_e = jnp.arange(t * top_k) - start[se]
+        keep = (se < e_local) & (rank_in_e < cap)
+        slot = jnp.where(keep, se * cap + rank_in_e, e_local * cap)
+
+        buf = jnp.zeros((e_local * cap + 1, d), xt.dtype).at[slot].set(xt[stok])
+        xin = buf[:-1].reshape(e_local, cap, d)
+        g = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xin, params["wg"]))
+        u = jnp.einsum("ecd,edf->ecf", xin, params["wu"])
+        eo = jnp.einsum("ecf,efd->ecd", g * u, params["wd"])
+        yflat = jnp.concatenate(
+            [eo.reshape(e_local * cap, d), jnp.zeros((1, d), eo.dtype)])
+        contrib = yflat[slot] * (sw * keep).astype(eo.dtype)[:, None]
+        y = jax.ops.segment_sum(contrib, stok, num_segments=t)
+        # combine expert slices (tokens' experts live across model ranks)
+        y = jax.lax.psum(y.astype(x.dtype), "model").reshape(b, s, d)
+
+        frac = jnp.zeros(n_experts).at[topi.reshape(-1)].add(1.0) / (t * top_k)
+        aux = n_experts * jnp.sum(frac * probs.mean(axis=0))
+        aux = jax.lax.pmean(aux, all_axes)
+        kept = jax.lax.psum(keep.sum().astype(jnp.float32), "model")
+        dropped = 1.0 - kept / (t * top_k)
+        dropped = jax.lax.pmean(dropped, tuple(a for a in all_axes
+                                               if a != "model"))
+        return y, (aux, dropped)
+
+    def wrapped(layer_params, x):
+        y, (aux, dropped) = moe_fn(
+            {"router": layer_params["router"], "wg": layer_params["wg"],
+             "wu": layer_params["wu"], "wd": layer_params["wd"]}, x)
+        return y, {"aux_loss": aux, "dropped_frac": dropped}
+
+    return wrapped

@@ -1,0 +1,27 @@
+"""Normalization layers (functional, pytree params)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def init_layer_norm(dim: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((dim,), dtype), "bias": jnp.zeros((dim,), dtype)}
+
+
+def layer_norm(params, x, eps: float = 1e-5):
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    y = (x - mean) * jnp.reciprocal(jnp.sqrt(var + eps))
+    return y * params["scale"] + params["bias"]
+
+
+def init_rms_norm(dim: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((dim,), dtype)}
+
+
+def rms_norm(params, x, eps: float = 1e-6):
+    # compute the mean-square in f32 for stability under bf16 activations
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jnp.reciprocal(jnp.sqrt(ms + eps))
+    return (y * params["scale"].astype(jnp.float32)).astype(x.dtype)

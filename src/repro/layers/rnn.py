@@ -1,0 +1,66 @@
+"""Recurrent cells for DIEN: GRU and attention-gated AUGRU, via lax.scan."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro import flags
+from repro.layers.mlp import init_linear, linear
+
+
+def init_gru(rng, d_in: int, d_hidden: int, *, dtype=jnp.float32):
+    ri, rh = jax.random.split(rng)
+    return {
+        # gates computed jointly: [reset, update, new]
+        "wi": init_linear(ri, d_in, 3 * d_hidden, bias=True, dtype=dtype),
+        "wh": init_linear(rh, d_hidden, 3 * d_hidden, bias=False, dtype=dtype),
+    }
+
+
+def _gru_gates(params, x_t, h, d_hidden):
+    gi = linear(params["wi"], x_t)
+    gh = linear(params["wh"], h)
+    ir, iz, inw = jnp.split(gi, 3, axis=-1)
+    hr, hz, hnw = jnp.split(gh, 3, axis=-1)
+    r = jax.nn.sigmoid(ir + hr)
+    z = jax.nn.sigmoid(iz + hz)
+    n = jnp.tanh(inw + r * hnw)
+    return z, n
+
+
+def gru(params, xs: jax.Array, h0: jax.Array | None = None) -> jax.Array:
+    """xs (B, T, d_in) → hidden states (B, T, d_hidden)."""
+    b, t, _ = xs.shape
+    d_hidden = params["wh"]["w"].shape[0]
+    h0 = h0 if h0 is not None else jnp.zeros((b, d_hidden), xs.dtype)
+
+    def step(h, x_t):
+        z, n = _gru_gates(params, x_t, h, d_hidden)
+        h_new = (1.0 - z) * n + z * h
+        return h_new, h_new
+
+    _, hs = jax.lax.scan(step, h0, jnp.swapaxes(xs, 0, 1),
+                         unroll=flags.scan_unroll())
+    return jnp.swapaxes(hs, 0, 1)
+
+
+def augru(params, xs: jax.Array, att: jax.Array,
+          h0: jax.Array | None = None) -> jax.Array:
+    """DIEN's attention-gated GRU: update gate scaled by attention score.
+
+    xs (B, T, d_in), att (B, T) → final hidden (B, d_hidden).
+    """
+    b, t, _ = xs.shape
+    d_hidden = params["wh"]["w"].shape[0]
+    h0 = h0 if h0 is not None else jnp.zeros((b, d_hidden), xs.dtype)
+
+    def step(h, inp):
+        x_t, a_t = inp
+        z, n = _gru_gates(params, x_t, h, d_hidden)
+        z = z * a_t[:, None]                       # attention-scaled update
+        h_new = (1.0 - z) * h + z * n
+        return h_new, h_new
+
+    hT, _ = jax.lax.scan(step, h0, (jnp.swapaxes(xs, 0, 1), jnp.swapaxes(att, 0, 1)),
+                         unroll=flags.scan_unroll())
+    return hT

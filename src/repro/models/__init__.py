@@ -1,0 +1,1 @@
+from repro.models import gnn, lm, recsys  # noqa: F401

@@ -1,0 +1,307 @@
+"""Decoder-only transformer LM (dense + MoE) for the assigned LM archs.
+
+granite-moe-1b / qwen3-moe-30b (MoE, top-8), qwen2-0.5b / yi-34b / phi3-mini
+(dense SwiGLU).  All use GQA + RoPE + RMSNorm (the common llama-family
+skeleton of the source configs).
+
+Three entry points:
+    forward(params, cfg, tokens)            — logits, full sequence (train/prefill)
+    loss_fn(params, cfg, batch)             — next-token CE (+ MoE aux)
+    decode_step(params, cfg, token, caches) — one token with KV caches
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.layers import attention as attn_lib
+from repro.layers import moe as moe_lib
+from repro.layers.mlp import ffn_swiglu, init_ffn_swiglu, init_linear, linear
+from repro.layers.norms import init_rms_norm, rms_norm
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0                    # 0 → d_model // n_heads
+    qkv_bias: bool = False
+    rope_base: float = 10000.0
+    # MoE (None → dense)
+    n_experts: int = 0
+    top_k: int = 0
+    tie_embeddings: bool = False
+    dtype: str = "float32"
+    remat: bool = False                  # activation checkpoint per layer
+    scan_layers: bool = False            # stack layer params, lax.scan over L
+                                         # (keeps HLO size O(1) in depth — the
+                                         # dry-run default for deep models)
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def is_moe(self) -> bool:
+        return self.n_experts > 0
+
+    @property
+    def param_count(self) -> int:
+        d, hd = self.d_model, self.hd
+        attn = d * hd * (self.n_heads + 2 * self.n_kv_heads) + self.n_heads * hd * d
+        if self.is_moe:
+            ffn = 3 * d * self.d_ff * self.n_experts + d * self.n_experts
+        else:
+            ffn = 3 * d * self.d_ff
+        emb = self.vocab * d * (1 if self.tie_embeddings else 2)
+        return self.n_layers * (attn + ffn + 2 * d) + emb + d
+
+    @property
+    def active_param_count(self) -> int:
+        """Parameters touched per token (MoE: only top-k experts)."""
+        if not self.is_moe:
+            return self.param_count
+        d = self.d_model
+        inactive = 3 * d * self.d_ff * (self.n_experts - self.top_k)
+        return self.param_count - self.n_layers * inactive
+
+
+def init(rng, cfg: LMConfig):
+    dt = jnp.dtype(cfg.dtype)
+    rs = jax.random.split(rng, cfg.n_layers + 3)
+    p: dict = {
+        "embed": (jax.random.normal(rs[0], (cfg.vocab, cfg.d_model)) * 0.02).astype(dt),
+        "ln_f": init_rms_norm(cfg.d_model, dt),
+        "layers": [],
+    }
+    if not cfg.tie_embeddings:
+        p["unembed"] = init_linear(rs[1], cfg.d_model, cfg.vocab, bias=False, dtype=dt)
+    for i in range(cfg.n_layers):
+        r1, r2 = jax.random.split(rs[2 + i])
+        layer = {
+            "ln1": init_rms_norm(cfg.d_model, dt),
+            "attn": attn_lib.init_attention(r1, cfg.d_model, cfg.n_heads,
+                                            cfg.n_kv_heads, cfg.hd,
+                                            qkv_bias=cfg.qkv_bias, dtype=dt),
+            "ln2": init_rms_norm(cfg.d_model, dt),
+        }
+        if cfg.is_moe:
+            layer["moe"] = moe_lib.init_moe(r2, cfg.d_model, cfg.d_ff,
+                                            cfg.n_experts, cfg.top_k, dtype=dt)
+        else:
+            layer["ffn"] = init_ffn_swiglu(r2, cfg.d_model, cfg.d_ff, dtype=dt)
+        p["layers"].append(layer)
+    if cfg.scan_layers:
+        p["layers"] = jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs), *p["layers"])
+    return p
+
+
+def layer_params_iter(params, cfg: LMConfig):
+    """Yield per-layer param trees whether stacked (scan) or listed."""
+    if cfg.scan_layers:
+        for i in range(cfg.n_layers):
+            yield jax.tree_util.tree_map(lambda x: x[i], params["layers"])
+    else:
+        yield from params["layers"]
+
+
+def _layer_fwd(layer, cfg: LMConfig, x, freqs, attn_fn=None, moe_fn=None):
+    h = attn_lib.attention(layer["attn"], rms_norm(layer["ln1"], x),
+                           n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+                           head_dim=cfg.hd, causal=True, freqs=freqs,
+                           attn_fn=attn_fn)
+    x = x + h
+    if cfg.is_moe:
+        apply = moe_fn if moe_fn is not None else (
+            lambda lp, xi: moe_lib.apply_moe(lp, xi, top_k=cfg.top_k))
+        f, aux = apply(layer["moe"], rms_norm(layer["ln2"], x))
+        aux = aux["aux_loss"]
+    else:
+        f, aux = ffn_swiglu(layer["ffn"], rms_norm(layer["ln2"], x)), None
+    return x + f, aux
+
+
+def forward_hidden(params, cfg: LMConfig, tokens: jax.Array, *, attn_fn=None,
+                   moe_fn=None):
+    """tokens (B, S) int32 → (final hidden (B, S, D), MoE aux sum)."""
+    x = jnp.take(params["embed"], tokens, axis=0)
+    freqs = attn_lib.rope_freqs(cfg.hd, base=cfg.rope_base)
+    aux_total = jnp.zeros((), jnp.float32)
+    step = _layer_fwd
+    if cfg.remat:
+        step = jax.checkpoint(_layer_fwd, static_argnums=(1, 4, 5))
+    if cfg.scan_layers:
+        def body(carry, layer):
+            y, aux = step(layer, cfg, carry, freqs, attn_fn, moe_fn)
+            return y, (aux if aux is not None else jnp.zeros((), jnp.float32))
+        x, auxs = jax.lax.scan(body, x, params["layers"])
+        aux_total = auxs.sum()
+    else:
+        for layer in params["layers"]:
+            x, aux = step(layer, cfg, x, freqs, attn_fn, moe_fn)
+            if aux is not None:
+                aux_total = aux_total + aux
+    return rms_norm(params["ln_f"], x), aux_total
+
+
+def _unembed_matmul(params, cfg: LMConfig, x: jax.Array) -> jax.Array:
+    if cfg.tie_embeddings:
+        return x @ params["embed"].T
+    return linear(params["unembed"], x)
+
+
+def forward(params, cfg: LMConfig, tokens: jax.Array, *, attn_fn=None,
+            moe_fn=None):
+    """tokens (B, S) int32 → logits (B, S, V); also returns MoE aux sum."""
+    x, aux_total = forward_hidden(params, cfg, tokens, attn_fn=attn_fn,
+                                  moe_fn=moe_fn)
+    return _unembed_matmul(params, cfg, x), aux_total
+
+
+_LOSS_CHUNK = 512       # sequence chunk for the CE scan (big-vocab memory)
+
+
+def loss_fn(params, cfg: LMConfig, batch: dict, *, moe_fn=None) -> jax.Array:
+    """Next-token CE with the unembed+softmax scanned over sequence chunks:
+    peak logits memory is (B, chunk, V) instead of (B, S, V), and remat
+    recomputes each chunk's logits in backward."""
+    tokens, labels = batch["tokens"], batch["labels"]
+    x, aux = forward_hidden(params, cfg, tokens, moe_fn=moe_fn)
+    b, s, d = x.shape
+    if s % _LOSS_CHUNK != 0 or s <= _LOSS_CHUNK:
+        logits = _unembed_matmul(params, cfg, x).astype(jnp.float32)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+        return nll.mean() + 0.01 * aux
+
+    nc = s // _LOSS_CHUNK
+    xc = x.reshape(b, nc, _LOSS_CHUNK, d).transpose(1, 0, 2, 3)
+    yc = labels.reshape(b, nc, _LOSS_CHUNK).transpose(1, 0, 2)
+
+    @jax.checkpoint
+    def chunk_nll(args):
+        xi, yi = args
+        logits = _unembed_matmul(params, cfg, xi).astype(jnp.float32)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        return -jnp.take_along_axis(logp, yi[..., None], axis=-1)[..., 0].sum()
+
+    def body(acc, args):
+        return acc + chunk_nll(args), None
+
+    from repro import flags as _flags
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (xc, yc),
+                            unroll=_flags.scan_unroll())
+    return total / (b * s) + 0.01 * aux
+
+
+# ---------------------------------------------------------------- serving
+
+
+def init_caches(cfg: LMConfig, batch: int, max_len: int):
+    dt = jnp.dtype(cfg.dtype)
+    return [attn_lib.init_kv_cache(batch, max_len, cfg.n_kv_heads, cfg.hd, dtype=dt)
+            for _ in range(cfg.n_layers)]
+
+
+def _prefill_layer(layer, cfg: LMConfig, x, freqs, moe_fn=None):
+    """One prefill layer: returns (x_out, (k, v)) with k/v (B, S, Hkv, D)."""
+    b, s, _ = x.shape
+    xin = rms_norm(layer["ln1"], x)
+    q = linear(layer["attn"]["wq"], xin).reshape(b, s, cfg.n_heads, cfg.hd)
+    k = linear(layer["attn"]["wk"], xin).reshape(b, s, cfg.n_kv_heads, cfg.hd)
+    v = linear(layer["attn"]["wv"], xin).reshape(b, s, cfg.n_kv_heads, cfg.hd)
+    pos = jnp.arange(s)
+    q, kr = attn_lib.apply_rope(q, pos, freqs), attn_lib.apply_rope(k, pos, freqs)
+    if s * s > attn_lib._FLASH_THRESHOLD:
+        o = attn_lib.flash_sdpa(q, kr, v, causal=True)
+    else:
+        mask = jnp.tril(jnp.ones((s, s), bool))[None, None]
+        o = attn_lib._sdpa(q, kr, v, mask)
+    x = x + linear(layer["attn"]["wo"], o.reshape(b, s, cfg.n_heads * cfg.hd))
+    if cfg.is_moe:
+        apply = moe_fn if moe_fn is not None else (
+            lambda lp, xi: moe_lib.apply_moe(lp, xi, top_k=cfg.top_k))
+        f, _ = apply(layer["moe"], rms_norm(layer["ln2"], x))
+    else:
+        f = ffn_swiglu(layer["ffn"], rms_norm(layer["ln2"], x))
+    x = x + f
+    if _flags().SEQ_SPEC is not None:     # sequence-parallel residual stream
+        x = jax.lax.with_sharding_constraint(x, _flags().SEQ_SPEC)
+    return x, (kr, v)
+
+
+def prefill(params, cfg: LMConfig, tokens: jax.Array, max_len: int, *,
+            moe_fn=None):
+    """Run the prompt, fill KV caches, return (last-token logits, caches).
+
+    With ``scan_layers`` the layer loop is a lax.scan with the per-layer KV
+    emitted as stacked scan outputs — one transformer layer of live buffers
+    instead of L (the unrolled-python-loop variant peaked 56 GiB/dev for
+    qwen3-moe prefill_32k; see EXPERIMENTS.md §Perf)."""
+    b, s = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0)
+    freqs = attn_lib.rope_freqs(cfg.hd, base=cfg.rope_base)
+
+    if cfg.scan_layers:
+        def body(carry, layer):
+            y, kv = _prefill_layer(layer, cfg, carry, freqs, moe_fn)
+            return y, kv
+        x, (ks, vs) = jax.lax.scan(body, x, params["layers"],
+                                   unroll=_flags().scan_unroll())
+        kvs = [(ks[i], vs[i]) for i in range(cfg.n_layers)]
+    else:
+        kvs = []
+        for layer in layer_params_iter(params, cfg):
+            x, kv = _prefill_layer(layer, cfg, x, freqs, moe_fn)
+            kvs.append(kv)
+
+    new_caches = []
+    pad = max_len - s
+    for k, v in kvs:
+        widths = ((0, 0), (0, pad), (0, 0), (0, 0))
+        new_caches.append({"k": jnp.pad(k, widths), "v": jnp.pad(v, widths),
+                           "pos": jnp.full((b,), s, jnp.int32)})
+    x = rms_norm(params["ln_f"], x[:, -1:])
+    logits = (x @ params["embed"].T if cfg.tie_embeddings
+              else linear(params["unembed"], x))
+    return logits[:, 0], new_caches
+
+
+def _flags():
+    from repro import flags
+    return flags
+
+
+def decode_step(params, cfg: LMConfig, token: jax.Array, caches, *,
+                attn_fn=None, moe_fn=None):
+    """token (B,) int32 → (logits (B, V), new caches).  One decode step."""
+    x = jnp.take(params["embed"], token, axis=0)[:, None]            # (B,1,D)
+    freqs = attn_lib.rope_freqs(cfg.hd, base=cfg.rope_base)
+    new_caches = []
+    for layer, cache in zip(layer_params_iter(params, cfg), caches):
+        h, cache = attn_lib.decode_attention(
+            layer["attn"], rms_norm(layer["ln1"], x), cache,
+            n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads, head_dim=cfg.hd,
+            freqs=freqs, attn_fn=attn_fn)
+        x = x + h
+        if cfg.is_moe:
+            apply = moe_fn if moe_fn is not None else (
+                lambda lp, xi: moe_lib.apply_moe(lp, xi, top_k=cfg.top_k))
+            f, _ = apply(layer["moe"], rms_norm(layer["ln2"], x))
+        else:
+            f = ffn_swiglu(layer["ffn"], rms_norm(layer["ln2"], x))
+        x = x + f
+        new_caches.append(cache)
+    x = rms_norm(params["ln_f"], x)
+    logits = (x @ params["embed"].T if cfg.tie_embeddings
+              else linear(params["unembed"], x))
+    return logits[:, 0], new_caches

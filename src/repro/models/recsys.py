@@ -1,0 +1,353 @@
+"""Generalized neural recommendation model (paper Fig. 2).
+
+One configurable architecture realizes all eight paper models (NCF, WnD,
+MT-WnD, DLRM-RMC1/2/3, DIN, DIEN) **and** the assigned recsys archs
+(xDeepFM, AutoInt, MIND, BERT4Rec): dense-FC stack, per-field embedding
+bags, a pluggable feature-interaction op, and predict-FC stack(s).
+
+Batch layout (all dense arrays → shardable under pjit):
+    dense      (B, n_dense)            float   — continuous features
+    sparse     (B, F, H)               int32   — H lookups per field
+    history    (B, T)                  int32   — behavior sequence (DIN/DIEN/
+                                                 MIND/BERT4Rec)
+    hist_mask  (B, T)                  bool
+    target     (B,)                    int32   — candidate item id
+    candidates (B, C)                  int32   — retrieval scoring
+    label      (B,) / (B, n_tasks)     float
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.layers import attention as attn_lib
+from repro.layers import embedding as emb_lib
+from repro.layers import interactions as ix
+from repro.layers import rnn as rnn_lib
+from repro.layers.mlp import init_linear, init_mlp, linear, mlp
+from repro.layers.norms import init_layer_norm, layer_norm
+
+
+@dataclasses.dataclass(frozen=True)
+class RecConfig:
+    name: str
+    interaction: str                     # concat|dot|gmf|fm|cin|self-attn|din|dien|mind|bidir-seq
+    n_dense: int = 0
+    dense_fc: Sequence[int] = ()
+    predict_fc: Sequence[int] = (256, 64, 1)
+    n_tasks: int = 1
+    # sparse fields
+    n_tables: int = 0
+    vocab: int = 100_000
+    embed_dim: int = 32
+    hotness: int = 1
+    pooling: str = "sum"
+    # sequence models
+    seq_len: int = 0
+    item_vocab: int = 0
+    # CIN (xDeepFM)
+    cin_layers: Sequence[int] = ()
+    dnn_widths: Sequence[int] = ()
+    # AutoInt
+    n_attn_layers: int = 0
+    n_heads: int = 0
+    d_attn: int = 0
+    # MIND
+    n_interests: int = 0
+    capsule_iters: int = 3
+    # DIEN
+    gru_hidden: int = 0
+    dtype: str = "float32"
+
+    @property
+    def jdtype(self):
+        return jnp.dtype(self.dtype)
+
+    @property
+    def has_history(self) -> bool:
+        return self.interaction in ("din", "dien", "mind", "bidir-seq")
+
+
+# ------------------------------------------------------------------- init
+
+
+def init(rng, cfg: RecConfig):
+    rs = jax.random.split(rng, 16)
+    dt = cfg.jdtype
+    p: dict = {}
+    if cfg.n_tables:
+        # stacked tables (F, V, D): dim axis shardable over `model`
+        keys = jax.random.split(rs[0], cfg.n_tables)
+        p["tables"] = jnp.stack(
+            [emb_lib.init_table(k, cfg.vocab, cfg.embed_dim, dtype=dt) for k in keys])
+    if cfg.has_history or cfg.interaction == "bidir-seq":
+        p["item_table"] = emb_lib.init_table(rs[1], cfg.item_vocab, cfg.embed_dim, dtype=dt)
+    if cfg.dense_fc:
+        p["dense_mlp"] = init_mlp(rs[2], cfg.n_dense, cfg.dense_fc, dtype=dt)
+
+    if cfg.interaction == "cin":
+        p["cin"] = ix.init_cin(rs[3], _num_feature_rows(cfg), cfg.embed_dim,
+                               cfg.cin_layers, dtype=dt)
+        p["cin_linear"] = init_linear(rs[4], sum(cfg.cin_layers), 1, dtype=dt)
+        p["dnn"] = init_mlp(rs[5], _num_feature_rows(cfg) * cfg.embed_dim,
+                            list(cfg.dnn_widths) + [1], dtype=dt)
+        p["lin_w"] = jnp.zeros((cfg.n_tables,), dt)                  # linear logit term
+    elif cfg.interaction == "self-attn":
+        p["attn"] = []
+        dim = cfg.embed_dim
+        for i in range(cfg.n_attn_layers):
+            p["attn"].append(ix.init_autoint_layer(jax.random.fold_in(rs[6], i),
+                                                   dim, cfg.n_heads, cfg.d_attn, dtype=dt))
+            dim = cfg.n_heads * cfg.d_attn
+    elif cfg.interaction == "din":
+        p["din"] = ix.init_din_attention(rs[7], cfg.embed_dim, dtype=dt)
+    elif cfg.interaction == "dien":
+        p["gru"] = rnn_lib.init_gru(rs[8], cfg.embed_dim, cfg.gru_hidden, dtype=dt)
+        p["augru"] = rnn_lib.init_gru(rs[9], cfg.gru_hidden, cfg.gru_hidden, dtype=dt)
+        p["att_score"] = init_linear(rs[10], cfg.gru_hidden + cfg.embed_dim, 1, dtype=dt)
+    elif cfg.interaction == "mind":
+        p["capsule"] = ix.init_capsule_routing(rs[11], cfg.embed_dim, dtype=dt)
+    elif cfg.interaction == "bidir-seq":
+        p["pos_emb"] = (jax.random.normal(rs[12], (cfg.seq_len, cfg.embed_dim)) * 0.02).astype(dt)
+        p["blocks"] = []
+        hd = cfg.embed_dim // cfg.n_heads
+        for i in range(cfg.n_attn_layers):
+            ri = jax.random.fold_in(rs[13], i)
+            r1, r2, r3 = jax.random.split(ri, 3)
+            p["blocks"].append({
+                "ln1": init_layer_norm(cfg.embed_dim, dt),
+                "attn": attn_lib.init_attention(r1, cfg.embed_dim, cfg.n_heads,
+                                                cfg.n_heads, hd, dtype=dt),
+                "ln2": init_layer_norm(cfg.embed_dim, dt),
+                "ffn": init_mlp(r2, cfg.embed_dim,
+                                [4 * cfg.embed_dim, cfg.embed_dim], dtype=dt),
+            })
+        p["ln_f"] = init_layer_norm(cfg.embed_dim, dt)
+
+    if cfg.interaction != "cin":                       # cin carries its own heads
+        d_int = _interaction_dim(cfg)
+        keys = jax.random.split(rs[14], cfg.n_tasks)
+        p["predict"] = [init_mlp(k, d_int, list(cfg.predict_fc), dtype=dt)
+                        for k in keys]
+    return p
+
+
+def _num_feature_rows(cfg: RecConfig) -> int:
+    """Rows entering a (B, F', D) interaction: per-table pooled + dense row."""
+    extra = 1 if cfg.dense_fc else 0
+    return cfg.n_tables + extra
+
+
+def _interaction_dim(cfg: RecConfig) -> int:
+    dense_out = (cfg.dense_fc[-1] if cfg.dense_fc else cfg.n_dense)
+    if cfg.interaction == "concat":
+        return dense_out + cfg.n_tables * cfg.embed_dim
+    if cfg.interaction == "gmf":                      # NCF: gmf ⊕ mlp-concat
+        return cfg.embed_dim + 2 * cfg.embed_dim
+    if cfg.interaction == "dot":
+        f = _num_feature_rows(cfg)
+        return f * (f - 1) // 2 + dense_out
+    if cfg.interaction == "fm":
+        return cfg.embed_dim + dense_out
+    if cfg.interaction == "self-attn":
+        return cfg.n_tables * cfg.n_heads * cfg.d_attn
+    if cfg.interaction == "din":                      # pooled hist + target + tables
+        return (2 + cfg.n_tables) * cfg.embed_dim
+    if cfg.interaction == "dien":
+        return cfg.gru_hidden + (1 + cfg.n_tables) * cfg.embed_dim
+    if cfg.interaction == "mind":
+        return 2 * cfg.embed_dim                      # interest ⊕ target
+    if cfg.interaction == "bidir-seq":
+        return cfg.embed_dim
+    raise ValueError(cfg.interaction)
+
+
+# ---------------------------------------------------------------- forward
+
+
+def _sparse_pooled(params, cfg: RecConfig, sparse: jax.Array) -> jax.Array:
+    """sparse (B, F, H) → (B, F, D) per-table pooled embeddings."""
+    tables = params["tables"]                                        # (F, V, D)
+    rows = jax.vmap(lambda t, i: jnp.take(t, i, axis=0),
+                    in_axes=(0, 1), out_axes=1)(tables, sparse)      # (B, F, H, D)
+    if cfg.pooling == "sum":
+        return rows.sum(axis=2)
+    if cfg.pooling == "mean":
+        return rows.mean(axis=2)
+    if cfg.pooling == "concat":                                      # hotness-1 concat
+        b, f, h, d = rows.shape
+        return rows.reshape(b, f, h * d)
+    raise ValueError(cfg.pooling)
+
+
+def forward(params, cfg: RecConfig, batch: dict) -> jax.Array:
+    """→ CTR logits (B,) (or (B, n_tasks) for MT models)."""
+    dense_out = None
+    if cfg.n_dense:
+        dense_out = batch["dense"].astype(cfg.jdtype)
+        if cfg.dense_fc:
+            dense_out = mlp(params["dense_mlp"], dense_out, act="relu",
+                            final_act="relu")
+
+    emb = _sparse_pooled(params, cfg, batch["sparse"]) if cfg.n_tables else None
+
+    it = cfg.interaction
+    if it == "concat":
+        parts = [] if dense_out is None else [dense_out]
+        parts.append(emb.reshape(emb.shape[0], -1))
+        z = jnp.concatenate(parts, axis=-1)
+    elif it == "gmf":                                 # NCF: tables [u_mf,i_mf,u_mlp,i_mlp]
+        gmf = ix.gmf(emb[:, 0], emb[:, 1])
+        z = jnp.concatenate([gmf, emb[:, 2], emb[:, 3]], axis=-1)
+    elif it == "dot":
+        feats = emb
+        if dense_out is not None:
+            feats = jnp.concatenate([dense_out[:, None, :], emb], axis=1)
+        z = jnp.concatenate([ix.dot_interaction(feats)]
+                            + ([] if dense_out is None else [dense_out]), axis=-1)
+    elif it == "fm":
+        z = ix.fm_interaction(emb)
+        if dense_out is not None:
+            z = jnp.concatenate([z, dense_out], axis=-1)
+    elif it == "cin":
+        return _xdeepfm_forward(params, cfg, emb, batch)
+    elif it == "self-attn":
+        x = emb
+        dim = cfg.embed_dim
+        for lp in params["attn"]:
+            x = ix.autoint_layer(lp, x, n_heads=cfg.n_heads, d_attn=cfg.d_attn)
+            dim = cfg.n_heads * cfg.d_attn
+        z = x.reshape(x.shape[0], -1)
+    elif it == "din":
+        hist = jnp.take(params["item_table"], batch["history"], axis=0)
+        tgt = jnp.take(params["item_table"], batch["target"], axis=0)
+        pooled = ix.din_attention(params["din"], hist, tgt,
+                                  mask=batch.get("hist_mask"))
+        parts = [pooled, tgt]
+        if emb is not None:
+            parts.append(emb.reshape(emb.shape[0], -1))
+        z = jnp.concatenate(parts, axis=-1)
+    elif it == "dien":
+        hist = jnp.take(params["item_table"], batch["history"], axis=0)
+        tgt = jnp.take(params["item_table"], batch["target"], axis=0)
+        hs = rnn_lib.gru(params["gru"], hist)                        # (B, T, Hg)
+        att_in = jnp.concatenate(
+            [hs, jnp.broadcast_to(tgt[:, None], hist.shape[:2] + (cfg.embed_dim,))], -1)
+        scores = jax.nn.sigmoid(linear(params["att_score"], att_in))[..., 0]
+        if "hist_mask" in batch:
+            scores = scores * batch["hist_mask"].astype(scores.dtype)
+        hT = rnn_lib.augru(params["augru"], hs, scores)              # (B, Hg)
+        parts = [hT, tgt]
+        if emb is not None:
+            parts.append(emb.reshape(emb.shape[0], -1))
+        z = jnp.concatenate(parts, axis=-1)
+    elif it == "mind":
+        caps = _mind_interests(params, cfg, batch)                   # (B, K, D)
+        tgt = jnp.take(params["item_table"], batch["target"], axis=0)
+        # label-aware attention (pow 2 sharpening), then soft-pool interests
+        w = jax.nn.softmax(
+            (jnp.einsum("bkd,bd->bk", caps, tgt)
+             / jnp.sqrt(cfg.embed_dim)).astype(jnp.float32) * 2.0, axis=-1)
+        interest = jnp.einsum("bk,bkd->bd", w.astype(caps.dtype), caps)
+        z = jnp.concatenate([interest, tgt], axis=-1)
+    elif it == "bidir-seq":
+        h = _bert4rec_encode(params, cfg, batch)                     # (B, T, D)
+        # score the target item at the final position (inference = next-item)
+        tgt = jnp.take(params["item_table"], batch["target"], axis=0)
+        z = h[:, -1] * tgt                                            # elementwise match
+    else:
+        raise ValueError(it)
+
+    outs = [mlp(pp, z, act="relu") for pp in params["predict"]]
+    out = jnp.concatenate(outs, axis=-1) if cfg.n_tasks > 1 else outs[0]
+    return out[..., 0] if cfg.n_tasks == 1 else out
+
+
+def _xdeepfm_forward(params, cfg, emb, batch):
+    b = emb.shape[0]
+    cin_out = ix.cin(params["cin"], emb)                             # (B, ΣH)
+    logit_cin = linear(params["cin_linear"], cin_out)[..., 0]
+    logit_dnn = mlp(params["dnn"], emb.reshape(b, -1), act="relu")[..., 0]
+    logit_lin = jnp.einsum("bfd,f->b", emb, params["lin_w"]) / cfg.embed_dim
+    return logit_cin + logit_dnn + logit_lin
+
+
+def _mind_interests(params, cfg, batch):
+    hist = jnp.take(params["item_table"], batch["history"], axis=0)
+    return ix.capsule_routing(params["capsule"], hist,
+                              n_interests=cfg.n_interests,
+                              n_iters=cfg.capsule_iters,
+                              mask=batch.get("hist_mask"))
+
+
+def _bert4rec_encode(params, cfg, batch):
+    x = jnp.take(params["item_table"], batch["history"], axis=0)
+    x = x + params["pos_emb"][None, : x.shape[1]]
+    hd = cfg.embed_dim // cfg.n_heads
+    for blk in params["blocks"]:
+        h = attn_lib.attention(blk["attn"], layer_norm(blk["ln1"], x),
+                               n_heads=cfg.n_heads, n_kv_heads=cfg.n_heads,
+                               head_dim=hd, causal=False)
+        x = x + h
+        x = x + mlp(blk["ffn"], layer_norm(blk["ln2"], x), act="gelu")
+    return layer_norm(params["ln_f"], x)
+
+
+def bulk_forward(params, cfg: RecConfig, batch: dict, *, chunk: int = 16_384):
+    """Offline/bulk scoring: lax.map over batch chunks so the interaction
+    intermediates (CIN builds (B, H·F, D)) never materialize for the whole
+    262k/1M-row batch at once.  Chunking is over the GLOBAL batch; each chunk
+    keeps the same per-device sharding."""
+    from repro import flags
+    b = next(iter(batch.values())).shape[0]
+    if b <= chunk:
+        return forward(params, cfg, batch)
+    # round the chunk down to a divisor of b (1M % 65536 != 0 …)
+    n = -(-b // chunk)
+    while b % n:
+        n += 1
+    chunk = b // n
+    chunked = {k: v.reshape((n, chunk) + v.shape[1:]) for k, v in batch.items()}
+    if flags.SCAN_UNROLL:         # exact cost accounting: no while loop
+        outs = [forward(params, cfg,
+                        {k: v[i] for k, v in chunked.items()}) for i in range(n)]
+        out = jnp.stack(outs)
+    else:
+        out = jax.lax.map(lambda mb: forward(params, cfg, mb), chunked)
+    return out.reshape((b,) + out.shape[2:])
+
+
+# --------------------------------------------------------- retrieval scoring
+
+
+def score_candidates(params, cfg: RecConfig, batch: dict) -> jax.Array:
+    """Retrieval-mode scoring: (B, C) scores for B users × C candidate items.
+
+    Batched dot — never a loop.  For MIND the score is the max over interest
+    capsules (the paper's serving rule); for bert4rec the dot of the final
+    hidden state with candidate embeddings; other models fall back to running
+    ``forward`` with candidates tiled into the target slot.
+    """
+    cand = jnp.take(params["item_table"], batch["candidates"], axis=0)  # (B,C,D)
+    if cfg.interaction == "mind":
+        caps = _mind_interests(params, cfg, batch)                   # (B,K,D)
+        return jnp.einsum("bkd,bcd->bkc", caps, cand).max(axis=1)
+    if cfg.interaction == "bidir-seq":
+        h = _bert4rec_encode(params, cfg, batch)[:, -1]              # (B,D)
+        return jnp.einsum("bd,bcd->bc", h, cand)
+    raise ValueError(f"{cfg.name} has no two-tower retrieval head")
+
+
+# ------------------------------------------------------------------- loss
+
+
+def loss_fn(params, cfg: RecConfig, batch: dict) -> jax.Array:
+    logits = forward(params, cfg, batch)
+    labels = batch["label"].astype(jnp.float32)
+    logits = logits.astype(jnp.float32)
+    # binary cross-entropy with logits (CTR task); MT models average tasks
+    per = jnp.maximum(logits, 0) - logits * labels + jnp.log1p(jnp.exp(-jnp.abs(logits)))
+    return per.mean()

@@ -1,0 +1,1 @@
+from repro.serve import batching, runtime  # noqa: F401

@@ -1,0 +1,30 @@
+"""Batch bucketing: jit caches one executable per pow-2 bucket, requests pad
+up to the bucket — the standard anti-recompile discipline for a serving tier."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def bucket_for(size: int, max_bucket: int = 1024) -> int:
+    b = 1
+    while b < size and b < max_bucket:
+        b *= 2
+    return b
+
+
+def pad_batch(batch: dict, to: int) -> dict:
+    """Pad every leaf's leading dim to ``to`` (repeating row 0 — cheap and
+    numerically safe for inference; results past the true size are sliced)."""
+    def pad(x):
+        n = x.shape[0]
+        if n == to:
+            return x
+        reps = jnp.broadcast_to(x[:1], (to - n,) + x.shape[1:])
+        return jnp.concatenate([x, reps], axis=0)
+    return {k: pad(v) for k, v in batch.items()}
+
+
+def slice_result(out, n: int):
+    return jax.tree_util.tree_map(lambda x: x[:n], out)

@@ -1,0 +1,150 @@
+"""Live serving runtime: the real-execution counterpart of the simulator.
+
+Queries → split into requests of ≤ batch_size → FIFO queue → worker threads
+run the jitted model (bucketed shapes) → query completes when its last
+request lands.  An online DeepRecSched controller periodically hill-climbs
+the batch-size knob using the measured p95 over a sliding window — the
+"deployed in production" form of the offline tuner (paper §VI-B).
+
+This runs the actual JAX models on this host; the simulator covers at-scale
+what one machine cannot.
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+from typing import Callable
+
+import numpy as np
+
+from repro.core.scheduler import BATCH_LADDER
+from repro.serve.batching import bucket_for, pad_batch
+
+
+@dataclasses.dataclass
+class _Request:
+    qid: int
+    batch: dict
+    size: int
+
+
+@dataclasses.dataclass
+class QueryRecord:
+    qid: int
+    size: int
+    t_arrival: float
+    t_done: float = 0.0
+
+    @property
+    def latency_ms(self) -> float:
+        return (self.t_done - self.t_arrival) * 1e3
+
+
+class ServingRuntime:
+    """n_workers threads over a shared request queue."""
+
+    def __init__(self, apply_fn: Callable[[dict], object], *,
+                 n_workers: int = 2, batch_size: int = 64,
+                 max_bucket: int = 1024):
+        self._apply = apply_fn
+        self._q: queue.Queue = queue.Queue()
+        self._lock = threading.Lock()
+        self._outstanding: dict[int, int] = {}
+        self._records: dict[int, QueryRecord] = {}
+        self.batch_size = batch_size
+        self.max_bucket = max_bucket
+        self._stop = threading.Event()
+        self._workers = [threading.Thread(target=self._worker, daemon=True)
+                         for _ in range(n_workers)]
+        for w in self._workers:
+            w.start()
+
+    # ---------------------------------------------------------------- api
+
+    def submit(self, qid: int, batch: dict, size: int) -> None:
+        """Split one query (leaves have leading dim ``size``) into requests."""
+        bsz = self.batch_size
+        n_req = -(-size // bsz)
+        with self._lock:
+            self._records[qid] = QueryRecord(qid, size, time.monotonic())
+            self._outstanding[qid] = n_req
+        for i in range(n_req):
+            lo, hi = i * bsz, min((i + 1) * bsz, size)
+            sub = {k: v[lo:hi] for k, v in batch.items()}
+            self._q.put(_Request(qid, sub, hi - lo))
+
+    def drain(self, timeout: float = 60.0) -> None:
+        t0 = time.monotonic()
+        while time.monotonic() - t0 < timeout:
+            with self._lock:
+                if not self._outstanding:
+                    return
+            time.sleep(0.005)
+        raise TimeoutError("serving queue did not drain")
+
+    def shutdown(self) -> None:
+        self._stop.set()
+        for _ in self._workers:
+            self._q.put(None)
+        for w in self._workers:
+            w.join(timeout=5)
+
+    def completed(self) -> list[QueryRecord]:
+        with self._lock:
+            return [r for r in self._records.values() if r.t_done > 0]
+
+    def percentile_ms(self, p: float) -> float:
+        lats = [r.latency_ms for r in self.completed()]
+        return float(np.percentile(lats, p)) if lats else 0.0
+
+    # ------------------------------------------------------------- worker
+
+    def _worker(self) -> None:
+        import jax
+        while not self._stop.is_set():
+            req = self._q.get()
+            if req is None:
+                return
+            bucket = bucket_for(req.size, self.max_bucket)
+            padded = pad_batch(req.batch, bucket)
+            jax.block_until_ready(self._apply(padded))
+            now = time.monotonic()
+            with self._lock:
+                self._outstanding[req.qid] -= 1
+                if self._outstanding[req.qid] == 0:
+                    del self._outstanding[req.qid]
+                    self._records[req.qid].t_done = now
+
+
+class OnlineController:
+    """Online hill climbing on the runtime's batch-size knob.
+
+    Every ``window`` completed queries: if p95 is under the SLA, try the next
+    larger batch (more batch-parallel efficiency); if over, step down
+    (request parallelism).  The production deployment loop of paper §VI-B.
+    """
+
+    def __init__(self, runtime: ServingRuntime, sla_ms: float,
+                 ladder=BATCH_LADDER, window: int = 50):
+        self.rt = runtime
+        self.sla_ms = sla_ms
+        self.ladder = list(ladder)
+        self.window = window
+        self._seen = 0
+        self.history: list[tuple[int, float]] = []
+
+    def step(self) -> None:
+        done = self.rt.completed()
+        if len(done) - self._seen < self.window:
+            return
+        recent = done[self._seen:]
+        self._seen = len(done)
+        p95 = float(np.percentile([r.latency_ms for r in recent], 95))
+        i = self.ladder.index(self.rt.batch_size)
+        if p95 > self.sla_ms and i > 0:
+            self.rt.batch_size = self.ladder[i - 1]
+        elif p95 < 0.7 * self.sla_ms and i < len(self.ladder) - 1:
+            self.rt.batch_size = self.ladder[i + 1]
+        self.history.append((self.rt.batch_size, p95))

@@ -1,0 +1,1 @@
+from repro.train import checkpoint, grad_compress, loop, optim  # noqa: F401

@@ -1,0 +1,104 @@
+"""Gradient compression for cross-pod all-reduce.
+
+At 1000+ nodes the DP all-reduce over the slow pod axis dominates step time;
+int8 block-quantized gradients cut those bytes 4× vs f32 (2× vs bf16).
+Error feedback keeps the quantization noise from biasing convergence
+[1-bit Adam / EF-SGD lineage].
+
+The quantize/dequantize pair wraps the psum: inside pjit the pattern
+``dequant(psum(quant(g)))`` lets XLA all-reduce int32-accumulated int8
+payloads; outside pjit it still serves as a drop-in compressor for any
+custom collective.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+_BLOCK = 256
+
+
+def quantize_int8(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Blockwise symmetric int8.  Returns (q int8 (..., n), scale f32 blocks)."""
+    flat = x.astype(jnp.float32).reshape(-1)
+    pad = (-flat.shape[0]) % _BLOCK
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, _BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array, shape, dtype) -> jax.Array:
+    flat = (q.astype(jnp.float32) * scale).reshape(-1)
+    n = 1
+    for s in shape:
+        n *= s
+    return flat[:n].reshape(shape).astype(dtype)
+
+
+def init_error_feedback(params: PyTree) -> PyTree:
+    return jax.tree_util.tree_map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compress_grads(grads: PyTree, residual: PyTree) -> tuple[PyTree, PyTree]:
+    """Quantize (grads + residual); return (quantized tree, new residual).
+
+    The residual carries what quantization lost into the next step (error
+    feedback), making the compressed optimizer unbiased in the long run.
+    """
+    def one(g, r):
+        tgt = g.astype(jnp.float32) + r
+        q, scale = quantize_int8(tgt)
+        deq = dequantize_int8(q, scale, g.shape, jnp.float32)
+        return (q, scale), tgt - deq
+
+    flat, treedef = jax.tree_util.tree_flatten(grads)
+    rflat = jax.tree_util.tree_leaves(residual)
+    qs, new_res = zip(*[one(g, r) for g, r in zip(flat, rflat)])
+    return (jax.tree_util.tree_unflatten(treedef, list(qs)),
+            jax.tree_util.tree_unflatten(treedef, list(new_res)))
+
+
+def decompress_grads(qtree: PyTree, like: PyTree) -> PyTree:
+    def one(qs, g):
+        q, scale = qs
+        return dequantize_int8(q, scale, g.shape, g.dtype)
+
+    flat_q, treedef = jax.tree_util.tree_flatten(qtree, is_leaf=lambda x: isinstance(x, tuple))
+    flat_g = jax.tree_util.tree_leaves(like)
+    out = [one(q, g) for q, g in zip(flat_q, flat_g)]
+    return jax.tree_util.tree_unflatten(jax.tree_util.tree_structure(like), out)
+
+
+def compressed_psum(grads: PyTree, axis_name: str, residual: PyTree):
+    """int8-compressed data-parallel mean-reduce with error feedback.
+
+    Use inside shard_map/pjit: quantize locally, all-reduce the int8 payload
+    (accumulated in int32 to avoid overflow at ≤ 2^23 participants), then
+    dequantize with the all-reduced scales.
+    """
+    def one(g, r):
+        tgt = g.astype(jnp.float32) + r
+        flat = tgt.reshape(-1)
+        pad = (-flat.shape[0]) % _BLOCK
+        blocks = jnp.pad(flat, (0, pad)).reshape(-1, _BLOCK)
+        # shared per-block scale (psum-max) → the int32 payload sum is exact
+        local_max = jnp.max(jnp.abs(blocks), axis=1, keepdims=True)
+        scale = jax.lax.pmax(local_max, axis_name) / 127.0 + 1e-12
+        q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+        qsum = jax.lax.psum(q.astype(jnp.int32), axis_name)
+        n = jax.lax.psum(jnp.ones((), jnp.float32), axis_name)
+        mean = ((qsum.astype(jnp.float32) * scale).reshape(-1)[: flat.shape[0]]
+                .reshape(g.shape) / n)
+        deq_local = (q.astype(jnp.float32) * scale).reshape(-1)[: flat.shape[0]].reshape(g.shape)
+        return mean.astype(g.dtype), tgt - deq_local
+
+    flat, treedef = jax.tree_util.tree_flatten(grads)
+    rflat = jax.tree_util.tree_leaves(residual)
+    outs, res = zip(*[one(g, r) for g, r in zip(flat, rflat)])
+    return (jax.tree_util.tree_unflatten(treedef, list(outs)),
+            jax.tree_util.tree_unflatten(treedef, list(res)))

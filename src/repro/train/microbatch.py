@@ -1,0 +1,46 @@
+"""Gradient accumulation over microbatches (lax.scan — compiles once)."""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+def accumulated_grads(loss_fn: Callable, params: PyTree, batch: PyTree,
+                      num_microbatches: int):
+    """Split the leading batch dim into ``num_microbatches`` chunks, scan a
+    grad computation over them, return (mean loss, mean grads).
+
+    Peak activation memory drops by ~num_microbatches at the cost of one scan
+    — the standard lever when the memory roofline term dominates.
+    """
+    if num_microbatches <= 1:
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        return loss, grads
+
+    def reshape(x):
+        b = x.shape[0]
+        assert b % num_microbatches == 0, (b, num_microbatches)
+        return x.reshape(num_microbatches, b // num_microbatches, *x.shape[1:])
+
+    micro = jax.tree_util.tree_map(reshape, batch)
+
+    def body(carry, mb):
+        loss_acc, grad_acc = carry
+        loss, grads = jax.value_and_grad(loss_fn)(params, mb)
+        grad_acc = jax.tree_util.tree_map(
+            lambda a, g: a + g.astype(a.dtype), grad_acc, grads)
+        return (loss_acc + loss, grad_acc), None
+
+    from repro import flags
+    zeros = jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    (loss_sum, grad_sum), _ = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), zeros), micro,
+        unroll=flags.scan_unroll())
+    inv = 1.0 / num_microbatches
+    grads = jax.tree_util.tree_map(lambda g: (g * inv), grad_sum)
+    return loss_sum * inv, grads

@@ -1,0 +1,121 @@
+"""Optimizers (functional, optax-style but self-contained).
+
+``adagrad`` is the production choice for embedding tables (per-coordinate
+rates tolerate the power-law update frequency of sparse rows); ``adamw`` for
+dense towers; ``combined`` routes by parameter path — the standard recsys
+split (DLRM trains exactly this way).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[PyTree], PyTree]
+    update: Callable[[PyTree, PyTree, PyTree], tuple[PyTree, PyTree]]
+    # update(grads, state, params) -> (new_params, new_state)
+
+
+def sgd(lr: float = 0.1, momentum: float = 0.0) -> Optimizer:
+    def init(params):
+        if momentum:
+            return jax.tree_util.tree_map(jnp.zeros_like, params)
+        return ()
+
+    def update(grads, state, params):
+        if momentum:
+            state = jax.tree_util.tree_map(lambda m, g: momentum * m + g, state, grads)
+            step = state
+        else:
+            step = grads
+        new = jax.tree_util.tree_map(lambda p, s: p - lr * s.astype(p.dtype), params, step)
+        return new, state
+
+    return Optimizer(init, update)
+
+
+def adagrad(lr: float = 0.01, eps: float = 1e-8) -> Optimizer:
+    def init(params):
+        return jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+    def update(grads, state, params):
+        state = jax.tree_util.tree_map(
+            lambda s, g: s + g.astype(jnp.float32) ** 2, state, grads)
+        new = jax.tree_util.tree_map(
+            lambda p, g, s: p - (lr * g.astype(jnp.float32)
+                                 / (jnp.sqrt(s) + eps)).astype(p.dtype),
+            params, grads, state)
+        return new, state
+
+    return Optimizer(init, update)
+
+
+def adamw(lr: float = 1e-3, b1: float = 0.9, b2: float = 0.999,
+          eps: float = 1e-8, weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"mu": jax.tree_util.tree_map(zeros, params),
+                "nu": jax.tree_util.tree_map(zeros, params),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        count = state["count"] + 1
+        mu = jax.tree_util.tree_map(
+            lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32), state["mu"], grads)
+        nu = jax.tree_util.tree_map(
+            lambda v, g: b2 * v + (1 - b2) * g.astype(jnp.float32) ** 2, state["nu"], grads)
+        c1 = 1 - b1 ** count.astype(jnp.float32)
+        c2 = 1 - b2 ** count.astype(jnp.float32)
+
+        def step(p, m, v):
+            upd = (m / c1) / (jnp.sqrt(v / c2) + eps)
+            if weight_decay:
+                upd = upd + weight_decay * p.astype(jnp.float32)
+            return p - (lr * upd).astype(p.dtype)
+
+        new = jax.tree_util.tree_map(step, params, mu, nu)
+        return new, {"mu": mu, "nu": nu, "count": count}
+
+    return Optimizer(init, update)
+
+
+def combined(route: Callable[[tuple], bool], sparse_opt: Optimizer,
+             dense_opt: Optimizer) -> Optimizer:
+    """Route each leaf (by its tree path) to sparse_opt (True) or dense_opt.
+
+    Typical: ``route = lambda path: 'tables' in str(path) or 'embed' in str(path)``.
+    """
+    def _mask(params, want: bool):
+        paths = jax.tree_util.tree_map_with_path(lambda p, x: route(p) == want, params)
+        return paths
+
+    def init(params):
+        return {"sparse": sparse_opt.init(params), "dense": dense_opt.init(params)}
+
+    def update(grads, state, params):
+        ps, ss = sparse_opt.update(grads, state["sparse"], params)
+        pd, sd = dense_opt.update(grads, state["dense"], params)
+        sel = _mask(params, True)
+        new = jax.tree_util.tree_map(lambda m, a, b: a if m else b, sel, ps, pd,
+                                     is_leaf=lambda x: isinstance(x, bool))
+        return new, {"sparse": ss, "dense": sd}
+
+    return Optimizer(init, update)
+
+
+def global_norm(tree: PyTree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(l.astype(jnp.float32) ** 2) for l in leaves))
+
+
+def clip_by_global_norm(grads: PyTree, max_norm: float) -> PyTree:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree_util.tree_map(lambda g: g * scale.astype(g.dtype), grads)

@@ -1,0 +1,66 @@
+"""Shared utilities: pytree accounting, rng, timing."""
+from __future__ import annotations
+
+import time
+from typing import Any, Callable, Iterator
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+
+def param_count(params: PyTree) -> int:
+    """Total number of scalar parameters in a pytree."""
+    return sum(int(np.prod(x.shape)) for x in jax.tree_util.tree_leaves(params))
+
+
+def param_bytes(params: PyTree) -> int:
+    return sum(int(np.prod(x.shape)) * x.dtype.itemsize for x in jax.tree_util.tree_leaves(params))
+
+
+def tree_cast(params: PyTree, dtype) -> PyTree:
+    """Cast every floating leaf to ``dtype`` (ints left untouched)."""
+    def _cast(x):
+        if jnp.issubdtype(x.dtype, jnp.floating):
+            return x.astype(dtype)
+        return x
+    return jax.tree_util.tree_map(_cast, params)
+
+
+def rng_seq(seed: int | jax.Array) -> Iterator[jax.Array]:
+    """Infinite stream of fresh PRNG keys."""
+    key = jax.random.PRNGKey(seed) if isinstance(seed, int) else seed
+    while True:
+        key, sub = jax.random.split(key)
+        yield sub
+
+
+def check_finite(tree: PyTree) -> jax.Array:
+    """Scalar bool: every floating leaf is finite."""
+    leaves = [jnp.all(jnp.isfinite(x)) for x in jax.tree_util.tree_leaves(tree)
+              if jnp.issubdtype(x.dtype, jnp.floating)]
+    if not leaves:
+        return jnp.asarray(True)
+    return jnp.stack(leaves).all()
+
+
+def timeit(fn: Callable[[], Any], iters: int = 10, warmup: int = 2) -> float:
+    """Median wall-clock seconds per call; blocks on JAX outputs."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn())
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times))
+
+
+def human_bytes(n: float) -> str:
+    for unit in ("B", "KiB", "MiB", "GiB", "TiB"):
+        if abs(n) < 1024.0:
+            return f"{n:.2f}{unit}"
+        n /= 1024.0
+    return f"{n:.2f}PiB"

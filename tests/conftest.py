@@ -1,0 +1,29 @@
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO, "src")
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+def run_in_devices(code: str, n_devices: int = 8, timeout: int = 480) -> str:
+    """Run a python snippet in a subprocess with N host platform devices.
+
+    Smoke tests must see 1 device (no global XLA_FLAGS), so multi-device
+    tests spawn their own interpreter with the flag set pre-import.
+    """
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    res = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=timeout)
+    assert res.returncode == 0, f"subprocess failed:\n{res.stdout}\n{res.stderr}"
+    return res.stdout

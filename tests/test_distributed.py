@@ -1,0 +1,186 @@
+"""Multi-device behavior (subprocess with 8 host devices): sharded train step
+== single-device result, collectives, pipeline, compressed psum, elastic
+checkpoint reshard, dry-run on a small mesh."""
+import pytest
+
+from conftest import run_in_devices
+
+
+@pytest.mark.slow
+def test_sharded_recsys_train_step_matches_single_device():
+    out = run_in_devices("""
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.configs import get
+from repro.models import recsys
+from repro.data import synthetic as syn
+from repro.distributed import sharding as shd
+
+cfg = get("xdeepfm").smoke_config
+params = recsys.init(jax.random.PRNGKey(0), cfg)
+batch = syn.recsys_batch(np.random.default_rng(0), cfg, 16)
+loss_single = jax.jit(lambda p, b: recsys.loss_fn(p, cfg, b))(params, batch)
+
+mesh = jax.make_mesh((2, 4), ("data", "model"),
+                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+psh = jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s),
+                             shd.recsys_param_pspecs(params),
+                             is_leaf=lambda x: isinstance(x, P))
+bsh = jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s),
+                             shd.recsys_batch_pspecs(batch, ("data",)),
+                             is_leaf=lambda x: isinstance(x, P))
+with mesh:
+    ps = jax.device_put(params, psh)
+    bs = jax.device_put(batch, bsh)
+    loss_sharded = jax.jit(lambda p, b: recsys.loss_fn(p, cfg, b))(ps, bs)
+np.testing.assert_allclose(float(loss_single), float(loss_sharded), rtol=1e-5)
+print("OK", float(loss_single))
+""")
+    assert "OK" in out
+
+
+@pytest.mark.slow
+def test_sharded_lm_loss_matches_single_device():
+    out = run_in_devices("""
+import jax, jax.numpy as jnp, numpy as np, dataclasses
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.configs import get
+from repro.models import lm
+from repro.data import synthetic as syn
+from repro.distributed import sharding as shd
+
+cfg = dataclasses.replace(get("granite-moe-1b-a400m").smoke_config, scan_layers=True)
+params = lm.init(jax.random.PRNGKey(0), cfg)
+batch = syn.lm_batch(np.random.default_rng(0), cfg, 4, 16)
+l0 = jax.jit(lambda p, b: lm.loss_fn(p, cfg, b))(params, batch)
+mesh = jax.make_mesh((2, 4), ("data", "model"),
+                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+psp = shd.lm_param_pspecs(params, scan_layers=True)
+psh = jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s), psp,
+                             is_leaf=lambda x: isinstance(x, P))
+with mesh:
+    ps = jax.device_put(params, psh)
+    bs = jax.device_put(batch, jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, P("data", None)), batch))
+    l1 = jax.jit(lambda p, b: lm.loss_fn(p, cfg, b))(ps, bs)
+np.testing.assert_allclose(float(l0), float(l1), rtol=2e-4)
+print("OK")
+""")
+    assert "OK" in out
+
+
+@pytest.mark.slow
+def test_overlapped_collectives_and_pipeline():
+    out = run_in_devices("""
+import jax, jax.numpy as jnp
+from functools import partial
+from jax.sharding import PartitionSpec as P
+from repro.distributed import collectives as coll, pipeline as pipe
+import numpy as np
+
+mesh = jax.make_mesh((4,), ("model",), axis_types=(jax.sharding.AxisType.Auto,))
+x = jnp.arange(32*6, dtype=jnp.float32).reshape(32, 6)
+w = jnp.ones((6, 3)) * 0.5
+@partial(jax.shard_map, mesh=mesh, in_specs=(P("model"), P()), out_specs=P(),
+         check_vma=False)
+def f(xs, w):
+    return coll.overlapped_all_gather_matmul(xs, w, "model")
+np.testing.assert_allclose(np.asarray(f(x, w)), np.asarray(x @ w), rtol=1e-6)
+
+pmesh = jax.make_mesh((4,), ("pipe",), axis_types=(jax.sharding.AxisType.Auto,))
+ws = jax.random.normal(jax.random.PRNGKey(0), (4, 6, 6)) * 0.3
+xin = jax.random.normal(jax.random.PRNGKey(1), (16, 6))
+fwd = pipe.make_pipelined_fn(lambda w, x: jnp.tanh(x @ w), pmesh, num_microbatches=4)
+ref = xin
+for i in range(4):
+    ref = jnp.tanh(ref @ ws[i])
+np.testing.assert_allclose(np.asarray(fwd(ws, xin)), np.asarray(ref), rtol=1e-5, atol=1e-5)
+print("OK")
+""")
+    assert "OK" in out
+
+
+@pytest.mark.slow
+def test_compressed_psum_matches_exact_mean():
+    out = run_in_devices("""
+import jax, jax.numpy as jnp, numpy as np
+from functools import partial
+from jax.sharding import PartitionSpec as P
+from repro.train import grad_compress as gc
+
+mesh = jax.make_mesh((8,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+g = jax.random.normal(jax.random.PRNGKey(0), (8, 512))
+
+@partial(jax.shard_map, mesh=mesh, in_specs=(P("data"),), out_specs=P("data"),
+         check_vma=False)
+def compressed_mean(gs):
+    grads = {"w": gs[0]}
+    res = gc.init_error_feedback(grads)
+    mean, _ = gc.compressed_psum(grads, "data", res)
+    return mean["w"][None]
+
+got = compressed_mean(g)
+want = g.mean(0)
+err = np.abs(np.asarray(got[0]) - np.asarray(want)).max()
+scale = np.abs(np.asarray(g)).max() / 127
+assert err <= 2 * scale + 1e-6, (err, scale)
+print("OK", err)
+""")
+    assert "OK" in out
+
+
+@pytest.mark.slow
+def test_elastic_reshard_restore():
+    """Checkpoint saved from an 8-device mesh restores onto 2- and 1-device
+    meshes (elastic scaling)."""
+    import tempfile, os
+    tmp = tempfile.mkdtemp()
+    run_in_devices(f"""
+import jax, jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.train import checkpoint as ck
+mesh = jax.make_mesh((8,), ("model",), axis_types=(jax.sharding.AxisType.Auto,))
+w = jax.device_put(jnp.arange(64.0).reshape(8, 8),
+                   NamedSharding(mesh, P("model", None)))
+ck.save({tmp!r}, 3, {{"w": w}})
+print("SAVED")
+""", n_devices=8)
+    out = run_in_devices(f"""
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.train import checkpoint as ck
+mesh = jax.make_mesh((2,), ("model",), axis_types=(jax.sharding.AxisType.Auto,))
+target = {{"w": jnp.zeros((8, 8))}}
+sh = {{"w": NamedSharding(mesh, P("model", None))}}
+restored, step = ck.restore({tmp!r}, target, shardings=sh)
+assert step == 3
+np.testing.assert_array_equal(np.asarray(restored["w"]),
+                              np.arange(64.0).reshape(8, 8))
+assert restored["w"].sharding.num_devices == 2
+print("OK")
+""", n_devices=2)
+    assert "OK" in out
+
+
+@pytest.mark.slow
+def test_dryrun_cells_compile_on_host_mesh():
+    """Every family's cell builder lowers+compiles on an 8-device mesh with
+    smoke configs (the full 512-device sweep runs via launch.dryrun)."""
+    out = run_in_devices("""
+import jax
+from repro.launch.steps import build_cell
+from repro.launch.mesh import make_host_mesh
+mesh = make_host_mesh(n_data=2, n_model=4)
+for arch, shape in [("granite-moe-1b-a400m", "train_4k"),
+                    ("qwen2-0.5b", "decode_32k"),
+                    ("xdeepfm", "train_batch"),
+                    ("mind", "retrieval_cand"),
+                    ("gcn-cora", "molecule")]:
+    cell = build_cell(arch, shape, mesh, smoke=True)
+    with mesh:
+        c = jax.jit(cell.fn, in_shardings=cell.in_shardings,
+                    out_shardings=cell.out_shardings).lower(*cell.args).compile()
+    print("compiled", arch, shape)
+print("OK")
+""", timeout=600)
+    assert "OK" in out

@@ -1,0 +1,204 @@
+"""Unit + property tests for the layer substrate."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.layers import attention as A
+from repro.layers import embedding as E
+from repro.layers import interactions as IX
+from repro.layers import moe as M
+from repro.layers import rnn as R
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ----------------------------------------------------------- embedding bag
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(2, 50), st.integers(1, 12), st.integers(1, 8),
+       st.integers(1, 16))
+def test_embedding_bag_matches_loop(vocab, batch, hot, dim):
+    table = jax.random.normal(KEY, (vocab, dim))
+    idx = jax.random.randint(KEY, (batch, hot), 0, vocab)
+    got = E.embedding_bag(table, idx)
+    want = np.stack([np.asarray(table)[np.asarray(idx[i])].sum(0)
+                     for i in range(batch)])
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.integers(0, 6), min_size=1, max_size=8))
+def test_embedding_bag_ragged_segments(bag_sizes):
+    """Ragged bags == per-bag loop sums; empty bags → zero vectors."""
+    vocab, dim = 13, 4
+    table = jax.random.normal(KEY, (vocab, dim))
+    offsets = np.concatenate([[0], np.cumsum(bag_sizes)]).astype(np.int32)
+    total = int(offsets[-1])
+    idx = np.arange(total) % vocab
+    got = E.embedding_bag_ragged(table, jnp.asarray(idx), jnp.asarray(offsets),
+                                 num_bags=len(bag_sizes))
+    for i, n in enumerate(bag_sizes):
+        want = np.asarray(table)[idx[offsets[i]:offsets[i + 1]]].sum(0) \
+            if n else np.zeros(dim)
+        np.testing.assert_allclose(np.asarray(got[i]), want, rtol=1e-5, atol=1e-5)
+
+
+def test_qr_embedding_covers_vocab():
+    p = E.init_qr_tables(KEY, 1000, 8, num_buckets=32)
+    idx = jnp.arange(1000)
+    out = E.qr_lookup(p, idx)
+    assert out.shape == (1000, 8)
+    # distinct ids map to distinct embeddings with very high probability
+    assert len(np.unique(np.asarray(out).round(5), axis=0)) > 990
+
+
+# ------------------------------------------------------------ interactions
+
+
+def test_dot_interaction_symmetric_pairs():
+    f = jax.random.normal(KEY, (3, 5, 7))
+    out = IX.dot_interaction(f)
+    z = np.einsum("bfd,bgd->bfg", np.asarray(f), np.asarray(f))
+    li, lj = np.tril_indices(5, k=-1)
+    np.testing.assert_allclose(np.asarray(out), z[:, li, lj], rtol=1e-5)
+
+
+def test_fm_identity():
+    """FM pooling == explicit pairwise sum."""
+    f = jax.random.normal(KEY, (4, 6, 8))
+    got = IX.fm_interaction(f)
+    fn = np.asarray(f)
+    want = np.zeros((4, 8))
+    for i in range(6):
+        for j in range(6):
+            if i < j:
+                want += fn[:, i] * fn[:, j]
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-4, atol=1e-4)
+
+
+def test_cin_shapes_and_grad():
+    p = IX.init_cin(KEY, 6, 8, [10, 12])
+    x = jax.random.normal(KEY, (3, 6, 8))
+    out = IX.cin(p, x)
+    assert out.shape == (3, 22)
+    g = jax.grad(lambda pp: IX.cin(pp, x).sum())(p)
+    assert all(np.isfinite(np.asarray(gi)).all() for gi in g)
+
+
+def test_din_attention_mask_excludes_history():
+    p = IX.init_din_attention(KEY, 8)
+    hist = jax.random.normal(KEY, (2, 6, 8))
+    tgt = jax.random.normal(jax.random.fold_in(KEY, 1), (2, 8))
+    mask = jnp.array([[True] * 6, [True, True, False, False, False, False]])
+    out = IX.din_attention(p, hist, tgt, mask=mask)
+    # row 1 must not depend on masked history items
+    hist2 = hist.at[1, 2:].set(99.0)
+    out2 = IX.din_attention(p, hist2, tgt, mask=mask)
+    np.testing.assert_allclose(np.asarray(out[1]), np.asarray(out2[1]), rtol=1e-5)
+
+
+def test_capsule_routing_norm_bounded():
+    """Squash keeps capsule norms in (0, 1)."""
+    p = IX.init_capsule_routing(KEY, 16)
+    hist = jax.random.normal(KEY, (4, 20, 16)) * 3
+    caps = IX.capsule_routing(p, hist, n_interests=4, n_iters=3)
+    norms = np.linalg.norm(np.asarray(caps), axis=-1)
+    assert (norms < 1.0 + 1e-5).all()
+
+
+# -------------------------------------------------------------------- moe
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(2, 4), st.integers(4, 16))
+def test_moe_combine_weights_sum_to_one(top_k, seq):
+    p = M.init_moe(KEY, 16, 32, 8, top_k)
+    x = jax.random.normal(KEY, (2, seq, 16))
+    y, aux = M.apply_moe(p, x, top_k=top_k, capacity_factor=8.0)  # no drops
+    assert y.shape == x.shape
+    assert float(aux["dropped_frac"]) < 1e-6
+    assert np.isfinite(np.asarray(y)).all()
+
+
+def test_moe_capacity_drops_overflow():
+    p = M.init_moe(KEY, 8, 16, 4, 1)
+    x = jnp.ones((1, 64, 8))            # identical tokens → one expert hot
+    y, aux = M.apply_moe(p, x, top_k=1, capacity_factor=0.25)
+    assert float(aux["dropped_frac"]) > 0.5
+
+
+# --------------------------------------------------------------- attention
+
+
+def test_gqa_matches_mha_when_kv_equal():
+    d, h, hd, s, b = 32, 4, 8, 10, 2
+    p = A.init_attention(KEY, d, h, h, hd)
+    x = jax.random.normal(KEY, (b, s, d))
+    out = A.attention(p, x, n_heads=h, n_kv_heads=h, head_dim=hd, causal=True)
+    assert out.shape == (b, s, d)
+
+
+def test_decode_matches_full_attention():
+    """Token-by-token decode must equal the full causal forward."""
+    d, hq, hkv, hd, s, b = 32, 4, 2, 8, 6, 2
+    p = A.init_attention(KEY, d, hq, hkv, hd)
+    freqs = A.rope_freqs(hd)
+    x = jax.random.normal(KEY, (b, s, d))
+    full = A.attention(p, x, n_heads=hq, n_kv_heads=hkv, head_dim=hd,
+                       causal=True, freqs=freqs)
+    cache = A.init_kv_cache(b, s, hkv, hd)
+    outs = []
+    for t in range(s):
+        o, cache = A.decode_attention(p, x[:, t:t + 1], cache, n_heads=hq,
+                                      n_kv_heads=hkv, head_dim=hd, freqs=freqs)
+        outs.append(o)
+    dec = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(dec),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_flash_equals_dense_causal():
+    b, s, hq, hkv, d = 2, 256, 4, 2, 16
+    q = jax.random.normal(KEY, (b, s, hq, d))
+    k = jax.random.normal(jax.random.fold_in(KEY, 1), (b, s, hkv, d))
+    v = jax.random.normal(jax.random.fold_in(KEY, 2), (b, s, hkv, d))
+    mask = jnp.tril(jnp.ones((s, s), bool))[None, None]
+    dense = A._sdpa(q, k, v, mask)
+    fl = A.flash_sdpa(q, k, v, causal=True, q_chunk=64, kv_chunk=64)
+    np.testing.assert_allclose(np.asarray(dense), np.asarray(fl),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_rope_preserves_norm_and_relative_phase():
+    freqs = A.rope_freqs(8)
+    x = jax.random.normal(KEY, (1, 4, 2, 8))
+    r = A.apply_rope(x, jnp.arange(4), freqs)
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(r), axis=-1),
+                               np.linalg.norm(np.asarray(x), axis=-1),
+                               rtol=1e-5)
+    # dot(q_i, k_j) depends only on i - j
+    q = jnp.ones((1, 8, 1, 8))
+    k = jnp.ones((1, 8, 1, 8))
+    qr = A.apply_rope(q, jnp.arange(8), freqs)[0, :, 0]
+    kr = A.apply_rope(k, jnp.arange(8), freqs)[0, :, 0]
+    d1 = float(qr[3] @ kr[1])
+    d2 = float(qr[5] @ kr[3])
+    assert abs(d1 - d2) < 1e-4
+
+
+# -------------------------------------------------------------------- rnn
+
+
+def test_gru_matches_manual_step():
+    p = R.init_gru(KEY, 4, 6)
+    xs = jax.random.normal(KEY, (2, 5, 4))
+    hs = R.gru(p, xs)
+    assert hs.shape == (2, 5, 6)
+    # AUGRU with zero attention == frozen state
+    h_frozen = R.augru(p, xs, jnp.zeros((2, 5)))
+    np.testing.assert_allclose(np.asarray(h_frozen), np.zeros((2, 6)), atol=1e-6)

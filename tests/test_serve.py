@@ -1,0 +1,87 @@
+"""Live serving runtime: split/execute/complete, bucketing, online control."""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.serve.batching import bucket_for, pad_batch, slice_result
+from repro.serve.runtime import OnlineController, ServingRuntime
+
+
+def test_bucketing():
+    assert bucket_for(1) == 1
+    assert bucket_for(3) == 4
+    assert bucket_for(64) == 64
+    assert bucket_for(65) == 128
+    assert bucket_for(5000, max_bucket=1024) == 1024
+
+
+def test_pad_and_slice_roundtrip():
+    b = {"x": jnp.arange(6.0).reshape(3, 2)}
+    p = pad_batch(b, 8)
+    assert p["x"].shape == (8, 2)
+    out = slice_result(p, 3)
+    np.testing.assert_array_equal(np.asarray(out["x"]), np.asarray(b["x"]))
+
+
+def _runtime(batch_size=32, n_workers=2):
+    w = jnp.ones((4, 1)) * 0.5
+
+    @jax.jit
+    def apply_fn(batch):
+        return batch["x"] @ w
+
+    return ServingRuntime(apply_fn, n_workers=n_workers, batch_size=batch_size)
+
+
+def test_runtime_completes_queries():
+    rt = _runtime()
+    try:
+        rng = np.random.default_rng(0)
+        for qid in range(20):
+            size = int(rng.integers(1, 200))
+            rt.submit(qid, {"x": jnp.ones((size, 4))}, size)
+        rt.drain(timeout=60)
+        recs = rt.completed()
+        assert len(recs) == 20
+        assert all(r.latency_ms > 0 for r in recs)
+    finally:
+        rt.shutdown()
+
+
+def test_runtime_splits_by_batch_size():
+    rt = _runtime(batch_size=16)
+    try:
+        rt.submit(0, {"x": jnp.ones((100, 4))}, 100)   # → 7 requests
+        rt.drain(timeout=60)
+        assert len(rt.completed()) == 1
+    finally:
+        rt.shutdown()
+
+
+def test_online_controller_steps_down_on_sla_violation():
+    rt = _runtime(batch_size=64)
+    ctl = OnlineController(rt, sla_ms=0.0001, window=5)   # impossible SLA
+    try:
+        for qid in range(10):
+            rt.submit(qid, {"x": jnp.ones((64, 4))}, 64)
+        rt.drain(timeout=60)
+        ctl.step()
+        assert rt.batch_size < 64                          # stepped down
+    finally:
+        rt.shutdown()
+
+
+def test_online_controller_steps_up_when_headroom():
+    rt = _runtime(batch_size=16)
+    ctl = OnlineController(rt, sla_ms=1e6, window=5)       # infinite headroom
+    try:
+        for qid in range(10):
+            rt.submit(qid, {"x": jnp.ones((16, 4))}, 16)
+        rt.drain(timeout=60)
+        ctl.step()
+        assert rt.batch_size > 16
+    finally:
+        rt.shutdown()

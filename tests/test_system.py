@@ -1,0 +1,108 @@
+"""End-to-end behaviour tests for the whole system.
+
+1. Training reduces loss on planted-signal data (recsys, LM, GNN).
+2. DeepRecSched (full pipeline: measured curves → simulator → hill-climb)
+   beats the paper's static baseline.
+3. Roofline parsing on a real compiled module.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.core.latency_model import TableDeviceModel
+from repro.core.scheduler import static_baseline, tune
+from repro.core.simulator import SchedulerConfig, max_qps_under_sla
+from repro.data import synthetic as syn
+from repro.models import gnn, lm, recsys
+from repro.train import optim
+from repro.train.loop import train
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _stream(make_batch):
+    while True:
+        yield make_batch()
+
+
+def test_train_recsys_loss_decreases():
+    cfg = configs.get("dlrm-rmc1").smoke_config
+    params = recsys.init(KEY, cfg)
+    rng = np.random.default_rng(0)
+    batches = _stream(lambda: syn.recsys_batch(rng, cfg, 64))
+    first = float(recsys.loss_fn(params, cfg, syn.recsys_batch(
+        np.random.default_rng(1), cfg, 512)))
+    state = train(lambda p, b: recsys.loss_fn(p, cfg, b), optim.adamw(1e-2),
+                  params, batches, num_steps=60, log_every=0)
+    last = float(recsys.loss_fn(state.params, cfg, syn.recsys_batch(
+        np.random.default_rng(1), cfg, 512)))
+    assert last < first - 0.02, (first, last)
+
+
+def test_train_lm_loss_decreases():
+    cfg = configs.get("qwen2-0.5b").smoke_config
+    params = lm.init(KEY, cfg)
+    rng = np.random.default_rng(0)
+    batches = _stream(lambda: syn.lm_batch(rng, cfg, 8, 32))
+    eval_b = syn.lm_batch(np.random.default_rng(1), cfg, 16, 32)
+    first = float(lm.loss_fn(params, cfg, eval_b))
+    state = train(lambda p, b: lm.loss_fn(p, cfg, b), optim.adamw(3e-3),
+                  params, batches, num_steps=50, log_every=0)
+    last = float(lm.loss_fn(state.params, cfg, eval_b))
+    assert last < first - 0.3, (first, last)     # Markov structure is learnable
+
+
+def test_train_gnn_accuracy_improves():
+    cfg = configs.get("gcn-cora").smoke_config
+    params = gnn.init(KEY, cfg)
+    rng = np.random.default_rng(0)
+    g = syn.random_graph(rng, 200, 1600, cfg.d_feat, cfg.n_classes)
+
+    def acc(p):
+        logits = gnn.forward(p, cfg, g["x"], g["edge_index"])
+        return float((jnp.argmax(logits, -1) == g["labels"]).mean())
+
+    a0 = acc(params)
+    state = train(lambda p, b: gnn.loss_fn(p, cfg, b), optim.adamw(5e-2),
+                  params, _stream(lambda: g), num_steps=40, log_every=0)
+    assert acc(state.params) > max(a0 + 0.2, 0.5)
+
+
+def test_deeprecsched_beats_static_end_to_end():
+    """The headline reproduction at test scale: tuned vs static ≥ 1.2× (the
+    full benchmark shows ~2× across the 8-model suite; here one model, few
+    queries, coarse search)."""
+    cpu = TableDeviceModel(np.array([1., 4, 16, 64, 256, 1024]),
+                           np.array([.0008, .001, .0018, .0045, .015, .058]))
+    sla = 100.0
+    b0 = static_baseline(1000, 40)
+    q0 = max_qps_under_sla(cpu, SchedulerConfig(batch_size=b0), sla,
+                           n_queries=800, iters=6)
+    r = tune(cpu, sla, n_queries=800)
+    assert r.qps > 1.2 * q0, (r.qps, q0)
+
+
+def test_roofline_parses_compiled_module():
+    from repro.roofline import analysis as ra
+    def f(x, w):
+        return jnp.tanh(x @ w).sum()
+    comp = jax.jit(f).lower(jnp.ones((128, 64)), jnp.ones((64, 32))).compile()
+    rf = ra.from_compiled(comp, chips=1, model_flops=2 * 128 * 64 * 32)
+    assert rf.flops > 0
+    assert rf.t_compute > 0 and rf.t_memory > 0
+    assert rf.bottleneck in ("compute", "memory", "collective")
+
+
+def test_collective_bytes_parser():
+    from repro.roofline.analysis import collective_bytes
+    hlo = """
+  %ar = f32[1024,256]{1,0} all-reduce(%x), channel_id=1, replica_groups=[2,8]<=[16], to_apply=%add
+  %ag = bf16[512,128]{1,0} all-gather(%y), replica_groups=[4,4]<=[16], dimensions={0}
+  %cp = f32[64]{0} collective-permute(%z), source_target_pairs={{0,1}}
+"""
+    out = collective_bytes(hlo)
+    assert out["all-reduce"] == 2 * 1024 * 256 * 4 * 7 // 8
+    assert out["all-gather"] == 512 * 128 * 2 * 3 // 4
+    assert out["collective-permute"] == 64 * 4

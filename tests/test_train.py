@@ -1,0 +1,173 @@
+"""Optimizers, checkpointing (incl. preemption + corruption), microbatching,
+gradient compression."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.train import checkpoint as ck
+from repro.train import grad_compress as gc
+from repro.train import optim
+from repro.train.loop import make_train_step, train
+from repro.train.microbatch import accumulated_grads
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ------------------------------------------------------------- optimizers
+
+
+@pytest.mark.parametrize("opt", [optim.sgd(0.1), optim.sgd(0.05, momentum=0.9),
+                                 optim.adagrad(0.5), optim.adamw(0.05)])
+def test_optimizer_minimizes_quadratic(opt):
+    params = {"w": jnp.array([3.0, -2.0])}
+    state = opt.init(params)
+    for _ in range(200):
+        grads = {"w": 2 * params["w"]}
+        params, state = opt.update(grads, state, params)
+    assert float(jnp.abs(params["w"]).max()) < 0.05
+
+
+def test_combined_routes_by_path():
+    params = {"tables": jnp.ones(4), "mlp": jnp.ones(4)}
+    opt = optim.combined(lambda p: "tables" in str(p),
+                         optim.sgd(1.0), optim.sgd(0.0))
+    state = opt.init(params)
+    new, _ = opt.update({"tables": jnp.ones(4), "mlp": jnp.ones(4)}, state, params)
+    assert float(new["tables"][0]) == 0.0          # lr 1 applied
+    assert float(new["mlp"][0]) == 1.0             # lr 0 applied
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full(4, 10.0)}
+    c = optim.clip_by_global_norm(g, 1.0)
+    assert abs(float(optim.global_norm(c)) - 1.0) < 1e-5
+
+
+# ------------------------------------------------------------ microbatch
+
+
+def test_accumulated_grads_match_full_batch():
+    w = jnp.array([1.0, 2.0])
+    batch = {"x": jnp.arange(8.0).reshape(8, 1), "y": jnp.ones((8,))}
+
+    def loss(params, b):
+        pred = (b["x"] * params[0] + params[1])[:, 0]
+        return ((pred - b["y"]) ** 2).mean()
+
+    l1, g1 = accumulated_grads(loss, w, batch, 1)
+    l4, g4 = accumulated_grads(loss, w, batch, 4)
+    np.testing.assert_allclose(float(l1), float(l4), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(g4), rtol=1e-5)
+
+
+# ------------------------------------------------------------ checkpoint
+
+
+def _tree():
+    return {"w": jnp.arange(6.0).reshape(2, 3), "b": jnp.ones(3),
+            "nested": {"t": jnp.zeros((4,), jnp.int32)}}
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    t = _tree()
+    ck.save(str(tmp_path), 5, t)
+    restored, step = ck.restore(str(tmp_path), t)
+    assert step == 5
+    for a, b in zip(jax.tree_util.tree_leaves(t),
+                    jax.tree_util.tree_leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_retention_and_latest(tmp_path):
+    t = _tree()
+    for s in (1, 2, 3, 4, 5):
+        ck.save(str(tmp_path), s, t, keep=2)
+    assert ck.all_steps(str(tmp_path)) == [4, 5]
+    assert ck.latest_step(str(tmp_path)) == 5
+
+
+def test_checkpoint_detects_corruption(tmp_path):
+    t = _tree()
+    path = ck.save(str(tmp_path), 1, t)
+    npz = os.path.join(path, "arrays.npz")
+    data = dict(np.load(npz))
+    data["leaf_00000"] = data["leaf_00000"] + 1
+    np.savez(npz, **data)
+    with pytest.raises(IOError, match="checksum"):
+        ck.restore(str(tmp_path), t)
+
+
+def test_preemption_resume_bit_exact(tmp_path):
+    """Kill training at step 7, resume, reach the same state as an
+    uninterrupted run (fault tolerance contract)."""
+    def batches():
+        rng = np.random.default_rng(42)
+        while True:
+            x = rng.normal(size=(16, 4)).astype(np.float32)
+            yield {"x": jnp.asarray(x),
+                   "y": jnp.asarray(x.sum(1, keepdims=True))}
+
+    def loss(params, b):
+        return ((b["x"] @ params["w"] - b["y"]) ** 2).mean()
+
+    init = {"w": jnp.zeros((4, 1))}
+    opt = optim.adamw(0.01)
+
+    # uninterrupted 12 steps
+    full = train(loss, opt, init, batches(), num_steps=12, ckpt_dir=None,
+                 log_every=0)
+    # interrupted: run 7 (ckpt at 5), "crash", resume to 12
+    d1 = str(tmp_path / "ck")
+    train(loss, opt, init, batches(), num_steps=7, ckpt_dir=d1, ckpt_every=5,
+          log_every=0)
+    # resume skips the first `start` batches? No: data stream is stateless
+    # per-step here; emulate by re-feeding the same stream and letting the
+    # loop fast-forward.
+    def batches_from(start):
+        g = batches()
+        for _ in range(start):
+            next(g)
+        return g
+    resumed = train(loss, opt, init, batches_from(7), num_steps=12,
+                    ckpt_dir=d1, ckpt_every=5, log_every=0)
+    np.testing.assert_allclose(np.asarray(full.params["w"]),
+                               np.asarray(resumed.params["w"]),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_nan_guard_skips_update():
+    def loss(params, b):
+        return jnp.where(b["bad"], jnp.nan, (params["w"] ** 2).sum())
+
+    step = make_train_step(loss, optim.sgd(0.1), donate=False)
+    params = {"w": jnp.array([1.0])}
+    state = ()
+    p2, state, m = step(params, state, {"bad": jnp.array(True)})
+    assert not bool(m["finite"])
+    np.testing.assert_array_equal(np.asarray(p2["w"]), np.asarray(params["w"]))
+
+
+# -------------------------------------------------------- grad compression
+
+
+def test_quantize_roundtrip_error_bounded():
+    x = jax.random.normal(KEY, (1000,)) * 5
+    q, s = gc.quantize_int8(x)
+    y = gc.dequantize_int8(q, s, x.shape, jnp.float32)
+    err = np.abs(np.asarray(x - y))
+    block_max = np.abs(np.asarray(x)).reshape(-1, 250).max()  # loose bound
+    assert err.max() <= float(np.abs(np.asarray(x)).max()) / 127 + 1e-6
+
+
+def test_error_feedback_accumulates_lost_mass():
+    grads = {"w": jnp.full((300,), 1e-3)}
+    res = gc.init_error_feedback(grads)
+    total = jnp.zeros((300,))
+    for _ in range(50):
+        q, res = gc.compress_grads(grads, res)
+        total = total + gc.decompress_grads(q, grads)["w"]
+    # with EF, the long-run mean of dequantized grads ≈ true grad
+    np.testing.assert_allclose(np.asarray(total) / 50, 1e-3, rtol=0.05)
