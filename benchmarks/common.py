@@ -13,6 +13,10 @@ MODELS = list(PAPER_MODELS)                    # the 8 DeepRecInfra models
 TIERS = ("low", "medium", "high")
 
 N_EXECUTORS = 40                               # paper: 40-core Skylake
+# trace length for the tuning/QPS-search suites; the fast-path simulator
+# makes the full paper-scale 1500-query traces affordable everywhere (the
+# sweeps used to clamp to 600-700 to stay within a benchmark budget)
+N_QUERIES = 1500
 CPU_TDP_W = 125.0
 GPU_TDP_W = 250.0
 

@@ -20,6 +20,7 @@ SUITES = [
     ("fig11_throughput_sla", "benchmarks.throughput_sla"),
     ("fig13_tail_latency", "benchmarks.tail_latency"),
     ("fig14_gpu_fraction", "benchmarks.gpu_fraction"),
+    ("sched_speed", "benchmarks.sched_speed"),
     ("roofline_report", "benchmarks.roofline_report"),
 ]
 

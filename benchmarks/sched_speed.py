@@ -1,0 +1,84 @@
+"""Scheduler-tuning speed: the fast-path simulator + warm-started QPS
+search vs the event-driven reference.
+
+Three measurements (all on measured CPU curves):
+  * raw simulator throughput (sims/sec) per engine on a fixed DLRM-RMC1
+    workload at ``n_queries=1500``;
+  * ``tune()`` wall-clock, fast path vs reference, on DLRM-RMC1 at the
+    medium SLA tier — the acceptance bar is ≥ 10×;
+  * fast-path ``max_qps_under_sla`` vs the reference for all 8 paper
+    models — must agree within 5%.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import (MODELS, N_EXECUTORS, N_QUERIES, cpu_curves,
+                               emit, sla)
+from repro.core.query_gen import PRODUCTION, queries_from_arrays, sample_trace
+from repro.core.scheduler import tune
+from repro.core.simulator import (SchedulerConfig, max_qps_under_sla,
+                                  simulate, simulate_arrays)
+
+
+def _sims_per_sec(fn, min_time: float = 1.0, min_reps: int = 3) -> float:
+    reps, t0 = 0, time.perf_counter()
+    while reps < min_reps or time.perf_counter() - t0 < min_time:
+        fn()
+        reps += 1
+    return reps / (time.perf_counter() - t0)
+
+
+def main() -> None:
+    curves = cpu_curves()
+    cpu = curves["dlrm-rmc1"]
+    target = sla("dlrm-rmc1", "medium")
+    cfg = SchedulerConfig(batch_size=8, n_executors=N_EXECUTORS)
+
+    # --- raw simulator throughput on one workload
+    times, sizes = sample_trace(np.random.default_rng(0), N_QUERIES, PRODUCTION)
+    arrivals = times / 2000.0                    # a mid-load λ
+    qs = queries_from_arrays(arrivals, sizes)
+    fast_sps = _sims_per_sec(lambda: simulate_arrays(arrivals, sizes, cpu, cfg))
+    ref_sps = _sims_per_sec(lambda: simulate(qs, cpu, cfg, engine="events"))
+    emit("sched_speed/simulate/fast_sims_per_sec", fast_sps,
+         f"n_queries={N_QUERIES}")
+    emit("sched_speed/simulate/events_sims_per_sec", ref_sps,
+         f"speedup={fast_sps / ref_sps:.1f}x")
+
+    # --- tune() wall-clock, fast vs event-driven reference
+    t0 = time.perf_counter()
+    r_fast = tune(cpu, target, n_executors=N_EXECUTORS, n_queries=N_QUERIES)
+    t_fast = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    r_ref = tune(cpu, target, n_executors=N_EXECUTORS, n_queries=N_QUERIES,
+                 engine="events", warm_start=False)
+    t_ref = time.perf_counter() - t0
+    speedup = t_ref / max(t_fast, 1e-9)
+    emit("sched_speed/tune/fast_wallclock_s", t_fast,
+         f"qps={r_fast.qps:.0f};B={r_fast.batch_size}")
+    emit("sched_speed/tune/events_wallclock_s", t_ref,
+         f"qps={r_ref.qps:.0f};B={r_ref.batch_size}")
+    emit("sched_speed/tune/speedup", speedup,
+         f"target>=10x;{'PASS' if speedup >= 10.0 else 'FAIL'}")
+
+    # --- fast vs reference achievable QPS, all 8 models (within 5%)
+    worst = 0.0
+    for arch in MODELS:
+        t = sla(arch, "medium")
+        c = SchedulerConfig(batch_size=8, n_executors=N_EXECUTORS)
+        q_fast = max_qps_under_sla(curves[arch], c, t, n_queries=N_QUERIES)
+        q_ref = max_qps_under_sla(curves[arch], c, t, n_queries=N_QUERIES,
+                                  engine="events")
+        rel = abs(q_fast - q_ref) / max(q_ref, 1e-9)
+        worst = max(worst, rel)
+        emit(f"sched_speed/{arch}/qps_rel_err", rel,
+             f"fast={q_fast:.0f};ref={q_ref:.0f}")
+    emit("sched_speed/max_qps_rel_err_all_models", worst,
+         f"target<=0.05;{'PASS' if worst <= 0.05 else 'FAIL'}")
+
+
+if __name__ == "__main__":
+    main()

@@ -11,12 +11,11 @@ import os
 
 import numpy as np
 
-from benchmarks.common import (ART, CPU_TDP_W, GPU_TDP_W, MODELS, TIERS,
-                               N_EXECUTORS, cpu_curves, emit, gpu_model, sla)
+from benchmarks.common import (ART, CPU_TDP_W, GPU_TDP_W, MODELS, N_QUERIES,
+                               TIERS, N_EXECUTORS, cpu_curves, emit,
+                               gpu_model, sla)
 from repro.core.scheduler import static_baseline, tune
 from repro.core.simulator import SchedulerConfig, max_qps_under_sla
-
-N_QUERIES = 700
 
 
 def main() -> None:

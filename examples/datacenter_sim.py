@@ -31,9 +31,12 @@ def main() -> None:
         cpu = curves[arch]
         sla_ms = SLA_TARGETS[arch].get(args.tier)
         b0 = static_baseline(1000, 40)
+        # tuning runs on the numpy fast-path simulator (no faults there), so
+        # full paper-scale traces are affordable; the realism run below has
+        # faults active and automatically routes to the event-driven engine
         q0 = max_qps_under_sla(cpu, SchedulerConfig(batch_size=b0), sla_ms,
-                               n_queries=600, iters=7)
-        r = tune(cpu, sla_ms, n_queries=600)
+                               n_queries=1500, iters=7)
+        r = tune(cpu, sla_ms, n_queries=1500)
         # production realism: run at 70% capacity with stragglers + hedging
         # + one executor failure; verify the SLA still holds
         qs = generate_queries(np.random.default_rng(0), 0.7 * r.qps, 2000)

@@ -1,3 +1,20 @@
 """DeepRecSys core: DeepRecInfra (query gen, device models, simulator) and
 DeepRecSched (hill-climbing scheduler)."""
-from repro.core import costs, infra, latency_model, query_gen, scheduler, simulator  # noqa: F401
+import importlib
+
+from repro.core import latency_model, query_gen, scheduler, simulator  # noqa: F401
+
+# `costs` and `infra` pull in jax via the model definitions; import them
+# lazily (PEP 562) so the numpy-only tuning stack — including the spawned
+# workers of `tune(workers=N)` — stays jax-free and fast to start
+_LAZY = ("costs", "infra")
+
+
+def __getattr__(name: str):
+    if name in _LAZY:
+        return importlib.import_module(f"repro.core.{name}")
+    raise AttributeError(f"module 'repro.core' has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(list(globals()) + list(_LAZY))

@@ -25,6 +25,8 @@ import numpy as np
 class DeviceModel(Protocol):
     def latency(self, batch: int) -> float: ...
 
+    def latency_batch(self, batches: np.ndarray) -> np.ndarray: ...
+
 
 @dataclasses.dataclass
 class TableDeviceModel:
@@ -32,19 +34,40 @@ class TableDeviceModel:
     batches: np.ndarray            # sorted, >=1
     seconds: np.ndarray
 
+    def __post_init__(self):
+        self.batches = np.asarray(self.batches, float)
+        self.seconds = np.asarray(self.seconds, float)
+        # precompute the interpolation axes once — latency() used to redo
+        # both np.log calls on every scalar lookup, which dominated the
+        # simulator's service-time cost before results were table-cached
+        self._log_b = np.log(self.batches)
+        self._log_s = np.log(self.seconds)
+        # final marginal cost per item, for extrapolation past the curve
+        # (flat for degenerate single-point curves, which used to construct
+        # fine and only crash when extrapolating)
+        if len(self.batches) >= 2:
+            self._tail_slope = ((self.seconds[-1] - self.seconds[-2])
+                                / (self.batches[-1] - self.batches[-2]))
+        else:
+            self._tail_slope = 0.0
+
     def latency(self, batch: int) -> float:
         b = max(int(batch), 1)
-        lb = np.log(b)
-        lx = np.log(self.batches)
-        ly = np.log(self.seconds)
         if b <= self.batches[0]:
             return float(self.seconds[0])
         if b >= self.batches[-1]:
-            # extrapolate with the final marginal cost per item
-            slope = ((self.seconds[-1] - self.seconds[-2])
-                     / (self.batches[-1] - self.batches[-2]))
-            return float(self.seconds[-1] + slope * (b - self.batches[-1]))
-        return float(np.exp(np.interp(lb, lx, ly)))
+            return float(self.seconds[-1]
+                         + self._tail_slope * (b - self.batches[-1]))
+        return float(np.exp(np.interp(np.log(b), self._log_b, self._log_s)))
+
+    def latency_batch(self, batches: np.ndarray) -> np.ndarray:
+        """Vectorized ``latency`` over an int array of batch sizes."""
+        b = np.maximum(np.asarray(batches, float), 1.0)
+        out = np.exp(np.interp(np.log(b), self._log_b, self._log_s))
+        out = np.where(b <= self.batches[0], self.seconds[0], out)
+        return np.where(
+            b >= self.batches[-1],
+            self.seconds[-1] + self._tail_slope * (b - self.batches[-1]), out)
 
     def to_json(self) -> dict:
         return {"batches": self.batches.tolist(), "seconds": self.seconds.tolist()}
@@ -72,6 +95,40 @@ class AnalyticalDeviceModel:
         xfer = (b * self.in_bytes_per_sample) / self.xfer_bw
         return self.overhead_s + xfer + max(compute, memory)
 
+    def latency_batch(self, batches: np.ndarray) -> np.ndarray:
+        """Vectorized ``latency`` over an int array of batch sizes."""
+        b = np.maximum(np.asarray(batches, float), 1.0)
+        compute = (b * self.flops_per_sample) / self.peak_flops
+        memory = (b * self.mem_bytes_per_sample) / self.mem_bw
+        xfer = (b * self.in_bytes_per_sample) / self.xfer_bw
+        return self.overhead_s + xfer + np.maximum(compute, memory)
+
+
+def service_time_table(device: DeviceModel, up_to: int) -> np.ndarray:
+    """Latency for every batch size ``1..up_to``, indexed by batch size
+    (slot 0 is unused).
+
+    The fast-path simulator looks service times up by batch size for whole
+    request arrays at once; this computes the table once per device via
+    ``latency_batch`` and caches it on the instance, growing geometrically
+    so repeated calls with different ``up_to`` don't recompute.
+    """
+    up_to = max(int(up_to), 1)
+    tab = getattr(device, "_svc_table", None)
+    if tab is None or len(tab) <= up_to:
+        n = 1 << (up_to - 1).bit_length()
+        lb = getattr(device, "latency_batch", None)
+        if lb is not None:
+            vals = np.asarray(lb(np.arange(1, n + 1)), float)
+        else:                       # protocol minimum: scalar latency only
+            vals = np.array([device.latency(b) for b in range(1, n + 1)])
+        tab = np.concatenate([[np.inf], vals])
+        try:
+            device._svc_table = tab
+        except AttributeError:      # frozen custom model → recompute per call
+            pass
+    return tab
+
 
 # hardware-constant presets
 GPU_1080TI = dict(peak_flops=11.3e12, mem_bw=484e9, xfer_bw=12e9,
@@ -96,8 +153,13 @@ class ContentionModel:
     """latency multiplier vs #busy executors (inclusive-cache contention)."""
     factor_at_full: float = 1.0    # 1.0 → no contention (Skylake-like)
 
+    def is_noop(self) -> bool:
+        """True when every multiplier is 1.0 (the fast-path eligibility
+        gate asks this instead of re-deriving the rule)."""
+        return self.factor_at_full <= 1.0
+
     def multiplier(self, busy: int, total: int) -> float:
-        if total <= 1 or self.factor_at_full <= 1.0:
+        if total <= 1 or self.is_noop():
             return 1.0
         frac = busy / total
         return 1.0 + (self.factor_at_full - 1.0) * frac

@@ -94,7 +94,32 @@ def generate_queries(rng: np.random.Generator, qps: float, n: int,
                      arrival: ArrivalDist = ArrivalDist()) -> list[Query]:
     times = np.cumsum(arrival.inter_arrivals(rng, qps, n))
     sizes = size_dist.sample(rng, n)
-    return [Query(i, float(t), int(s)) for i, (t, s) in enumerate(zip(times, sizes))]
+    return queries_from_arrays(times, sizes)
+
+
+def sample_trace(rng: np.random.Generator, n: int,
+                 size_dist: SizeDist = PRODUCTION,
+                 arrival: ArrivalDist = ArrivalDist()
+                 ) -> tuple[np.ndarray, np.ndarray]:
+    """One reusable trace draw: (unit-rate arrival times, sizes).
+
+    The arrival-time array for rate λ is ``times / λ`` — exact for every
+    supported inter-arrival kind, since each sampler scales multiplicatively
+    in its mean (exponential and fixed trivially; lognormal because a mean
+    change only shifts μ, i.e. multiplies the sample).  The QPS search
+    draws the trace once per seed and rescales per bisection step instead
+    of regenerating, and draws in the same rng order as
+    ``generate_queries`` so sizes match the legacy per-λ regeneration.
+    """
+    times = np.cumsum(arrival.inter_arrivals(rng, 1.0, n))
+    sizes = size_dist.sample(rng, n)
+    return times, sizes
+
+
+def queries_from_arrays(arrivals: np.ndarray, sizes: np.ndarray) -> list[Query]:
+    """Materialize ``Query`` objects for the event-driven engine."""
+    return [Query(i, float(t), int(s))
+            for i, (t, s) in enumerate(zip(arrivals, sizes))]
 
 
 def query_stream(seed: int, qps: float, size_dist: SizeDist = PRODUCTION,

@@ -8,10 +8,26 @@
 The static production baseline splits the *largest* query evenly over all
 executors (batch = max_size / n_executors — e.g. 25 on a 40-core Skylake),
 which is what the paper doubles.
+
+Tuning-loop fast paths (all preserving the climb's selection rule):
+  * warm start — neighboring knob points have near-identical achievable
+    QPS, so each ``max_qps_under_sla`` call brackets around the previous
+    point's answer instead of doubling up from λ=1 (``warm_start=True``);
+  * parallel ladder — ``workers=N`` evaluates whole ladders eagerly in a
+    process pool (each point cold, no warm-start hints — pool points are
+    independent) and then replays the patience walk over the results in
+    ladder order, so the chosen config matches a sequential
+    ``warm_start=False`` climb exactly; vs a warm-started climb the picked
+    knob can differ only when two ladder points' QPS are within the
+    bracket's warm-start perturbation (≲5%).  The pool uses the spawn
+    start method, so a script calling ``tune(workers=N)`` needs the usual
+    ``if __name__ == "__main__":`` guard.
 """
 from __future__ import annotations
 
 import dataclasses
+import multiprocessing
+from concurrent.futures import ProcessPoolExecutor
 from typing import Sequence
 
 from repro.core.latency_model import ContentionModel, DeviceModel
@@ -33,53 +49,90 @@ def static_baseline(max_size: int, n_executors: int) -> int:
     return max(1, max_size // n_executors)
 
 
+def _ladder_point(args) -> float:
+    """Module-level worker so ladder points pickle into a process pool."""
+    (cpu, cfg, sla_ms, accel, size_dist, contention, n_queries, seed,
+     engine) = args
+    return max_qps_under_sla(cpu, cfg, sla_ms, accel=accel,
+                             size_dist=size_dist, contention=contention,
+                             n_queries=n_queries, seed=seed, engine=engine)
+
+
+def _climb(values: Sequence, evaluate, knob: str, trace: list,
+           patience: int) -> tuple:
+    """Patience-bounded hill climb; ``evaluate(v, idx, hint)`` → qps."""
+    best_v, best_q = values[0], evaluate(values[0], 0, None)
+    trace.append((knob, best_v, best_q))
+    prev_q, misses = best_q, 0
+    for i, v in enumerate(values[1:], start=1):
+        q = evaluate(v, i, prev_q)
+        trace.append((knob, v, q))
+        prev_q = q
+        if q > best_q:
+            best_v, best_q, misses = v, q, 0
+        else:
+            misses += 1
+            if misses > patience:
+                break
+    return best_v, best_q
+
+
 def tune(cpu: DeviceModel, sla_ms: float, *, accel: DeviceModel | None = None,
          n_executors: int = 40, size_dist: SizeDist = PRODUCTION,
          contention: ContentionModel | None = None,
          batch_ladder: Sequence[int] = BATCH_LADDER,
-         patience: int = 1, n_queries: int = 1500, seed: int = 0) -> TuneResult:
+         patience: int = 1, n_queries: int = 1500, seed: int = 0,
+         engine: str = "auto", warm_start: bool = True,
+         workers: int | None = None) -> TuneResult:
     """Run DeepRecSched's two hill climbs; returns the tuned config."""
-    trace = []
+    trace: list[tuple] = []
 
-    def qps_for(batch: int, thr: int | None) -> float:
-        cfg = SchedulerConfig(batch_size=batch, offload_threshold=thr,
-                              n_executors=n_executors)
-        q = max_qps_under_sla(cpu, cfg, sla_ms, accel=accel,
-                              size_dist=size_dist, contention=contention,
-                              n_queries=n_queries, seed=seed)
-        return q
+    def point_cfg(batch: int, thr: int | None) -> SchedulerConfig:
+        return SchedulerConfig(batch_size=batch, offload_threshold=thr,
+                               n_executors=n_executors)
 
-    # ---- knob 1: batch size (CPU path), no offload during this climb
-    best_b, best_q = batch_ladder[0], qps_for(batch_ladder[0], None)
-    trace.append(("batch", best_b, best_q))
-    misses = 0
-    for b in batch_ladder[1:]:
-        q = qps_for(b, None)
-        trace.append(("batch", b, q))
-        if q > best_q:
-            best_b, best_q, misses = b, q, 0
-        else:
-            misses += 1
-            if misses > patience:
-                break
+    def point_args(batch: int, thr: int | None):
+        return (cpu, point_cfg(batch, thr), sla_ms, accel, size_dist,
+                contention, n_queries, seed, engine)
 
-    if accel is None:
+    def run_ladder(knob: str, values: Sequence, make_cfg, pool) -> tuple:
+        if pool is not None:
+            args = [point_args(*make_cfg(v)) for v in values]
+            results = list(pool.map(_ladder_point, args))
+            return _climb(values, lambda v, i, hint: results[i],
+                          knob, trace, patience)
+        def evaluate(v, i, hint):
+            return max_qps_under_sla(
+                cpu, point_cfg(*make_cfg(v)), sla_ms, accel=accel,
+                size_dist=size_dist, contention=contention,
+                n_queries=n_queries, seed=seed,
+                hint=hint if warm_start else None, engine=engine)
+        return _climb(values, evaluate, knob, trace, patience)
+
+    # one pool for both climbs — spawn worker startup is the fixed cost of
+    # parallel mode, so pay it once (spawn, not fork: callers usually have
+    # jax loaded, which is multithreaded, and forking that can deadlock)
+    pool = None
+    if workers and workers > 1:
+        pool = ProcessPoolExecutor(
+            max_workers=workers,
+            mp_context=multiprocessing.get_context("spawn"))
+    try:
+        # ---- knob 1: batch size (CPU path), no offload during this climb
+        best_b, best_q = run_ladder("batch", list(batch_ladder),
+                                    lambda b: (b, None), pool)
+
+        if accel is None:
+            return TuneResult(best_b, None, best_q, trace)
+
+        # ---- knob 2: offload threshold (paper: start at 1 = all offloaded)
+        thr_ladder = [1, 25, 50, 100, 150, 200, 300, 450, 700,
+                      size_dist.max_size + 1]
+        best_t, best_tq = run_ladder("threshold", thr_ladder,
+                                     lambda t: (best_b, t), pool)
+        if best_tq >= best_q:
+            return TuneResult(best_b, best_t, best_tq, trace)
         return TuneResult(best_b, None, best_q, trace)
-
-    # ---- knob 2: offload threshold (paper: start at 1 = all accelerated)
-    thr_ladder = [1, 25, 50, 100, 150, 200, 300, 450, 700, size_dist.max_size + 1]
-    best_t, best_tq = thr_ladder[0], qps_for(best_b, thr_ladder[0])
-    trace.append(("threshold", best_t, best_tq))
-    misses = 0
-    for t in thr_ladder[1:]:
-        q = qps_for(best_b, t)
-        trace.append(("threshold", t, q))
-        if q > best_tq:
-            best_t, best_tq, misses = t, q, 0
-        else:
-            misses += 1
-            if misses > patience:
-                break
-    if best_tq >= best_q:
-        return TuneResult(best_b, best_t, best_tq, trace)
-    return TuneResult(best_b, None, best_q, trace)
+    finally:
+        if pool is not None:
+            pool.shutdown()

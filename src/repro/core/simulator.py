@@ -1,4 +1,4 @@
-"""Discrete-event simulator of an at-scale recommendation inference tier.
+"""Simulator of an at-scale recommendation inference tier, two engines.
 
 This is DeepRecInfra's serving model: queries arrive Poisson with
 production-tail sizes, a splitter turns each query into ⌈size/B⌉ requests of
@@ -7,12 +7,23 @@ of executors, and (optionally) queries ≥ an offload threshold run whole on an
 accelerator.  Query latency = last-request completion − arrival; the system
 metric is achievable QPS under a p95 SLA.
 
-Fault tolerance / production realism knobs:
-  * stragglers — a fraction of requests run a multiplier slower;
-  * hedging — requests still running past ``hedge_factor ×`` the expected
-    service time are duplicated on a free executor, first copy wins;
-  * executor failure — executors die at given times; their in-flight
-    requests are re-queued after a detection timeout (at-least-once).
+Engines (``simulate(..., engine=...)``):
+  * ``"fast"`` — numpy fast path for the no-fault / no-hedge / no-contention
+    case (the case every DeepRecSched tuner call hits).  All queries are
+    split into flat request arrays up front, service times come from a
+    precomputed per-device table, and the FCFS executor pool is advanced
+    with vectorized slot assignment (``_advance_pool``) instead of
+    per-event heap operations.
+  * ``"events"`` — the discrete-event reference implementation, required for
+    the production-realism knobs:
+      - stragglers — a fraction of requests run a multiplier slower;
+      - hedging — requests still running past ``hedge_factor ×`` the
+        expected service time are duplicated, first copy wins;
+      - executor failure — executors die at given times; their in-flight
+        requests are re-queued after a detection timeout (at-least-once);
+      - contention — busy-executor-dependent service-time inflation.
+  * ``"auto"`` (default) — fast path when no such knob is active, else the
+    event-driven reference.
 """
 from __future__ import annotations
 
@@ -24,9 +35,10 @@ from typing import Sequence
 
 import numpy as np
 
-from repro.core.latency_model import ContentionModel, DeviceModel
-from repro.core.query_gen import (PRODUCTION, ArrivalDist, Query, SizeDist,
-                                  generate_queries)
+from repro.core.latency_model import (ContentionModel, DeviceModel,
+                                      service_time_table)
+from repro.core.query_gen import (PRODUCTION, Query, SizeDist,
+                                  queries_from_arrays, sample_trace)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -69,14 +81,173 @@ class SimResult:
         return self.p95_ms <= sla_ms
 
 
-# event kinds
+# event kinds (heap tuples sort by (time, kind, ident) — _WAKE sorts after
+# every real event at the same timestamp, like the magic value it replaces)
 _ARRIVAL, _CPU_DONE, _ACC_DONE, _FAIL, _HEDGE_CHECK, _RELEASE = range(6)
+_WAKE = 100                                  # re-try dispatch, no state change
+
+
+def _fast_eligible(contention: ContentionModel | None,
+                   faults: FaultConfig) -> bool:
+    no_contention = contention is None or contention.is_noop()
+    no_faults = (not faults.straggler_frac and not faults.hedge_factor
+                 and not len(faults.fail_times))
+    return no_contention and no_faults
 
 
 def simulate(queries: list[Query], cpu: DeviceModel, cfg: SchedulerConfig,
              *, accel: DeviceModel | None = None,
              contention: ContentionModel | None = None,
-             faults: FaultConfig = FaultConfig(), seed: int = 0) -> SimResult:
+             faults: FaultConfig = FaultConfig(), seed: int = 0,
+             engine: str = "auto") -> SimResult:
+    """Simulate ``queries``; dispatches to the numpy fast path when no
+    fault/contention knob is active (or ``engine`` forces a path)."""
+    if engine not in ("auto", "fast", "events"):
+        raise ValueError(engine)
+    if engine != "events" and _fast_eligible(contention, faults):
+        arrivals = np.array([q.arrival for q in queries], float)
+        sizes = np.array([q.size for q in queries], np.int64)
+        if len(arrivals) and np.any(np.diff(arrivals) < 0):
+            # the fast path's FCFS identities assume arrival order; sort
+            # (stably, preserving FIFO ties) rather than silently mis-queue
+            order = np.argsort(arrivals, kind="stable")
+            arrivals, sizes = arrivals[order], sizes[order]
+        return simulate_arrays(arrivals, sizes, cpu, cfg, accel=accel)
+    if engine == "fast":
+        raise ValueError("fast engine cannot model faults/contention; "
+                         "use engine='auto' or 'events'")
+    return _simulate_events(queries, cpu, cfg, accel=accel,
+                            contention=contention, faults=faults, seed=seed)
+
+
+# ------------------------------------------------------- numpy fast path
+
+
+def _advance_pool(arrivals: np.ndarray, svc: np.ndarray, c: int) -> np.ndarray:
+    """Departure time of each request under FCFS on ``c`` identical servers.
+
+    ``arrivals`` must be nondecreasing and in FIFO order.  Uses the exact
+    identity  S_j = max(a_j, c-th largest of {D_i : i<j})  — with fewer
+    than c predecessors still in the system a server is always free (any
+    queued predecessor would have started already, FCFS is work-conserving).
+
+    Three vectorized regimes, one tight fallback:
+      * c ≥ R        — nobody waits:  D = a + s.
+      * c == 1       — Lindley recursion  D_j = max(a_j, D_{j-1}) + s_j,
+                       solved in closed form with a prefix max.
+      * constant s   — departures are nondecreasing, so the c-th largest
+                       previous departure is D_{j-c} and the recurrence
+                       splits into c independent Lindley chains (this is
+                       the batch_size=1 case, the most request-heavy point
+                       of every DeepRecSched ladder climb).
+      * otherwise    — FIFO pass over a c-slot free-time heap (no global
+                       event heap, no per-event dict churn).
+    """
+    r = len(arrivals)
+    if r == 0:
+        return np.empty(0)
+    if c <= 0:                    # no servers: nothing ever departs
+        return np.full(r, np.nan)
+    if c >= r:
+        return arrivals + svc
+    if c == 1:
+        cum = np.cumsum(svc)
+        slack = arrivals - np.concatenate(([0.0], cum[:-1]))   # a_j − C_{j−1}
+        return np.maximum.accumulate(slack) + cum
+    if svc.min() == svc.max():
+        s = float(svc[0])
+        out = np.empty(r)
+        for k in range(c):                   # c ≈ 40 chains, vectorized inside
+            a = arrivals[k::c]
+            m = np.arange(len(a))
+            out[k::c] = np.maximum.accumulate(a - m * s) + (m + 1) * s
+        return out
+    free = [0.0] * c                         # valid min-heap
+    out = [0.0] * r
+    al, sl = arrivals.tolist(), svc.tolist()
+    heapreplace = heapq.heapreplace
+    for j in range(r):
+        f = free[0]
+        a = al[j]
+        d = (a if a > f else f) + sl[j]
+        heapreplace(free, d)
+        out[j] = d
+    return np.asarray(out)
+
+
+def simulate_arrays(arrivals: np.ndarray, sizes: np.ndarray,
+                    cpu: DeviceModel, cfg: SchedulerConfig,
+                    *, accel: DeviceModel | None = None) -> SimResult:
+    """Fast-path simulation straight from (arrival, size) arrays.
+
+    Semantically identical to the event-driven reference with
+    ``FaultConfig()`` and no contention; ``tests/test_system.py`` asserts
+    the equivalence.  Queries must be sorted by arrival (as produced by
+    ``generate_queries``/``sample_trace``).
+    """
+    n = len(sizes)
+    B = max(cfg.batch_size, 1)
+    thr = cfg.offload_threshold if accel is not None else None
+    sizes = np.asarray(sizes, np.int64)
+    tot_work = float(sizes.sum())
+
+    off = sizes >= thr if thr is not None else np.zeros(n, bool)
+    done = np.full(n, np.nan)     # NaN = never completed (e.g. empty pool)
+    cpu_busy = 0.0
+    acc_work = 0.0
+
+    cpu_idx = np.flatnonzero(~off)
+    if len(cpu_idx):
+        csz = sizes[cpu_idx]
+        carr = arrivals[cpu_idx]
+        n_req = -(-csz // B)                 # ⌈size/B⌉ requests per query
+        # flat request arrays, FIFO order == (arrival, intra-query) order,
+        # exactly the order the event loop enqueues them in
+        group = np.repeat(np.arange(len(cpu_idx)), n_req)
+        bounds = np.cumsum(n_req)
+        req_batch = np.full(int(bounds[-1]), B, np.int64)
+        req_batch[bounds - 1] = csz - (n_req - 1) * B      # remainder request
+        svc_tab = service_time_table(cpu, B)
+        req_svc = svc_tab[req_batch] + cfg.request_overhead_s
+        depart = _advance_pool(carr[group], req_svc, cfg.n_executors)
+        starts = np.concatenate(([0], bounds[:-1]))
+        done[cpu_idx] = np.maximum.reduceat(depart, starts)
+        if cfg.n_executors > 0:
+            cpu_busy = float(req_svc.sum())
+
+    acc_idx = np.flatnonzero(off)
+    if len(acc_idx):
+        asz = sizes[acc_idx]
+        acc_tab = service_time_table(accel, int(asz.max()))
+        done[acc_idx] = _advance_pool(arrivals[acc_idx], acc_tab[asz],
+                                      cfg.n_accelerators)
+        acc_work = float(asz.sum())
+
+    completed = ~np.isnan(done)
+    n_done = int(completed.sum())
+    if n_done == 0:               # matches the reference's all-dropped result
+        return SimResult(0, 0, 0, 0, 0, 0, 0, 0, dropped=n)
+    lats = done[completed] - arrivals[completed]
+    dur = float(done[completed].max()) - float(arrivals[0])
+    return SimResult(
+        qps=n_done / dur,
+        p50_ms=float(np.percentile(lats, 50) * 1e3),
+        p95_ms=float(np.percentile(lats, 95) * 1e3),
+        p99_ms=float(np.percentile(lats, 99) * 1e3),
+        mean_ms=float(lats.mean() * 1e3),
+        cpu_util=cpu_busy / (dur * max(cfg.n_executors, 1)),
+        accel_frac_work=acc_work / max(tot_work, 1.0),
+        n_queries=n_done, dropped=n - n_done)
+
+
+# ------------------------------------------- event-driven reference engine
+
+
+def _simulate_events(queries: list[Query], cpu: DeviceModel,
+                     cfg: SchedulerConfig, *, accel: DeviceModel | None = None,
+                     contention: ContentionModel | None = None,
+                     faults: FaultConfig = FaultConfig(),
+                     seed: int = 0) -> SimResult:
     rng = np.random.default_rng(seed)
     B = max(cfg.batch_size, 1)
     thr = cfg.offload_threshold if accel is not None else None
@@ -221,7 +392,7 @@ def simulate(queries: list[Query], cpu: DeviceModel, cfg: SchedulerConfig,
                     requeued += 1
                     cpu_queue.appendleft((qid, b))
                     heapq.heappush(events, (now + faults.detect_timeout,
-                                            _ARRIVAL + 100, 0))  # wake-up noop
+                                            _WAKE, 0))
         elif kind == _RELEASE:             # hedged original finished: free core
             cpu_free = min(cpu_free + 1, alive)
             dispatch_cpu(now)
@@ -239,7 +410,7 @@ def simulate(queries: list[Query], cpu: DeviceModel, cfg: SchedulerConfig,
         p95_ms=float(np.percentile(lats, 95) * 1e3),
         p99_ms=float(np.percentile(lats, 99) * 1e3),
         mean_ms=float(lats.mean() * 1e3),
-        cpu_util=cpu_busy_time / (dur * cfg.n_executors),
+        cpu_util=cpu_busy_time / (dur * max(cfg.n_executors, 1)),
         accel_frac_work=acc_work / max(tot_work, 1.0),
         n_queries=len(lats), dropped=len(queries) - len(lats),
         hedges=hedges, requeued=requeued)
@@ -254,23 +425,59 @@ def max_qps_under_sla(cpu: DeviceModel, cfg: SchedulerConfig, sla_ms: float,
                       contention: ContentionModel | None = None,
                       n_queries: int = 1500, seed: int = 0,
                       lo: float = 1.0, hi: float | None = None,
-                      iters: int = 9) -> float:
+                      iters: int = 9, hint: float | None = None,
+                      engine: str = "auto") -> float:
     """Largest arrival rate whose p95 latency meets the SLA (the paper's
-    y-axis).  Exponential bracket + bisection on λ."""
-    rng_seed = seed
+    y-axis).  Exponential bracket + bisection on λ.
+
+    The query trace is sampled once per seed: unit-rate arrival times plus
+    sizes, with per-λ traces obtained by rescaling the arrival times — the
+    same distribution as regenerating (numpy inter-arrival samplers scale
+    multiplicatively in the mean), without re-drawing per bisection step.
+    ``hint`` warm-starts the bracket around a known-nearby answer (e.g. the
+    previous knob point of a hill climb) instead of doubling up from ``lo``.
+    """
+    if engine not in ("auto", "fast", "events"):
+        raise ValueError(engine)
+    if engine == "fast" and not _fast_eligible(contention, FaultConfig()):
+        raise ValueError("fast engine cannot model contention; "
+                         "use engine='auto' or 'events'")
+    unit_times, sizes = sample_trace(np.random.default_rng(seed), n_queries,
+                                     size_dist)
+    use_fast = engine != "events" and _fast_eligible(contention, FaultConfig())
+    _memo: dict[float, bool] = {}
 
     def ok(qps: float) -> bool:
-        rng = np.random.default_rng(rng_seed)
-        qs = generate_queries(rng, qps, n_queries, size_dist)
-        r = simulate(qs, cpu, cfg, accel=accel, contention=contention,
-                     seed=rng_seed)
+        hit = _memo.get(qps)
+        if hit is not None:
+            return hit
+        arrivals = unit_times / qps
+        if use_fast:
+            r = simulate_arrays(arrivals, sizes, cpu, cfg, accel=accel)
+        else:
+            r = _simulate_events(queries_from_arrays(arrivals, sizes), cpu,
+                                 cfg, accel=accel, contention=contention,
+                                 seed=seed)
         # sustain guard: with a finite query set the backlog is bounded, so
         # p95 alone can look fine at ANY λ — the system must also actually
         # process at ~the offered rate (completion window ≈ arrival window)
-        return r.meets(sla_ms) and r.dropped == 0 and r.qps >= 0.85 * qps
+        v = r.meets(sla_ms) and r.dropped == 0 and r.qps >= 0.85 * qps
+        _memo[qps] = v
+        return v
 
     if hi is None:
-        hi = lo
+        if hint is not None and hint > lo:
+            if ok(hint):                     # expand upward from the hint
+                lo, hi = hint, hint * 2
+            else:                            # shrink downward to re-bracket,
+                hi = hint                    # never below the caller's floor
+                cand = hint / 2
+                while cand > lo and not ok(cand):
+                    hi = cand
+                    cand /= 2
+                lo = max(cand, lo)
+        else:
+            hi = lo
         while ok(hi) and hi < 4e6:
             lo = hi
             hi *= 2

@@ -40,17 +40,25 @@ def embedding_bag(table: jax.Array, idx: jax.Array, *, mode: str = "sum",
     def out_index(bt, hh, i, idx_ref):
         return (bt, 0)
 
-    def kernel(idx_ref, row_ref, out_ref):
+    def kernel(idx_ref, row_ref, out_ref, comp_ref):
         hh = pl.program_id(1)
         i = pl.program_id(2)
 
         @pl.when((hh == 0) & (i == 0))
         def _init():
             out_ref[...] = jnp.zeros_like(out_ref)
+            comp_ref[...] = jnp.zeros_like(comp_ref)
 
-        # accumulate in f32 (the output buffer dtype) — bf16 accumulation
-        # over H rows loses ~2^-8 per step
-        out_ref[i, :] += row_ref[0, :].astype(jnp.float32)
+        # Kahan-compensated f32 accumulation (comp_ref carries the rounding
+        # error of each partial sum).  Plain running `+=` drifts by an ulp
+        # per step, which shows against the oracle when the H rows nearly
+        # cancel — and bf16 tables would lose ~2^-8 per step uncompensated.
+        row = row_ref[0, :].astype(jnp.float32)
+        y = row - comp_ref[i, :]
+        acc = out_ref[i, :]
+        t = acc + y
+        comp_ref[i, :] = (t - acc) - y
+        out_ref[i, :] = t
 
     out = pl.pallas_call(
         kernel,
@@ -59,6 +67,7 @@ def embedding_bag(table: jax.Array, idx: jax.Array, *, mode: str = "sum",
             grid=grid,
             in_specs=[pl.BlockSpec((1, d), row_index)],
             out_specs=pl.BlockSpec((tile_b, d), out_index),
+            scratch_shapes=[pltpu.VMEM((tile_b, d), jnp.float32)],
         ),
         out_shape=jax.ShapeDtypeStruct((b, d), jnp.float32),
         interpret=interpret,

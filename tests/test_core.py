@@ -1,9 +1,8 @@
-"""DeepRecInfra + DeepRecSched: distribution properties (hypothesis),
-simulator queueing sanity, scheduler optimality."""
-import hypothesis.strategies as st
+"""DeepRecInfra + DeepRecSched: simulator queueing sanity, scheduler
+optimality.  (Hypothesis property tests live in test_properties.py so these
+plain tests run even without the dev extras.)"""
 import numpy as np
 import pytest
-from hypothesis import given, settings
 
 from repro.core import query_gen as qg
 from repro.core.latency_model import (AnalyticalDeviceModel, ContentionModel,
@@ -19,15 +18,6 @@ CPU = TableDeviceModel(np.array([1., 4, 16, 64, 256, 1024]),
 # ------------------------------------------------------------ query gen
 
 
-@settings(max_examples=20, deadline=None)
-@given(st.sampled_from(["fixed", "normal", "lognormal", "production"]),
-       st.integers(0, 2**31 - 1))
-def test_sizes_in_range(kind, seed):
-    dist = qg.SizeDist(kind)
-    s = dist.sample(np.random.default_rng(seed), 500)
-    assert (s >= 1).all() and (s <= dist.max_size).all()
-
-
 def test_production_heavier_tail_than_lognormal():
     rng = np.random.default_rng(0)
     prod = qg.PRODUCTION.sample(rng, 100_000)
@@ -37,15 +27,6 @@ def test_production_heavier_tail_than_lognormal():
     p75 = np.percentile(prod, 75)
     share = prod[prod > p75].sum() / prod.sum()
     assert 0.4 < share < 0.65
-
-
-@settings(max_examples=10, deadline=None)
-@given(st.floats(10.0, 5000.0))
-def test_poisson_arrival_rate(qps):
-    rng = np.random.default_rng(0)
-    queries = qg.generate_queries(rng, qps, 4000)
-    dur = queries[-1].arrival - queries[0].arrival
-    assert abs(4000 / dur - qps) / qps < 0.1
 
 
 def test_query_stream_monotone():

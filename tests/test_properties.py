@@ -1,0 +1,87 @@
+"""Hypothesis property tests (query distributions, layer substrate).
+
+Kept in their own module so the plain unit tests in test_core.py /
+test_layers.py still run when hypothesis is absent — only this file skips.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis "
+                    "(pip install -r requirements-dev.txt)")
+import hypothesis.strategies as st
+from hypothesis import given, settings
+
+from repro.core import query_gen as qg
+from repro.layers import embedding as E
+from repro.layers import moe as M
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ------------------------------------------------------------ query gen
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.sampled_from(["fixed", "normal", "lognormal", "production"]),
+       st.integers(0, 2**31 - 1))
+def test_sizes_in_range(kind, seed):
+    dist = qg.SizeDist(kind)
+    s = dist.sample(np.random.default_rng(seed), 500)
+    assert (s >= 1).all() and (s <= dist.max_size).all()
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.floats(10.0, 5000.0))
+def test_poisson_arrival_rate(qps):
+    rng = np.random.default_rng(0)
+    queries = qg.generate_queries(rng, qps, 4000)
+    dur = queries[-1].arrival - queries[0].arrival
+    assert abs(4000 / dur - qps) / qps < 0.1
+
+
+# ----------------------------------------------------------- embedding bag
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(2, 50), st.integers(1, 12), st.integers(1, 8),
+       st.integers(1, 16))
+def test_embedding_bag_matches_loop(vocab, batch, hot, dim):
+    table = jax.random.normal(KEY, (vocab, dim))
+    idx = jax.random.randint(KEY, (batch, hot), 0, vocab)
+    got = E.embedding_bag(table, idx)
+    want = np.stack([np.asarray(table)[np.asarray(idx[i])].sum(0)
+                     for i in range(batch)])
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.integers(0, 6), min_size=1, max_size=8))
+def test_embedding_bag_ragged_segments(bag_sizes):
+    """Ragged bags == per-bag loop sums; empty bags → zero vectors."""
+    vocab, dim = 13, 4
+    table = jax.random.normal(KEY, (vocab, dim))
+    offsets = np.concatenate([[0], np.cumsum(bag_sizes)]).astype(np.int32)
+    total = int(offsets[-1])
+    idx = np.arange(total) % vocab
+    got = E.embedding_bag_ragged(table, jnp.asarray(idx), jnp.asarray(offsets),
+                                 num_bags=len(bag_sizes))
+    for i, n in enumerate(bag_sizes):
+        want = np.asarray(table)[idx[offsets[i]:offsets[i + 1]]].sum(0) \
+            if n else np.zeros(dim)
+        np.testing.assert_allclose(np.asarray(got[i]), want, rtol=1e-5, atol=1e-5)
+
+
+# ------------------------------------------------------------------- moe
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(2, 4), st.integers(4, 16))
+def test_moe_combine_weights_sum_to_one(top_k, seq):
+    p = M.init_moe(KEY, 16, 32, 8, top_k)
+    x = jax.random.normal(KEY, (2, seq, 16))
+    y, aux = M.apply_moe(p, x, top_k=top_k, capacity_factor=8.0)  # no drops
+    assert y.shape == x.shape
+    assert float(aux["dropped_frac"]) < 1e-6
+    assert np.isfinite(np.asarray(y)).all()

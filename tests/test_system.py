@@ -3,7 +3,9 @@
 1. Training reduces loss on planted-signal data (recsys, LM, GNN).
 2. DeepRecSched (full pipeline: measured curves → simulator → hill-climb)
    beats the paper's static baseline.
-3. Roofline parsing on a real compiled module.
+3. The numpy fast-path simulator is equivalent to the event-driven
+   reference (and fault/contention runs still route through the reference).
+4. Roofline parsing on a real compiled module.
 """
 import jax
 import jax.numpy as jnp
@@ -11,15 +13,25 @@ import numpy as np
 import pytest
 
 from repro import configs
-from repro.core.latency_model import TableDeviceModel
+from repro.core.latency_model import (GPU_1080TI, AnalyticalDeviceModel,
+                                      ContentionModel, TableDeviceModel)
+from repro.core.query_gen import (LOGNORMAL, PRODUCTION, SizeDist,
+                                  generate_queries)
 from repro.core.scheduler import static_baseline, tune
-from repro.core.simulator import SchedulerConfig, max_qps_under_sla
+from repro.core.simulator import (FaultConfig, SchedulerConfig,
+                                  max_qps_under_sla, simulate)
 from repro.data import synthetic as syn
 from repro.models import gnn, lm, recsys
 from repro.train import optim
 from repro.train.loop import train
 
 KEY = jax.random.PRNGKey(0)
+
+CPU_TABLE = TableDeviceModel(np.array([1., 4, 16, 64, 256, 1024]),
+                             np.array([.0008, .001, .0018, .0045, .015, .058]))
+ACCEL = AnalyticalDeviceModel(
+    flops_per_sample=2e9, mem_bytes_per_sample=4e6, in_bytes_per_sample=4e4,
+    **GPU_1080TI)
 
 
 def _stream(make_batch):
@@ -74,14 +86,112 @@ def test_deeprecsched_beats_static_end_to_end():
     """The headline reproduction at test scale: tuned vs static ≥ 1.2× (the
     full benchmark shows ~2× across the 8-model suite; here one model, few
     queries, coarse search)."""
-    cpu = TableDeviceModel(np.array([1., 4, 16, 64, 256, 1024]),
-                           np.array([.0008, .001, .0018, .0045, .015, .058]))
     sla = 100.0
     b0 = static_baseline(1000, 40)
-    q0 = max_qps_under_sla(cpu, SchedulerConfig(batch_size=b0), sla,
+    q0 = max_qps_under_sla(CPU_TABLE, SchedulerConfig(batch_size=b0), sla,
                            n_queries=800, iters=6)
-    r = tune(cpu, sla, n_queries=800)
+    r = tune(CPU_TABLE, sla, n_queries=800)
     assert r.qps > 1.2 * q0, (r.qps, q0)
+
+
+# --------------------------------------- fast-path simulator equivalence
+
+
+@pytest.mark.parametrize("dist", [PRODUCTION, LOGNORMAL,
+                                  SizeDist("fixed", mean=64.0)],
+                         ids=["production", "lognormal", "fixed"])
+@pytest.mark.parametrize("batch,thr", [
+    (1, None),      # constant service time → vectorized Lindley chains
+    (4, None), (25, None),
+    (8, 150),       # mixed CPU + accelerator
+    (16, 400),
+    (32, 1),        # everything offloaded → accelerator Lindley (1 server)
+])
+def test_fast_simulator_matches_event_reference(batch, thr, dist):
+    """Property-style grid over batch sizes, offload thresholds and size
+    distributions: both engines must report the same SimResult."""
+    qs = generate_queries(np.random.default_rng(2), 400.0, 600, dist)
+    cfg = SchedulerConfig(batch_size=batch, offload_threshold=thr)
+    accel = ACCEL if thr is not None else None
+    rf = simulate(qs, CPU_TABLE, cfg, accel=accel, engine="fast")
+    re = simulate(qs, CPU_TABLE, cfg, accel=accel, engine="events")
+    for field in ("qps", "p50_ms", "p95_ms", "p99_ms", "mean_ms",
+                  "cpu_util", "accel_frac_work"):
+        np.testing.assert_allclose(getattr(rf, field), getattr(re, field),
+                                   rtol=1e-6, atol=1e-9, err_msg=field)
+    assert (rf.n_queries, rf.dropped) == (re.n_queries, re.dropped)
+
+
+def test_fast_qps_search_within_5pct_of_reference():
+    cfg = SchedulerConfig(batch_size=8)
+    q_fast = max_qps_under_sla(CPU_TABLE, cfg, 100.0, n_queries=500, iters=7)
+    q_ref = max_qps_under_sla(CPU_TABLE, cfg, 100.0, n_queries=500, iters=7,
+                              engine="events")
+    assert abs(q_fast - q_ref) <= 0.05 * q_ref, (q_fast, q_ref)
+
+
+def test_warm_started_qps_search_within_5pct_of_cold():
+    cfg = SchedulerConfig(batch_size=16)
+    cold = max_qps_under_sla(CPU_TABLE, cfg, 100.0, n_queries=500, iters=7)
+    for hint in (cold, cold * 0.6, cold * 1.7, 2.0):
+        warm = max_qps_under_sla(CPU_TABLE, cfg, 100.0, n_queries=500,
+                                 iters=7, hint=hint)
+        assert abs(warm - cold) <= 0.05 * cold, (hint, warm, cold)
+
+
+def test_empty_pool_drops_like_reference():
+    """n_accelerators=0 with offloading (or n_executors=0) must report the
+    same dropped counts as the reference, not garbage departures."""
+    qs = generate_queries(np.random.default_rng(4), 400.0, 200)
+    cfg = SchedulerConfig(batch_size=8, offload_threshold=200,
+                          n_accelerators=0)
+    rf = simulate(qs, CPU_TABLE, cfg, accel=ACCEL, engine="fast")
+    re = simulate(qs, CPU_TABLE, cfg, accel=ACCEL, engine="events")
+    assert (rf.n_queries, rf.dropped) == (re.n_queries, re.dropped)
+    assert rf.dropped > 0
+    np.testing.assert_allclose(rf.p95_ms, re.p95_ms, rtol=1e-6)
+    for eng in ("fast", "events"):
+        r0 = simulate(qs, CPU_TABLE,
+                      SchedulerConfig(batch_size=8, n_executors=0),
+                      engine=eng)
+        assert (r0.n_queries, r0.dropped) == (0, len(qs)), eng
+
+
+def test_warm_start_hint_honors_lo_floor():
+    """An infeasible hint must not re-bracket below the caller's lo."""
+    cfg = SchedulerConfig(batch_size=8)
+    cold = max_qps_under_sla(CPU_TABLE, cfg, 0.0001, lo=200.0, n_queries=300,
+                             iters=7)
+    warm = max_qps_under_sla(CPU_TABLE, cfg, 0.0001, lo=200.0, n_queries=300,
+                             iters=7, hint=300.0)
+    assert cold == 200.0 and warm >= 200.0, (cold, warm)
+
+
+def test_parallel_ladder_matches_sequential_choice():
+    """tune(workers=N) evaluates ladders eagerly in a process pool but must
+    pick the same config as the sequential patience walk."""
+    r_seq = tune(CPU_TABLE, 100.0, accel=ACCEL, n_queries=400,
+                 warm_start=False)
+    r_par = tune(CPU_TABLE, 100.0, accel=ACCEL, n_queries=400, workers=2)
+    assert (r_seq.batch_size, r_seq.offload_threshold) == \
+        (r_par.batch_size, r_par.offload_threshold)
+    assert r_par.qps == r_seq.qps
+
+
+def test_fault_and_contention_runs_route_through_reference():
+    """With any fault/contention knob active, engine='auto' must produce the
+    *identical* SimResult the event-driven reference produces."""
+    qs = generate_queries(np.random.default_rng(3), 300.0, 300)
+    cfg = SchedulerConfig(batch_size=8)
+    faults = FaultConfig(straggler_frac=0.05, straggler_mult=4.0,
+                         hedge_factor=3.0, fail_times=(0.5,))
+    assert simulate(qs, CPU_TABLE, cfg, faults=faults, seed=1) == \
+        simulate(qs, CPU_TABLE, cfg, faults=faults, seed=1, engine="events")
+    cont = ContentionModel(factor_at_full=1.6)
+    assert simulate(qs, CPU_TABLE, cfg, contention=cont) == \
+        simulate(qs, CPU_TABLE, cfg, contention=cont, engine="events")
+    with pytest.raises(ValueError):
+        simulate(qs, CPU_TABLE, cfg, faults=faults, engine="fast")
 
 
 def test_roofline_parses_compiled_module():
