@@ -1,12 +1,19 @@
 """Benchmark harness entry point — one module per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig11,...]
+    PYTHONPATH=src python -m benchmarks.run [--only fig11,...] [--json out.json]
 
 Prints ``name,us_per_call,derived`` CSV rows (the harness contract).
+``--json`` additionally writes the same rows machine-readably, grouped per
+suite with wall-clock and pass/fail status — consumed by the CI bench-smoke
+artifact and future BENCH tracking.
+``--strict`` turns soft checks (rows whose derived column says ``FAIL``)
+into a nonzero exit, so CI can gate on thresholds like the sched_speed
+≥10× bar instead of only on exceptions.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 import traceback
@@ -20,6 +27,7 @@ SUITES = [
     ("fig11_throughput_sla", "benchmarks.throughput_sla"),
     ("fig13_tail_latency", "benchmarks.tail_latency"),
     ("fig14_gpu_fraction", "benchmarks.gpu_fraction"),
+    ("cluster_capacity", "benchmarks.cluster_capacity"),
     ("sched_speed", "benchmarks.sched_speed"),
     ("roofline_report", "benchmarks.roofline_report"),
 ]
@@ -29,23 +37,49 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated substring filter on suite names")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write per-suite rows as JSON to PATH")
+    ap.add_argument("--strict", action="store_true",
+                    help="exit nonzero when any row's derived column "
+                         "carries a FAIL soft-check verdict")
     args = ap.parse_args()
 
     import importlib
+
+    from benchmarks.common import rows
     failures = []
+    report: dict[str, dict] = {}
     for name, module in SUITES:
         if args.only and not any(tok in name for tok in args.only.split(",")):
             continue
         print(f"# ==== {name} ====", flush=True)
         t0 = time.time()
+        seen = len(rows())
+        ok = True
         try:
             importlib.import_module(module).main()
             print(f"# {name} done in {time.time()-t0:.1f}s", flush=True)
         except Exception:
             traceback.print_exc()
             failures.append(name)
+            ok = False
+        report[name] = {
+            "ok": ok,
+            "seconds": round(time.time() - t0, 3),
+            "rows": [{"name": r[0], "us_per_call": r[1], "derived": r[2]}
+                     for r in rows()[seen:]],
+        }
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"suites": report, "failures": failures}, f, indent=1)
+        print(f"# wrote {args.json}")
+    soft_fails = [r["name"] for s in report.values() for r in s["rows"]
+                  if "FAIL" in r["derived"]] if args.strict else []
     if failures:
         print(f"# FAILED suites: {failures}")
+    if soft_fails:
+        print(f"# FAILED soft checks: {soft_fails}")
+    if failures or soft_fails:
         sys.exit(1)
 
 

@@ -1,0 +1,24 @@
+"""Cluster tier: heterogeneous fleet simulation on top of the per-node fast
+simulator (paper §VII — DeepRecSched deployed "on hundreds of machines").
+
+* ``fleet`` — ``NodeSpec``/``Pool``/``Fleet``: mixed CPU generations and
+  accelerator nodes, each pool with its own DeepRecSched knobs.
+* ``router`` — pluggable query-routing policies (round-robin,
+  least-outstanding-work, size-aware, Hercules-style heterogeneity-aware).
+* ``traffic`` — diurnal / bursty / multi-tenant arrival scenarios.
+* ``autoscaler`` — reactive p95-vs-SLA pool scaling with node-hour
+  accounting.
+* ``cluster_sim`` — the shared-timeline driver (numpy fast engine per node;
+  event engine per node when faults/contention are enabled).
+"""
+from repro.cluster.autoscaler import Autoscaler, ScalingEvent  # noqa: F401
+from repro.cluster.cluster_sim import (ClusterResult,  # noqa: F401
+                                       cluster_max_qps, simulate_fleet)
+from repro.cluster.fleet import (Fleet, NodeSpec, Pool,  # noqa: F401
+                                 ScaledDeviceModel)
+from repro.cluster.router import (HeterogeneityAwareRouter,  # noqa: F401
+                                  LeastOutstandingRouter, RoundRobinRouter,
+                                  Router, SizeAwareRouter, make_router)
+from repro.cluster.traffic import (BurstyTraffic, DiurnalTraffic,  # noqa: F401
+                                   MultiTenantTraffic, StationaryTraffic,
+                                   Traffic)

@@ -1,0 +1,87 @@
+"""Reactive autoscaling for the cluster tier: p95-vs-SLA plus capacity
+headroom.
+
+After each traffic window the driver reports the window's observed p95 and
+offered rate; the autoscaler grows/shrinks pools at window boundaries:
+
+  * scale **up** when the SLA is threatened — p95 > ``up_at``·SLA — or the
+    fleet is running hot (offered rate > ``util_high`` × total capacity,
+    the proactive signal: p95 barely moves with fleet size until the
+    queueing cliff, so waiting for p95 alone reacts too late);
+  * scale **down** only when both signals agree there is headroom — p95 <
+    ``down_at``·SLA *and* offered rate < ``util_low`` × capacity — and
+    only if the shrunk fleet would still run below ``util_high``;
+  * a cooldown of ``cooldown_windows`` windows between events damps
+    flapping.
+
+Pool choice: grow the pool with the highest per-node capacity (most
+queueing relief per node-hour spent), shrink the one with the lowest
+(cheapest capacity to shed); pools pinned at their ``min_count``/
+``max_count`` bounds fall through to the next candidate.  Capacity
+consumed is accounted in node-hours by the driver; every decision is
+recorded as a ``ScalingEvent`` for the report.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.cluster.fleet import Fleet
+
+
+@dataclasses.dataclass(frozen=True)
+class ScalingEvent:
+    t_s: float
+    pool: str
+    delta: int
+    p95_ms: float
+    n_nodes: int              # fleet size after the event
+
+
+@dataclasses.dataclass
+class Autoscaler:
+    sla_ms: float
+    up_at: float = 0.9        # p95 trigger, fraction of SLA
+    down_at: float = 0.6
+    util_high: float = 0.85   # offered/capacity triggers
+    util_low: float = 0.6
+    step: int = 1
+    cooldown_windows: int = 1
+    events: list[ScalingEvent] = dataclasses.field(default_factory=list)
+    _cooldown: int = 0
+
+    def reset(self) -> None:
+        self.events, self._cooldown = [], 0
+
+    def observe(self, t_s: float, p95_ms: float, offered_qps: float,
+                fleet: Fleet) -> int:
+        """One window's verdict; mutates ``fleet`` and returns the node
+        delta applied (0 when within band or cooling down)."""
+        if self._cooldown > 0:
+            self._cooldown -= 1
+            return 0
+        cap = fleet.total_capacity()
+        if cap <= 0:
+            raise ValueError(
+                "fleet has no capacity weights — run Fleet.tune() or "
+                "Fleet.estimate_capacity() before autoscaling (otherwise "
+                "the utilization signal reads ∞ and scales up every window)")
+        util = offered_qps / cap
+        if p95_ms > self.up_at * self.sla_ms or util > self.util_high:
+            ranked = sorted(fleet.pools, key=lambda p: -p.qps_capacity)
+            delta = +self.step
+        elif p95_ms < self.down_at * self.sla_ms and util < self.util_low:
+            ranked = [p for p in sorted(fleet.pools,
+                                        key=lambda p: p.qps_capacity)
+                      if offered_qps < self.util_high
+                      * (cap - self.step * p.qps_capacity)]
+            delta = -self.step
+        else:
+            return 0
+        for pool in ranked:
+            applied = fleet.scale(pool.name, delta)
+            if applied:
+                self.events.append(ScalingEvent(t_s, pool.name, applied,
+                                                p95_ms, fleet.n_nodes))
+                self._cooldown = self.cooldown_windows
+                return applied
+        return 0

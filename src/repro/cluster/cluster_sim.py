@@ -1,0 +1,251 @@
+"""Fleet-level serving simulation on a shared timeline.
+
+Every node advances through the same trace with the per-node numpy fast
+engine (``core.simulator.advance_pool`` carrying executor free-times across
+traffic windows), so a 64-node fleet over a 1500-query trace costs tens of
+per-node vectorized advances instead of a global event heap.  When
+faults/contention are enabled the driver falls back to the event-driven
+reference per node (``event_done_times``) and merges per-query latencies —
+node-local percentiles don't compose, latencies do.
+
+Two entry points:
+  * ``simulate_fleet(times, sizes, fleet, router, ...)`` — one end-to-end
+    run; optional ``window_s`` + ``Autoscaler`` turn it into a windowed
+    loop where the fleet grows/shrinks at window boundaries and capacity
+    is accounted in node-hours.
+  * ``cluster_max_qps(fleet, router, sla_ms, ...)`` — the paper's y-axis
+    lifted to the cluster: largest stationary arrival rate whose fleet-wide
+    p95 meets the SLA (same trace-rescaling bracket + bisection as the
+    per-node search).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.cluster.autoscaler import Autoscaler, ScalingEvent
+from repro.cluster.fleet import Fleet, NodeView
+from repro.cluster.router import Router
+from repro.core.latency_model import ContentionModel
+from repro.core.query_gen import (PRODUCTION, SizeDist, queries_from_arrays,
+                                  rescale_trace, sample_trace)
+from repro.core.simulator import (FaultConfig, _fast_eligible,
+                                  bracket_bisect, event_done_times,
+                                  latency_percentiles_ms, node_pass,
+                                  warm_bracket)
+
+
+@dataclasses.dataclass
+class PoolStats:
+    n_nodes: int
+    n_queries: int
+    p95_ms: float
+
+
+@dataclasses.dataclass
+class ClusterResult:
+    qps: float
+    p50_ms: float
+    p95_ms: float
+    p99_ms: float
+    mean_ms: float
+    n_queries: int
+    dropped: int
+    n_nodes: int                      # fleet size at the end of the run
+    node_hours: float
+    per_pool: dict[str, PoolStats]
+    events: list[ScalingEvent] = dataclasses.field(default_factory=list)
+    # fast path: one row per window, (t_start_s, offered_qps, n_nodes,
+    # p95_ms); empty in events mode (faults/contention), which is unwindowed
+    timeline: list[tuple] = dataclasses.field(default_factory=list)
+
+    def meets(self, sla_ms: float) -> bool:
+        return self.p95_ms <= sla_ms and self.dropped == 0
+
+
+class _NodeState:
+    """One node's executor/accelerator free-times, carried across windows."""
+
+    def __init__(self, view: NodeView, t0: float = 0.0):
+        self.view = view
+        spec = view.spec
+        self.cfg = spec.scheduler_config()
+        self.cpu_free = np.full(spec.n_executors, t0)
+        self.acc_free = np.full(spec.n_accelerators, t0)
+
+    def advance(self, arrivals: np.ndarray, sizes: np.ndarray) -> np.ndarray:
+        """Completion time per query (NaN = dropped); the same
+        ``node_pass`` pipeline as ``simulate_arrays``, made stateful so
+        the next window's queries queue behind this one's leftovers."""
+        spec = self.view.spec
+        done, _, _, self.cpu_free, self.acc_free = node_pass(
+            arrivals, sizes, spec.cpu, self.cfg, accel=spec.accel,
+            cpu_free=self.cpu_free, acc_free=self.acc_free)
+        return done
+
+
+def _result(times: np.ndarray, done: np.ndarray, pool_of: np.ndarray,
+            fleet: Fleet, node_hours: float, events: list,
+            timeline: list) -> ClusterResult:
+    completed = ~np.isnan(done)
+    n_done = int(completed.sum())
+    per_pool = {}
+    for p in fleet.pools:
+        sel = (pool_of == p.name) & completed
+        per_pool[p.name] = PoolStats(
+            n_nodes=p.count, n_queries=int((pool_of == p.name).sum()),
+            p95_ms=float(np.percentile(done[sel] - times[sel], 95) * 1e3)
+            if sel.any() else 0.0)
+    if n_done == 0:
+        return ClusterResult(0, 0, 0, 0, 0, 0, len(times), fleet.n_nodes,
+                             node_hours, per_pool, events, timeline)
+    lats = done[completed] - times[completed]
+    dur = float(done[completed].max()) - float(times[0])
+    p50, p95, p99, mean = latency_percentiles_ms(lats)
+    return ClusterResult(
+        qps=n_done / max(dur, 1e-12),
+        p50_ms=p50, p95_ms=p95, p99_ms=p99, mean_ms=mean,
+        n_queries=n_done, dropped=len(times) - n_done,
+        n_nodes=fleet.n_nodes, node_hours=node_hours,
+        per_pool=per_pool, events=events, timeline=timeline)
+
+
+def simulate_fleet(times: np.ndarray, sizes: np.ndarray, fleet: Fleet,
+                   router: Router, *, window_s: float | None = None,
+                   autoscaler: Autoscaler | None = None,
+                   faults: FaultConfig | None = None,
+                   contention: ContentionModel | None = None,
+                   seed: int = 0) -> ClusterResult:
+    """Run one trace through the fleet.  ``times`` must be sorted.
+
+    Fast path (default): windowed numpy advance per node, stateful across
+    windows; with an ``Autoscaler`` the fleet is resized at window
+    boundaries (new nodes boot idle at the window start; removed nodes
+    finish their assigned work first — their completions are already
+    recorded).  With ``faults``/``contention`` every node routes through
+    the event-driven reference instead (single window, no autoscaling).
+    """
+    times = np.asarray(times, float)
+    sizes = np.asarray(sizes, np.int64)
+    if len(times) and np.any(np.diff(times) < 0):
+        raise ValueError("times must be sorted (routers and the per-node "
+                         "FCFS advance assume arrival order)")
+    if autoscaler is not None and window_s is None:
+        raise ValueError("autoscaling requires window_s — scaling happens "
+                         "at window boundaries, and a single-window run "
+                         "would only observe after all queries completed")
+    router.reset()
+    n = len(times)
+    done = np.full(n, np.nan)
+    pool_of = np.empty(n, object)
+
+    events_mode = not _fast_eligible(contention, faults or FaultConfig())
+    if events_mode:
+        if autoscaler is not None or window_s is not None:
+            raise ValueError("windowing/autoscaling need the fast path; "
+                             "faults/contention force the (unwindowed) "
+                             "event engine")
+        nodes = fleet.node_views()
+        assign = router.assign(times, sizes, nodes)
+        for i, nv in enumerate(nodes):
+            sel = assign == i
+            if not sel.any():
+                continue
+            qs = queries_from_arrays(times[sel], sizes[sel])
+            done[sel] = event_done_times(
+                qs, nv.spec.cpu, nv.spec.scheduler_config(),
+                accel=nv.spec.accel, contention=contention,
+                faults=faults or FaultConfig(), seed=seed + i)
+            pool_of[sel] = nv.pool
+        horizon = float(times[-1]) - float(times[0]) if n else 0.0
+        return _result(times, done, pool_of, fleet,
+                       fleet.n_nodes * horizon / 3600.0, [], [])
+
+    # ------------------------------------------------- windowed fast path
+    work_fleet = fleet.copy() if autoscaler is not None else fleet
+    if autoscaler is not None:
+        autoscaler.reset()
+    # the window grid starts at the first arrival and node-hours are
+    # billed over the arrival span [times[0], times[-1]] — matching the
+    # events path and never iterating phantom windows for a shifted trace
+    t_start = float(times[0]) if n else 0.0
+    horizon = float(times[-1]) if n else 0.0
+    span = horizon - t_start
+    if window_s is None or window_s >= span:
+        window_s, n_windows = max(span, 1e-9), 1
+    else:
+        # no epsilon: an exact-multiple span must not grow a phantom
+        # empty window (the last window is inclusive of t == horizon)
+        n_windows = int(np.ceil(span / window_s))
+    states: dict[tuple, _NodeState] = {}
+    node_hours = 0.0
+    timeline: list[tuple] = []
+
+    for w in range(n_windows):
+        w0, w1 = t_start + w * window_s, t_start + (w + 1) * window_s
+        idx = np.flatnonzero((times >= w0) & (times < w1 if w < n_windows - 1
+                                              else times <= horizon))
+        nodes = work_fleet.node_views()
+        width = min(w1, horizon) - w0     # last window may be truncated
+        node_hours += len(nodes) * width / 3600.0
+        wt, ws = times[idx], sizes[idx]
+        assign = router.assign(wt, ws, nodes)
+        for i, nv in enumerate(nodes):
+            key = (nv.pool, nv.index_in_pool)
+            if key not in states:
+                states[key] = _NodeState(nv, t0=w0)
+            sel = assign == i
+            if not sel.any():
+                continue
+            done[idx[sel]] = states[key].advance(wt[sel], ws[sel])
+            pool_of[idx[sel]] = nv.pool
+        wl = done[idx] - times[idx]
+        ok = ~np.isnan(wl)
+        p95 = float(np.percentile(wl[ok], 95) * 1e3) if ok.any() else 0.0
+        offered = len(idx) / max(width, 1e-9)
+        timeline.append((w0, offered, work_fleet.n_nodes, p95))
+        if autoscaler is not None:
+            autoscaler.observe(w1, p95, offered, work_fleet)
+            active = {(nv.pool, nv.index_in_pool)
+                      for nv in work_fleet.node_views()}
+            states = {k: v for k, v in states.items() if k in active}
+
+    return _result(times, done, pool_of, work_fleet, node_hours,
+                   list(autoscaler.events) if autoscaler else [], timeline)
+
+
+def cluster_max_qps(fleet: Fleet, router: Router, sla_ms: float, *,
+                    size_dist: SizeDist = PRODUCTION, n_queries: int = 1500,
+                    seed: int = 0, lo: float = 1.0, hi: float | None = None,
+                    iters: int = 9, hint: float | None = None) -> float:
+    """Largest stationary arrival rate whose fleet-wide p95 meets the SLA.
+
+    Same discipline as the per-node ``max_qps_under_sla`` (the shared
+    ``warm_bracket``/``bracket_bisect`` helpers): one trace draw per seed,
+    rescaled per λ step (``rescale_trace``), sustain guard against backlog
+    hiding in a finite trace, exponential bracket then bisection.
+    ``hint`` warm-starts the bracket around a known-nearby rate — e.g.
+    another policy's answer on the same fleet — instead of doubling up
+    from ``lo``."""
+    unit_times, sizes = sample_trace(np.random.default_rng(seed), n_queries,
+                                     size_dist)
+    _memo: dict[float, bool] = {}
+
+    def ok(qps: float) -> bool:
+        hit = _memo.get(qps)
+        if hit is not None:
+            return hit
+        r = simulate_fleet(rescale_trace(unit_times, qps), sizes, fleet,
+                           router, seed=seed)
+        v = r.meets(sla_ms) and r.qps >= 0.85 * qps
+        _memo[qps] = v
+        return v
+
+    if not ok(lo):
+        return 0.0                # even the floor rate misses the SLA
+    if hi is None:
+        lo, hi = warm_bracket(ok, lo, hint)
+        return bracket_bisect(ok, lo, hi, iters,
+                              cap=4e6 * max(fleet.n_nodes, 1))
+    return bracket_bisect(ok, lo, hi, iters)

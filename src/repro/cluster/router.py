@@ -1,0 +1,258 @@
+"""Pluggable query-routing policies for the cluster tier.
+
+A ``Router`` maps a sorted window of queries ``(times, sizes)`` onto node
+indices given the fleet's ``NodeView`` list.  Policies:
+
+  * ``RoundRobinRouter``        — heterogeneity-blind baseline: query *j*
+    goes to node ``j mod N`` (continued across windows).
+  * ``LeastOutstandingRouter``  — greedy join-least-work: track each node's
+    estimated time-to-drain (seconds of queued work over its executor
+    pool), decay it in real time between arrivals, send each query to the
+    node that would start it soonest.
+  * ``SizeAwareRouter``         — static split: queries ≥ ``split_size``
+    go to accelerator-capable nodes, the rest to CPU nodes, weighted
+    round-robin by capacity within each class.
+  * ``HeterogeneityAwareRouter`` — Hercules-style join-shortest-expected-
+    completion: each node keeps separate executor-pool and accelerator
+    backlogs, a query is scored per node as the backlog of the path it
+    would take there plus its estimated drain time on that path, and goes
+    to the globally cheapest node — so large batches flow to the devices
+    that amortize them until those saturate, then overflow to CPUs.
+
+Estimated per-query work is computed per node *class* (pools share specs)
+from the same service-time tables the fast simulator uses, so routing cost
+estimates and simulated reality agree.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.cluster.fleet import NodeView
+from repro.core.latency_model import service_time_table
+
+
+class Router:
+    """Routing-policy interface; stateful across windows (the driver calls
+    ``assign`` once per traffic window with the same node ordering)."""
+
+    name = "base"
+
+    def assign(self, times: np.ndarray, sizes: np.ndarray,
+               nodes: list[NodeView]) -> np.ndarray:
+        """Node index (into ``nodes``) for each query of a sorted window."""
+        raise NotImplementedError
+
+    def reset(self) -> None:
+        """Forget cross-window state (new simulation run)."""
+
+
+def _class_drain_seconds(spec, sizes: np.ndarray
+                         ) -> tuple[np.ndarray, np.ndarray]:
+    """Estimated time (s) a node of ``spec`` needs to drain each query,
+    plus which path it takes there: offloaded queries occupy the
+    accelerator queue, split queries occupy the executor pool ⌈size/B⌉
+    requests wide.  Returns ``(drain_seconds, offloaded_mask)``."""
+    sizes = np.asarray(sizes, np.int64)
+    B = max(spec.batch_size, 1)
+    n_req = -(-sizes // B)
+    cpu_tab = service_time_table(spec.cpu, B)
+    est = n_req * (cpu_tab[B] + spec.request_overhead_s) \
+        / max(spec.n_executors, 1)
+    off = np.zeros(len(sizes), bool)
+    if spec.has_accel and len(sizes):
+        acc_tab = service_time_table(spec.accel, int(sizes.max()))
+        off = sizes >= spec.offload_threshold
+        est = np.where(off, acc_tab[sizes] / max(spec.n_accelerators, 1), est)
+    return est, off
+
+
+def _est_work(nodes: list[NodeView], sizes: np.ndarray
+              ) -> tuple[np.ndarray, np.ndarray]:
+    """(n_nodes, n_queries) drain-seconds estimate and offload-path mask,
+    one row per node, with per-class rows computed once (pools share spec
+    objects)."""
+    cache: dict[int, tuple] = {}
+    est_rows, off_rows = [], []
+    for nv in nodes:
+        key = id(nv.spec)
+        if key not in cache:
+            cache[key] = _class_drain_seconds(nv.spec, sizes)
+        est_rows.append(cache[key][0])
+        off_rows.append(cache[key][1])
+    if not est_rows:
+        return np.empty((0, len(sizes))), np.empty((0, len(sizes)), bool)
+    return np.stack(est_rows), np.stack(off_rows)
+
+
+def _load_state(store: dict, nodes: list[NodeView]) -> np.ndarray:
+    """Per-node state aligned with ``nodes``, keyed by stable node identity
+    ``(pool, index_in_pool)`` — an autoscaling resize must not wipe the
+    surviving nodes' backlogs (new nodes start idle at 0)."""
+    return np.array([store.get((nv.pool, nv.index_in_pool), 0.0)
+                     for nv in nodes])
+
+
+def _store_state(values: np.ndarray, nodes: list[NodeView]) -> dict:
+    """Rebuilding from the current node list drops removed nodes."""
+    return {(nv.pool, nv.index_in_pool): float(values[i])
+            for i, nv in enumerate(nodes)}
+
+
+class RoundRobinRouter(Router):
+    name = "round_robin"
+
+    def __init__(self):
+        self._next = 0
+
+    def reset(self) -> None:
+        self._next = 0
+
+    def assign(self, times, sizes, nodes) -> np.ndarray:
+        n = len(nodes)
+        out = (self._next + np.arange(len(times))) % n
+        self._next = int((self._next + len(times)) % n)
+        return out.astype(np.int64)
+
+
+class LeastOutstandingRouter(Router):
+    name = "least_outstanding"
+
+    def __init__(self):
+        self._store: dict = {}
+        self._last_t = 0.0
+
+    def reset(self) -> None:
+        self._store, self._last_t = {}, 0.0
+
+    def assign(self, times, sizes, nodes) -> np.ndarray:
+        backlog = _load_state(self._store, nodes)
+        est, _ = _est_work(nodes, sizes)
+        out = np.empty(len(times), np.int64)
+        last_t = self._last_t
+        for j, t in enumerate(np.asarray(times, float)):
+            backlog -= t - last_t          # queues drain in real time
+            np.maximum(backlog, 0.0, out=backlog)
+            i = int(np.argmin(backlog))
+            backlog[i] += est[i, j]
+            out[j] = i
+            last_t = t
+        self._store, self._last_t = _store_state(backlog, nodes), last_t
+        return out
+
+
+def _weighted_rr(counts: np.ndarray, weights: np.ndarray,
+                 n_queries: int) -> np.ndarray:
+    """Classic weighted round-robin: each pick minimizes served/weight;
+    ``counts`` carries state across windows (mutated in place)."""
+    out = np.empty(n_queries, np.int64)
+    for j in range(n_queries):
+        i = int(np.argmin((counts + 1.0) / weights))
+        counts[i] += 1.0
+        out[j] = i
+    return out
+
+
+class SizeAwareRouter(Router):
+    """Static size split: ≥ ``split_size`` → accelerator-capable nodes."""
+
+    name = "size_aware"
+
+    def __init__(self, split_size: int = 256):
+        self.split_size = split_size
+        self._store: dict = {}
+
+    def reset(self) -> None:
+        self._store = {}
+
+    def assign(self, times, sizes, nodes) -> np.ndarray:
+        n = len(nodes)
+        counts = _load_state(self._store, nodes)
+        weights = np.array([nv.weight for nv in nodes])
+        accel = np.array([nv.spec.has_accel for nv in nodes])
+        # WRR counts are cumulative: a node added mid-run must join at its
+        # own class's level (classes serve disjoint traffic, so their
+        # cumulative counts diverge), or argmin((counts+1)/weights) floods
+        # it with its whole class until it catches up
+        fresh = np.array([(nv.pool, nv.index_in_pool) not in self._store
+                          for nv in nodes])
+        if fresh.any() and not fresh.all():
+            for cls in (accel, ~accel):
+                f = fresh & cls
+                incumbent = cls & ~fresh
+                if f.any():
+                    base = counts[incumbent] if incumbent.any() \
+                        else counts[~fresh]
+                    counts[f] = base.min()
+        big = np.asarray(sizes) >= self.split_size
+        out = np.empty(len(times), np.int64)
+        for mask, node_mask in ((big, accel), (~big, ~accel)):
+            if not mask.any():
+                continue
+            cls = np.flatnonzero(node_mask)
+            if len(cls) == 0:              # no such node class: use them all
+                cls = np.arange(n)
+            sub = counts[cls]              # fancy index copies: write back
+            picks = _weighted_rr(sub, weights[cls], int(mask.sum()))
+            counts[cls] = sub
+            out[mask] = cls[picks]
+        self._store = _store_state(counts, nodes)
+        return out
+
+
+class HeterogeneityAwareRouter(Router):
+    """Hercules-style join-shortest-expected-completion, path-aware.
+
+    Each node keeps *two* backlogs — its executor pool and its accelerator
+    queue — because a query's path on a node is fixed by that node's
+    offload threshold.  A query's score on node *i* is the backlog of the
+    path it would take there plus its estimated drain time on that path
+    (slow CPU generations and amortizing accelerators both priced in);
+    the query goes to the globally cheapest node.  Large-batch queries
+    therefore flow to accelerator nodes while the accelerators have
+    headroom and overflow onto CPU pools when they saturate; small queries
+    spread over every node inversely to device speed."""
+
+    name = "hetero"
+
+    def __init__(self):
+        self._cpu_store: dict = {}
+        self._acc_store: dict = {}
+        self._last_t = 0.0
+
+    def reset(self) -> None:
+        self._cpu_store, self._acc_store, self._last_t = {}, {}, 0.0
+
+    def assign(self, times, sizes, nodes) -> np.ndarray:
+        cpu_b = _load_state(self._cpu_store, nodes)
+        acc_b = _load_state(self._acc_store, nodes)
+        est, off = _est_work(nodes, sizes)
+        out = np.empty(len(times), np.int64)
+        last_t = self._last_t
+        for j, t in enumerate(np.asarray(times, float)):
+            dt = t - last_t
+            cpu_b -= dt
+            acc_b -= dt
+            np.maximum(cpu_b, 0.0, out=cpu_b)
+            np.maximum(acc_b, 0.0, out=acc_b)
+            path = off[:, j]
+            score = np.where(path, acc_b, cpu_b) + est[:, j]
+            i = int(np.argmin(score))
+            (acc_b if path[i] else cpu_b)[i] += est[i, j]
+            out[j] = i
+            last_t = t
+        self._cpu_store = _store_state(cpu_b, nodes)
+        self._acc_store = _store_state(acc_b, nodes)
+        self._last_t = last_t
+        return out
+
+
+ROUTERS = {r.name: r for r in (RoundRobinRouter, LeastOutstandingRouter,
+                               SizeAwareRouter, HeterogeneityAwareRouter)}
+
+
+def make_router(name: str) -> Router:
+    try:
+        return ROUTERS[name]()
+    except KeyError:
+        raise ValueError(f"unknown router {name!r}; "
+                         f"choose from {sorted(ROUTERS)}") from None

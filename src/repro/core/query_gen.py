@@ -116,6 +116,17 @@ def sample_trace(rng: np.random.Generator, n: int,
     return times, sizes
 
 
+def rescale_trace(unit_times: np.ndarray, qps: float) -> np.ndarray:
+    """Arrival times at rate ``qps`` from a unit-rate trace.
+
+    Exact for every supported inter-arrival kind — each sampler scales
+    multiplicatively in its mean (see ``sample_trace``).  Public so the QPS
+    search and the cluster tier's capacity bisection share one trace draw
+    per seed instead of regenerating per λ step.
+    """
+    return unit_times / qps
+
+
 def queries_from_arrays(arrivals: np.ndarray, sizes: np.ndarray) -> list[Query]:
     """Materialize ``Query`` objects for the event-driven engine."""
     return [Query(i, float(t), int(s))

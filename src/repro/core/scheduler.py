@@ -78,18 +78,27 @@ def _climb(values: Sequence, evaluate, knob: str, trace: list,
 
 
 def tune(cpu: DeviceModel, sla_ms: float, *, accel: DeviceModel | None = None,
-         n_executors: int = 40, size_dist: SizeDist = PRODUCTION,
+         n_executors: int = 40, n_accelerators: int = 1,
+         request_overhead_s: float = 1.35e-4,
+         size_dist: SizeDist = PRODUCTION,
          contention: ContentionModel | None = None,
          batch_ladder: Sequence[int] = BATCH_LADDER,
          patience: int = 1, n_queries: int = 1500, seed: int = 0,
          engine: str = "auto", warm_start: bool = True,
          workers: int | None = None) -> TuneResult:
-    """Run DeepRecSched's two hill climbs; returns the tuned config."""
+    """Run DeepRecSched's two hill climbs; returns the tuned config.
+
+    ``n_accelerators``/``request_overhead_s`` parameterize the node being
+    tuned (defaults match ``SchedulerConfig``) — the cluster tier tunes
+    per-pool node classes whose configs differ in more than executor
+    count."""
     trace: list[tuple] = []
 
     def point_cfg(batch: int, thr: int | None) -> SchedulerConfig:
         return SchedulerConfig(batch_size=batch, offload_threshold=thr,
-                               n_executors=n_executors)
+                               n_executors=n_executors,
+                               n_accelerators=n_accelerators,
+                               request_overhead_s=request_overhead_s)
 
     def point_args(batch: int, thr: int | None):
         return (cpu, point_cfg(batch, thr), sla_ms, accel, size_dist,

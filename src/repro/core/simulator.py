@@ -38,7 +38,8 @@ import numpy as np
 from repro.core.latency_model import (ContentionModel, DeviceModel,
                                       service_time_table)
 from repro.core.query_gen import (PRODUCTION, Query, SizeDist,
-                                  queries_from_arrays, sample_trace)
+                                  queries_from_arrays, rescale_trace,
+                                  sample_trace)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -87,6 +88,16 @@ _ARRIVAL, _CPU_DONE, _ACC_DONE, _FAIL, _HEDGE_CHECK, _RELEASE = range(6)
 _WAKE = 100                                  # re-try dispatch, no state change
 
 
+def latency_percentiles_ms(lats: np.ndarray) -> tuple[float, float, float, float]:
+    """(p50, p95, p99, mean) of latency seconds, in ms — the one metric
+    assembly shared by both engines and the cluster tier, so the
+    definitions cannot drift between per-node and fleet-level results."""
+    return (float(np.percentile(lats, 50) * 1e3),
+            float(np.percentile(lats, 95) * 1e3),
+            float(np.percentile(lats, 99) * 1e3),
+            float(lats.mean() * 1e3))
+
+
 def _fast_eligible(contention: ContentionModel | None,
                    faults: FaultConfig) -> bool:
     no_contention = contention is None or contention.is_noop()
@@ -121,6 +132,88 @@ def simulate(queries: list[Query], cpu: DeviceModel, cfg: SchedulerConfig,
 
 
 # ------------------------------------------------------- numpy fast path
+
+
+def split_requests(sizes: np.ndarray, batch: int
+                   ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Split query sizes into flat per-request arrays (request- vs
+    batch-level parallelism).
+
+    Returns ``(group, req_batch, bounds)``: the query index of each request,
+    each request's batch size (⌈size/B⌉ full batches plus a remainder), and
+    the exclusive per-query request-end offsets (``np.cumsum`` of the
+    per-query request counts).  Request order is (arrival, intra-query) —
+    exactly the FIFO order the event loop enqueues in.  This is the shared
+    entry point for the per-node fast path: ``simulate_arrays`` and the
+    cluster tier's per-node advance both use it.
+
+    Sizes must be ≥ 1 (a zero-size query has no requests; its zero count
+    would corrupt the neighboring query's remainder slot) — the query
+    generators clip there, external callers are validated.
+    """
+    sizes = np.asarray(sizes, np.int64)
+    if len(sizes) and sizes.min() < 1:
+        raise ValueError("query sizes must be >= 1")
+    B = max(int(batch), 1)
+    n_req = -(-sizes // B)
+    bounds = np.cumsum(n_req)
+    group = np.repeat(np.arange(len(sizes)), n_req)
+    req_batch = np.full(int(bounds[-1]) if len(bounds) else 0, B, np.int64)
+    if len(bounds):
+        req_batch[bounds - 1] = sizes - (n_req - 1) * B
+    return group, req_batch, bounds
+
+
+def _heap_advance(al: list, sl: list, h: list) -> list:
+    """FIFO pass over a min-heap ``h`` of server free times (mutated in
+    place): dispatch each request to the earliest-free server.  Shared by
+    the zero-state fallback and the stateful ``advance_pool``."""
+    out = [0.0] * len(al)
+    heapreplace = heapq.heapreplace
+    for j in range(len(al)):
+        f = h[0]
+        a = al[j]
+        d = (a if a > f else f) + sl[j]
+        heapreplace(h, d)
+        out[j] = d
+    return out
+
+
+def advance_pool(arrivals: np.ndarray, svc: np.ndarray,
+                 free: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """Stateful FCFS advance: departure times plus the updated per-server
+    free times, given each server's current free time in ``free``.
+
+    This is the cluster tier's per-node entry point — a fleet simulation
+    advances every node window-by-window, carrying ``free`` across windows
+    so queued work from one traffic window delays the next.  When the pool
+    is idle before the first arrival this delegates to the vectorized
+    ``_advance_pool`` regimes; otherwise it runs the FIFO free-time heap
+    seeded with ``free``.
+
+    The updated free times are the ``c`` largest values of
+    ``free ∪ departures``: each dispatch replaces the pool's earliest free
+    time with the request's departure, so by induction the heap always
+    holds exactly the ``c`` largest such values.
+    """
+    free = np.asarray(free, float)
+    c = len(free)
+    r = len(arrivals)
+    if r == 0:
+        return np.empty(0), free.copy()
+    if c == 0:
+        return np.full(r, np.nan), free.copy()
+    if float(free.max()) <= float(arrivals[0]):
+        # every server is free by the first arrival — the initial state can
+        # never delay a start, so the zero-state fast regimes apply
+        dep = _advance_pool(arrivals, svc, c)
+        both = np.concatenate([free, dep])
+        return dep, np.sort(np.partition(both, len(both) - c)[-c:])
+    h = free.tolist()
+    heapq.heapify(h)
+    out = _heap_advance(np.asarray(arrivals, float).tolist(),
+                        np.asarray(svc, float).tolist(), h)
+    return np.asarray(out), np.sort(np.asarray(h))
 
 
 def _advance_pool(arrivals: np.ndarray, svc: np.ndarray, c: int) -> np.ndarray:
@@ -162,17 +255,58 @@ def _advance_pool(arrivals: np.ndarray, svc: np.ndarray, c: int) -> np.ndarray:
             m = np.arange(len(a))
             out[k::c] = np.maximum.accumulate(a - m * s) + (m + 1) * s
         return out
-    free = [0.0] * c                         # valid min-heap
-    out = [0.0] * r
-    al, sl = arrivals.tolist(), svc.tolist()
-    heapreplace = heapq.heapreplace
-    for j in range(r):
-        f = free[0]
-        a = al[j]
-        d = (a if a > f else f) + sl[j]
-        heapreplace(free, d)
-        out[j] = d
-    return np.asarray(out)
+    return np.asarray(_heap_advance(arrivals.tolist(), svc.tolist(),
+                                    [0.0] * c))
+
+
+def node_pass(arrivals: np.ndarray, sizes: np.ndarray, cpu: DeviceModel,
+              cfg: SchedulerConfig, *, accel: DeviceModel | None = None,
+              cpu_free: np.ndarray | None = None,
+              acc_free: np.ndarray | None = None
+              ) -> tuple[np.ndarray, float, float, np.ndarray, np.ndarray]:
+    """One node's fast dispatch pipeline — offload split, request
+    splitting, FCFS pool advance — optionally stateful via initial
+    executor/accelerator free times (the cluster tier carries them across
+    traffic windows; ``simulate_arrays`` starts idle).
+
+    Returns ``(done_times, cpu_busy_s, accel_work, cpu_free, acc_free)``
+    with NaN marking never-completed queries (e.g. empty pool).
+    """
+    n = len(sizes)
+    B = max(cfg.batch_size, 1)
+    thr = cfg.offload_threshold if accel is not None else None
+    sizes = np.asarray(sizes, np.int64)
+    if cpu_free is None:
+        cpu_free = np.zeros(cfg.n_executors)
+    if acc_free is None:
+        acc_free = np.zeros(cfg.n_accelerators)
+
+    off = sizes >= thr if thr is not None else np.zeros(n, bool)
+    done = np.full(n, np.nan)
+    cpu_busy = 0.0
+    acc_work = 0.0
+
+    cpu_idx = np.flatnonzero(~off)
+    if len(cpu_idx):
+        csz = sizes[cpu_idx]
+        carr = arrivals[cpu_idx]
+        group, req_batch, bounds = split_requests(csz, B)
+        svc_tab = service_time_table(cpu, B)
+        req_svc = svc_tab[req_batch] + cfg.request_overhead_s
+        depart, cpu_free = advance_pool(carr[group], req_svc, cpu_free)
+        starts = np.concatenate(([0], bounds[:-1]))
+        done[cpu_idx] = np.maximum.reduceat(depart, starts)
+        if cfg.n_executors > 0:
+            cpu_busy = float(req_svc.sum())
+
+    acc_idx = np.flatnonzero(off)
+    if len(acc_idx):
+        asz = sizes[acc_idx]
+        acc_tab = service_time_table(accel, int(asz.max()))
+        done[acc_idx], acc_free = advance_pool(arrivals[acc_idx],
+                                               acc_tab[asz], acc_free)
+        acc_work = float(asz.sum())
+    return done, cpu_busy, acc_work, cpu_free, acc_free
 
 
 def simulate_arrays(arrivals: np.ndarray, sizes: np.ndarray,
@@ -186,55 +320,18 @@ def simulate_arrays(arrivals: np.ndarray, sizes: np.ndarray,
     ``generate_queries``/``sample_trace``).
     """
     n = len(sizes)
-    B = max(cfg.batch_size, 1)
-    thr = cfg.offload_threshold if accel is not None else None
-    sizes = np.asarray(sizes, np.int64)
-    tot_work = float(sizes.sum())
-
-    off = sizes >= thr if thr is not None else np.zeros(n, bool)
-    done = np.full(n, np.nan)     # NaN = never completed (e.g. empty pool)
-    cpu_busy = 0.0
-    acc_work = 0.0
-
-    cpu_idx = np.flatnonzero(~off)
-    if len(cpu_idx):
-        csz = sizes[cpu_idx]
-        carr = arrivals[cpu_idx]
-        n_req = -(-csz // B)                 # ⌈size/B⌉ requests per query
-        # flat request arrays, FIFO order == (arrival, intra-query) order,
-        # exactly the order the event loop enqueues them in
-        group = np.repeat(np.arange(len(cpu_idx)), n_req)
-        bounds = np.cumsum(n_req)
-        req_batch = np.full(int(bounds[-1]), B, np.int64)
-        req_batch[bounds - 1] = csz - (n_req - 1) * B      # remainder request
-        svc_tab = service_time_table(cpu, B)
-        req_svc = svc_tab[req_batch] + cfg.request_overhead_s
-        depart = _advance_pool(carr[group], req_svc, cfg.n_executors)
-        starts = np.concatenate(([0], bounds[:-1]))
-        done[cpu_idx] = np.maximum.reduceat(depart, starts)
-        if cfg.n_executors > 0:
-            cpu_busy = float(req_svc.sum())
-
-    acc_idx = np.flatnonzero(off)
-    if len(acc_idx):
-        asz = sizes[acc_idx]
-        acc_tab = service_time_table(accel, int(asz.max()))
-        done[acc_idx] = _advance_pool(arrivals[acc_idx], acc_tab[asz],
-                                      cfg.n_accelerators)
-        acc_work = float(asz.sum())
-
+    tot_work = float(np.asarray(sizes, np.int64).sum())
+    done, cpu_busy, acc_work, _, _ = node_pass(arrivals, sizes, cpu, cfg,
+                                               accel=accel)
     completed = ~np.isnan(done)
     n_done = int(completed.sum())
     if n_done == 0:               # matches the reference's all-dropped result
         return SimResult(0, 0, 0, 0, 0, 0, 0, 0, dropped=n)
     lats = done[completed] - arrivals[completed]
     dur = float(done[completed].max()) - float(arrivals[0])
+    p50, p95, p99, mean = latency_percentiles_ms(lats)
     return SimResult(
-        qps=n_done / dur,
-        p50_ms=float(np.percentile(lats, 50) * 1e3),
-        p95_ms=float(np.percentile(lats, 95) * 1e3),
-        p99_ms=float(np.percentile(lats, 99) * 1e3),
-        mean_ms=float(lats.mean() * 1e3),
+        qps=n_done / dur, p50_ms=p50, p95_ms=p95, p99_ms=p99, mean_ms=mean,
         cpu_util=cpu_busy / (dur * max(cfg.n_executors, 1)),
         accel_frac_work=acc_work / max(tot_work, 1.0),
         n_queries=n_done, dropped=n - n_done)
@@ -243,11 +340,47 @@ def simulate_arrays(arrivals: np.ndarray, sizes: np.ndarray,
 # ------------------------------------------- event-driven reference engine
 
 
+def event_done_times(queries: list[Query], cpu: DeviceModel,
+                     cfg: SchedulerConfig, *, accel: DeviceModel | None = None,
+                     contention: ContentionModel | None = None,
+                     faults: FaultConfig = FaultConfig(),
+                     seed: int = 0) -> np.ndarray:
+    """Per-query completion times (NaN = dropped) from the event-driven
+    reference engine — the per-node entry point the cluster tier uses when
+    faults/contention are enabled, where per-query latencies must be merged
+    across nodes (a per-node ``SimResult``'s percentiles don't compose)."""
+    done_at, *_ = _event_loop(queries, cpu, cfg, accel=accel,
+                              contention=contention, faults=faults, seed=seed)
+    return np.array([done_at.get(q.qid, np.nan) for q in queries])
+
+
 def _simulate_events(queries: list[Query], cpu: DeviceModel,
                      cfg: SchedulerConfig, *, accel: DeviceModel | None = None,
                      contention: ContentionModel | None = None,
                      faults: FaultConfig = FaultConfig(),
                      seed: int = 0) -> SimResult:
+    (done_at, cpu_busy_time, acc_work, tot_work, hedges,
+     requeued) = _event_loop(queries, cpu, cfg, accel=accel,
+                             contention=contention, faults=faults, seed=seed)
+    lats = np.array([done_at[q.qid] - q.arrival for q in queries
+                     if q.qid in done_at])
+    dur = max(d for d in done_at.values()) - queries[0].arrival if done_at else 1.0
+    if len(lats) == 0:
+        return SimResult(0, 0, 0, 0, 0, 0, 0, 0, dropped=len(queries))
+    p50, p95, p99, mean = latency_percentiles_ms(lats)
+    return SimResult(
+        qps=len(lats) / dur, p50_ms=p50, p95_ms=p95, p99_ms=p99, mean_ms=mean,
+        cpu_util=cpu_busy_time / (dur * max(cfg.n_executors, 1)),
+        accel_frac_work=acc_work / max(tot_work, 1.0),
+        n_queries=len(lats), dropped=len(queries) - len(lats),
+        hedges=hedges, requeued=requeued)
+
+
+def _event_loop(queries: list[Query], cpu: DeviceModel,
+                cfg: SchedulerConfig, *, accel: DeviceModel | None = None,
+                contention: ContentionModel | None = None,
+                faults: FaultConfig = FaultConfig(),
+                seed: int = 0) -> tuple:
     rng = np.random.default_rng(seed)
     B = max(cfg.batch_size, 1)
     thr = cfg.offload_threshold if accel is not None else None
@@ -399,24 +532,52 @@ def _simulate_events(queries: list[Query], cpu: DeviceModel,
         else:                              # wake-up: just try dispatching
             dispatch_cpu(now)
 
-    lats = np.array([done_at[q.qid] - q.arrival for q in queries
-                     if q.qid in done_at])
-    dur = max(d for d in done_at.values()) - queries[0].arrival if done_at else 1.0
-    if len(lats) == 0:
-        return SimResult(0, 0, 0, 0, 0, 0, 0, 0, dropped=len(queries))
-    return SimResult(
-        qps=len(lats) / dur,
-        p50_ms=float(np.percentile(lats, 50) * 1e3),
-        p95_ms=float(np.percentile(lats, 95) * 1e3),
-        p99_ms=float(np.percentile(lats, 99) * 1e3),
-        mean_ms=float(lats.mean() * 1e3),
-        cpu_util=cpu_busy_time / (dur * max(cfg.n_executors, 1)),
-        accel_frac_work=acc_work / max(tot_work, 1.0),
-        n_queries=len(lats), dropped=len(queries) - len(lats),
-        hedges=hedges, requeued=requeued)
+    return done_at, cpu_busy_time, acc_work, tot_work, hedges, requeued
 
 
 # ------------------------------------------------- achievable-QPS search
+
+
+def warm_bracket(ok, lo: float, hint: float | None) -> tuple[float, float]:
+    """Seed a doubling bracket around a known-nearby answer instead of
+    doubling up from ``lo``: expand upward from a feasible hint, halve
+    downward (never below the caller's floor) from an infeasible one.
+    Returns the ``(lo, hi)`` to hand to ``bracket_bisect``."""
+    if hint is None or hint <= lo:
+        return lo, lo
+    if ok(hint):
+        return hint, hint * 2
+    hi = hint
+    cand = hint / 2
+    while cand > lo and not ok(cand):
+        hi = cand
+        cand /= 2
+    return max(cand, lo), hi
+
+
+def bracket_bisect(ok, lo: float, hi: float, iters: int,
+                   cap: float | None = None) -> float:
+    """Largest ``x`` with ``ok(x)`` under a monotone feasibility predicate.
+
+    With ``cap``: exponential doubling bracket from ``hi`` first (capped
+    there; a cap reached while still feasible is returned as-is), then
+    bisection.  Without: plain bisection on the caller's ``[lo, hi]``.
+    Callers are expected to memoize ``ok`` — the bracket re-tests ``hi``.
+    Shared by the per-node ``max_qps_under_sla`` and the cluster tier's
+    ``cluster_max_qps`` so the search discipline cannot drift."""
+    if cap is not None:
+        while ok(hi) and hi < cap:
+            lo = hi
+            hi *= 2
+        if ok(hi):                # capped while still feasible (memo hit)
+            return hi
+    for _ in range(iters):
+        mid = (lo + hi) / 2
+        if ok(mid):
+            lo = mid
+        else:
+            hi = mid
+    return lo
 
 
 def max_qps_under_sla(cpu: DeviceModel, cfg: SchedulerConfig, sla_ms: float,
@@ -451,7 +612,7 @@ def max_qps_under_sla(cpu: DeviceModel, cfg: SchedulerConfig, sla_ms: float,
         hit = _memo.get(qps)
         if hit is not None:
             return hit
-        arrivals = unit_times / qps
+        arrivals = rescale_trace(unit_times, qps)
         if use_fast:
             r = simulate_arrays(arrivals, sizes, cpu, cfg, accel=accel)
         else:
@@ -466,27 +627,6 @@ def max_qps_under_sla(cpu: DeviceModel, cfg: SchedulerConfig, sla_ms: float,
         return v
 
     if hi is None:
-        if hint is not None and hint > lo:
-            if ok(hint):                     # expand upward from the hint
-                lo, hi = hint, hint * 2
-            else:                            # shrink downward to re-bracket,
-                hi = hint                    # never below the caller's floor
-                cand = hint / 2
-                while cand > lo and not ok(cand):
-                    hi = cand
-                    cand /= 2
-                lo = max(cand, lo)
-        else:
-            hi = lo
-        while ok(hi) and hi < 4e6:
-            lo = hi
-            hi *= 2
-        if hi >= 4e6:
-            return hi
-    for _ in range(iters):
-        mid = (lo + hi) / 2
-        if ok(mid):
-            lo = mid
-        else:
-            hi = mid
-    return lo
+        lo, hi = warm_bracket(ok, lo, hint)
+        return bracket_bisect(ok, lo, hi, iters, cap=4e6)
+    return bracket_bisect(ok, lo, hi, iters)

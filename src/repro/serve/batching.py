@@ -16,9 +16,18 @@ def bucket_for(size: int, max_bucket: int = 1024) -> int:
 
 def pad_batch(batch: dict, to: int) -> dict:
     """Pad every leaf's leading dim to ``to`` (repeating row 0 — cheap and
-    numerically safe for inference; results past the true size are sliced)."""
+    numerically safe for inference; results past the true size are sliced).
+
+    Raises ``ValueError`` on a leaf larger than ``to``: ``bucket_for``
+    clamps at ``max_bucket``, so an oversize request means the caller
+    forgot to split (see ``ServingRuntime.submit``) — padding "negatively"
+    would silently drop rows."""
     def pad(x):
         n = x.shape[0]
+        if n > to:
+            raise ValueError(
+                f"batch of {n} rows exceeds bucket {to}; split oversize "
+                f"requests into ≤-bucket chunks before padding")
         if n == to:
             return x
         reps = jnp.broadcast_to(x[:1], (to - n,) + x.shape[1:])

@@ -64,8 +64,16 @@ class ServingRuntime:
     # ---------------------------------------------------------------- api
 
     def submit(self, qid: int, batch: dict, size: int) -> None:
-        """Split one query (leaves have leading dim ``size``) into requests."""
-        bsz = self.batch_size
+        """Split one query (leaves have leading dim ``size``) into requests.
+
+        Requests are capped at ``max_bucket`` even when the batch-size knob
+        climbs past it — ``bucket_for`` clamps there, and ``pad_batch``
+        rejects oversize requests rather than dropping rows."""
+        if size <= 0:
+            # zero requests would leave a permanent _outstanding entry
+            # that no worker ever clears, deadlocking drain()
+            raise ValueError(f"query size must be >= 1, got {size}")
+        bsz = min(self.batch_size, self.max_bucket)
         n_req = -(-size // bsz)
         with self._lock:
             self._records[qid] = QueryRecord(qid, size, time.monotonic())

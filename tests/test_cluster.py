@@ -1,0 +1,468 @@
+"""Cluster tier: traffic generators, routers, fleet sim, autoscaler.
+
+All tests run on small synthetic traces and canned device curves so the
+tier-1 wall-clock stays bounded (no JAX model execution, no measuring).
+"""
+import numpy as np
+import pytest
+
+from repro.cluster import (Autoscaler, BurstyTraffic, DiurnalTraffic, Fleet,
+                           MultiTenantTraffic, NodeSpec, Pool,
+                           ScaledDeviceModel, StationaryTraffic,
+                           cluster_max_qps, make_router, simulate_fleet)
+from repro.cluster.router import ROUTERS
+from repro.cluster.traffic import trapezoid
+from repro.core.latency_model import (GPU_1080TI, AnalyticalDeviceModel,
+                                      TableDeviceModel)
+from repro.core.query_gen import PRODUCTION, SizeDist, sample_trace
+from repro.core.simulator import (SchedulerConfig, _advance_pool,
+                                  advance_pool, simulate_arrays)
+
+pytestmark = pytest.mark.cluster
+
+CPU = TableDeviceModel(np.array([1., 4, 16, 64, 256, 1024]),
+                       np.array([.0008, .001, .0018, .0045, .015, .058]))
+# constants chosen so offload wins at large sizes (fixed overhead + cheap
+# per-sample compute — the paper's Fig. 4 shape), unlike the deliberately
+# compute-heavy accelerator in test_system.py
+ACCEL = AnalyticalDeviceModel(
+    flops_per_sample=5e6, mem_bytes_per_sample=1e5, in_bytes_per_sample=4e3,
+    **GPU_1080TI)
+
+
+def _fleet(sky=4, bdw=2, gpu=0, thr=150) -> Fleet:
+    pools = [Pool("skylake", NodeSpec(cpu=CPU, batch_size=8), count=sky)]
+    if bdw:
+        pools.append(Pool("broadwell", NodeSpec(cpu=ScaledDeviceModel(CPU, 1.5),
+                                                batch_size=8), count=bdw))
+    if gpu:
+        pools.append(Pool("gpu", NodeSpec(cpu=CPU, accel=ACCEL, batch_size=8,
+                                          offload_threshold=thr), count=gpu))
+    return Fleet(pools)
+
+
+# ------------------------------------------------------------ traffic
+
+
+@pytest.mark.parametrize("traffic", [
+    StationaryTraffic(400.0),
+    DiurnalTraffic(base_qps=400.0, amplitude=0.6, period_s=10.0),
+    BurstyTraffic(base_qps=300.0, burst_mult=4.0, bursts=((2.0, 1.0),)),
+], ids=["stationary", "diurnal", "bursty"])
+def test_traffic_rate_integrates_to_query_count(traffic):
+    horizon = 10.0
+    expect = traffic.expected_queries(horizon)
+    # grid integral agrees with the closed form
+    grid = np.linspace(0, horizon, 8192)
+    np.testing.assert_allclose(trapezoid(traffic.rate(grid), grid), expect,
+                               rtol=1e-3)
+    # sampled count is a Poisson(expect) draw: check within 5 sigma
+    t, s = traffic.generate(np.random.default_rng(0), horizon)
+    assert abs(len(t) - expect) < 5 * np.sqrt(expect), (len(t), expect)
+    assert len(t) == len(s)
+    assert np.all(np.diff(t) >= 0) and (len(t) == 0 or t[-1] < horizon)
+    assert s.min() >= 1 and s.max() <= PRODUCTION.max_size
+
+
+def test_traffic_deterministic_under_seed():
+    tr = DiurnalTraffic(base_qps=500.0, amplitude=0.5, period_s=5.0)
+    t1, s1 = tr.generate(np.random.default_rng(7), 5.0)
+    t2, s2 = tr.generate(np.random.default_rng(7), 5.0)
+    np.testing.assert_array_equal(t1, t2)
+    np.testing.assert_array_equal(s1, s2)
+    t3, _ = tr.generate(np.random.default_rng(8), 5.0)
+    assert len(t3) == 0 or not np.array_equal(t1, t3)
+
+
+def test_diurnal_rate_peaks_and_troughs():
+    tr = DiurnalTraffic(base_qps=100.0, amplitude=0.5, period_s=4.0)
+    assert np.isclose(tr.rate(np.array([1.0]))[0], 150.0)   # sin peak
+    assert np.isclose(tr.rate(np.array([3.0]))[0], 50.0)    # trough
+    assert tr.peak_rate == 150.0
+    with pytest.raises(ValueError):
+        DiurnalTraffic(base_qps=100.0, amplitude=1.5)
+
+
+def test_bursty_dip_and_overlapping_bursts():
+    # burst_mult < 1 is a traffic dip: the thinning peak must stay at base
+    dip = BurstyTraffic(base_qps=1000.0, burst_mult=0.25, bursts=((1.0, 1.0),))
+    assert dip.peak_rate == 1000.0
+    t, _ = dip.generate(np.random.default_rng(0), 3.0)
+    expect = dip.expected_queries(3.0)          # 1000·3 − 750 = 2250
+    assert np.isclose(expect, 2250.0)
+    assert abs(len(t) - expect) < 5 * np.sqrt(expect)
+    # overlapping bursts apply the multiplier once (rate() semantics)
+    over = BurstyTraffic(base_qps=100.0, burst_mult=4.0,
+                         bursts=((0.0, 2.0), (1.0, 2.0)))
+    assert np.isclose(over.expected_queries(3.0), 1200.0)
+    grid = np.linspace(0, 3.0, 8192)
+    np.testing.assert_allclose(trapezoid(over.rate(grid), grid), 1200.0,
+                               rtol=1e-2)
+
+
+def test_multi_tenant_rejects_generate_size_dist():
+    mt = MultiTenantTraffic(tenants=(("a", StationaryTraffic(10.0),
+                                      PRODUCTION),))
+    with pytest.raises(ValueError, match="tenant"):
+        mt.generate(np.random.default_rng(0), 1.0,
+                    size_dist=SizeDist("fixed", mean=4.0))
+
+
+def test_multi_tenant_merges_sorted_and_labeled():
+    mt = MultiTenantTraffic(tenants=(
+        ("rmc1", StationaryTraffic(200.0), PRODUCTION),
+        ("ncf", StationaryTraffic(100.0), SizeDist("fixed", mean=4.0)),
+    ))
+    t, s, lab = mt.generate_labeled(np.random.default_rng(0), 4.0)
+    assert np.all(np.diff(t) >= 0)
+    assert set(np.unique(lab)) <= {0, 1}
+    # tenant 1 is fixed-size 4
+    assert np.all(s[lab == 1] == 4)
+    np.testing.assert_allclose(mt.expected_queries(4.0), 1200.0)
+    counts = np.bincount(lab, minlength=2)
+    assert abs(counts[0] - 800) < 5 * np.sqrt(800)
+    assert abs(counts[1] - 400) < 5 * np.sqrt(400)
+
+
+# ----------------------------------------------------- stateful advance
+
+
+def test_advance_pool_windowed_matches_single_shot():
+    """Splitting a trace into windows and carrying free-times across them
+    must give the exact same departures as one stateless advance."""
+    rng = np.random.default_rng(0)
+    arr = np.sort(rng.uniform(0, 2.0, 500))
+    svc = rng.uniform(0.001, 0.05, 500)
+    for c in (1, 3, 40):
+        ref = _advance_pool(arr, svc, c)
+        free = np.zeros(c)
+        parts = []
+        for lo, hi in ((0.0, 0.5), (0.5, 0.7), (0.7, 2.1)):
+            m = (arr >= lo) & (arr < hi)
+            dep, free = advance_pool(arr[m], svc[m], free)
+            parts.append(dep)
+        np.testing.assert_allclose(np.concatenate(parts), ref, rtol=1e-12)
+
+
+def test_advance_pool_empty_and_zero_servers():
+    dep, free = advance_pool(np.empty(0), np.empty(0), np.zeros(3))
+    assert len(dep) == 0 and len(free) == 3
+    dep, free = advance_pool(np.array([0.5]), np.array([0.1]), np.empty(0))
+    assert np.isnan(dep).all()
+
+
+# ------------------------------------------------------------- routers
+
+
+def test_round_robin_balances_and_continues_across_windows():
+    fleet = _fleet(sky=3, bdw=1)
+    nodes = fleet.node_views()
+    r = make_router("round_robin")
+    a1 = r.assign(np.arange(6.0), np.ones(6, np.int64), nodes)
+    a2 = r.assign(np.arange(2.0), np.ones(2, np.int64), nodes)
+    np.testing.assert_array_equal(np.concatenate([a1, a2]),
+                                  np.arange(8) % 4)
+
+
+def test_least_outstanding_prefers_faster_nodes():
+    fleet = _fleet(sky=2, bdw=2)
+    fleet.estimate_capacity(100.0, n_queries=200)
+    tr = StationaryTraffic(2000.0)
+    t, s = tr.generate(np.random.default_rng(0), 1.0)
+    r = make_router("least_outstanding")
+    assign = r.assign(t, s, fleet.node_views())
+    pools = np.array([nv.pool for nv in fleet.node_views()])
+    sky = (pools[assign] == "skylake").sum()
+    bdw = (pools[assign] == "broadwell").sum()
+    assert sky > bdw     # 1.5× slower nodes drain slower → get less work
+
+
+def test_hetero_router_sends_big_queries_to_accel_nodes():
+    fleet = _fleet(sky=2, bdw=1, gpu=2, thr=150)
+    fleet.estimate_capacity(100.0, n_queries=200)
+    tr = StationaryTraffic(1500.0)
+    t, s = tr.generate(np.random.default_rng(1), 1.0)
+    r = make_router("hetero")
+    assign = r.assign(t, s, fleet.node_views())
+    accel = np.array([nv.spec.has_accel for nv in fleet.node_views()])
+    biggest = s >= np.percentile(s, 99.5)
+    assert accel[assign[biggest]].all()
+
+
+def test_router_backlog_survives_fleet_resize():
+    """Autoscaling changes the node list between windows; surviving nodes
+    must keep their backlog (state is keyed by node identity, not index)."""
+    fleet = _fleet(sky=2, bdw=1)
+    fleet.estimate_capacity(100.0, n_queries=200)
+    r = make_router("least_outstanding")
+    t, s = StationaryTraffic(3000.0).generate(np.random.default_rng(3), 0.5)
+    r.assign(t, s, fleet.node_views())
+    before = dict(r._store)
+    assert any(v > 0 for v in before.values())
+    fleet.scale("skylake", +1)               # resize: one new idle node
+    nodes = fleet.node_views()
+    a2 = r.assign(t[:1] + 0.5, s[:1], nodes)
+    # the new node is idle (0 backlog) while old ones still carry work, so
+    # the single query must land on the freshly added node
+    nv = nodes[int(a2[0])]
+    assert (nv.pool, nv.index_in_pool) not in before
+
+
+def test_size_aware_seeds_new_node_at_class_level():
+    """A node added mid-run joins the WRR at its *own class's* count level
+    — classes serve disjoint traffic, so seeding at the global minimum
+    would still flood the newcomer."""
+    fleet = _fleet(sky=2, bdw=0, gpu=1, thr=150)
+    fleet.estimate_capacity(100.0, n_queries=200)
+    r = make_router("size_aware")
+    # smalls vastly outnumber bigs → CPU counts ≫ accel counts
+    t = np.arange(400) * 1e-3
+    s = np.where(np.arange(400) % 100 == 0, 500, 4).astype(np.int64)
+    r.assign(t, s, fleet.node_views())
+    cpu_counts = [v for k, v in r._store.items() if k[0] == "skylake"]
+    fleet.scale("skylake", +1)
+    nodes = fleet.node_views()
+    r.assign(t[:1] + 1.0, s[:1], nodes)
+    seeded = r._store[("skylake", 2)]
+    assert seeded >= min(cpu_counts)         # class level, not accel's ~4
+
+
+def test_autoscaler_without_window_raises():
+    fleet = _fleet(sky=2, bdw=0)
+    fleet.estimate_capacity(100.0, n_queries=200)
+    t, s = StationaryTraffic(100.0).generate(np.random.default_rng(0), 1.0)
+    with pytest.raises(ValueError, match="window_s"):
+        simulate_fleet(t, s, fleet, make_router("round_robin"),
+                       autoscaler=Autoscaler(sla_ms=100.0))
+
+
+def test_every_router_yields_valid_assignment():
+    fleet = _fleet(sky=2, bdw=1, gpu=1)
+    fleet.estimate_capacity(100.0, n_queries=200)
+    t, s = StationaryTraffic(800.0).generate(np.random.default_rng(2), 1.0)
+    for name in ROUTERS:
+        assign = make_router(name).assign(t, s, fleet.node_views())
+        assert assign.shape == t.shape
+        assert assign.min() >= 0 and assign.max() < fleet.n_nodes
+    with pytest.raises(ValueError):
+        make_router("nope")
+
+
+# ---------------------------------------------------------- fleet sim
+
+
+def test_single_node_fleet_matches_simulate_arrays():
+    """A 1-node fleet through the cluster driver must equal the per-node
+    fast simulator (same engine underneath)."""
+    fleet = Fleet([Pool("only", NodeSpec(cpu=CPU, batch_size=8), count=1)])
+    unit_times, sizes = sample_trace(np.random.default_rng(3), 500)
+    times = unit_times / 400.0
+    ref = simulate_arrays(times, sizes, CPU,
+                          SchedulerConfig(batch_size=8, n_executors=40))
+    r = simulate_fleet(times, sizes, fleet, make_router("round_robin"))
+    np.testing.assert_allclose(r.p95_ms, ref.p95_ms, rtol=1e-9)
+    np.testing.assert_allclose(r.p50_ms, ref.p50_ms, rtol=1e-9)
+    assert r.n_queries == ref.n_queries and r.dropped == ref.dropped
+
+
+def test_single_accel_node_fleet_matches_simulate_arrays():
+    """The node advance must track simulate_arrays on the offload path too
+    (overhead/threshold/accelerator-count semantics must not drift)."""
+    spec = NodeSpec(cpu=CPU, accel=ACCEL, batch_size=8, offload_threshold=150,
+                    n_accelerators=2)
+    fleet = Fleet([Pool("gpu", spec, count=1)])
+    unit_times, sizes = sample_trace(np.random.default_rng(10), 500)
+    times = unit_times / 400.0
+    ref = simulate_arrays(times, sizes, CPU, spec.scheduler_config(),
+                          accel=ACCEL)
+    r = simulate_fleet(times, sizes, fleet, make_router("round_robin"))
+    np.testing.assert_allclose(r.p95_ms, ref.p95_ms, rtol=1e-9)
+    np.testing.assert_allclose(r.p50_ms, ref.p50_ms, rtol=1e-9)
+    assert r.n_queries == ref.n_queries and r.dropped == ref.dropped
+
+
+def test_windowing_is_transparent_without_autoscaler():
+    fleet = _fleet(sky=3, bdw=2)
+    t, s = StationaryTraffic(1200.0).generate(np.random.default_rng(4), 2.0)
+    r_one = simulate_fleet(t, s, fleet, make_router("round_robin"))
+    r_win = simulate_fleet(t, s, fleet, make_router("round_robin"),
+                           window_s=0.25)
+    np.testing.assert_allclose(r_win.p95_ms, r_one.p95_ms, rtol=1e-9)
+    assert r_win.n_queries == r_one.n_queries
+    # timeline is a fast-path windowing feature, autoscaler or not;
+    # offered × actual window width (last one truncated) covers every query
+    assert len(r_win.timeline) == 8
+    starts = [row[0] for row in r_win.timeline] + [t[-1]]
+    widths = np.diff(starts)
+    counts = sum(row[1] * w for row, w in zip(r_win.timeline, widths))
+    np.testing.assert_allclose(counts, len(t), rtol=1e-9)
+
+
+def test_shifted_trace_bills_span_not_absolute_time():
+    """A trace starting at t=1000 must not run ~1000s of phantom windows or
+    bill node-hours from t=0; windowed fast path and events mode agree on
+    the arrival span."""
+    fleet = _fleet(sky=2, bdw=0)
+    t, s = StationaryTraffic(400.0).generate(np.random.default_rng(11), 2.0)
+    r0 = simulate_fleet(t, s, fleet, make_router("round_robin"),
+                        window_s=0.5)
+    r1 = simulate_fleet(t + 1000.0, s, fleet, make_router("round_robin"),
+                        window_s=0.5)
+    assert len(r1.timeline) == len(r0.timeline)
+    np.testing.assert_allclose(r1.node_hours, r0.node_hours, rtol=1e-9)
+    np.testing.assert_allclose(r1.p95_ms, r0.p95_ms, rtol=1e-9)
+    # node-hours cover the arrival span, not the window grid's ceiling
+    span_nh = fleet.n_nodes * (t[-1] - t[0]) / 3600.0
+    np.testing.assert_allclose(r0.node_hours, span_nh, rtol=1e-9)
+
+
+def test_hetero_beats_round_robin_on_heterogeneous_fleet():
+    fleet = _fleet(sky=3, bdw=3, gpu=2, thr=150)
+    fleet.estimate_capacity(100.0, n_queries=300)
+    q_rr = cluster_max_qps(fleet, make_router("round_robin"), 100.0,
+                           n_queries=400, iters=6)
+    q_het = cluster_max_qps(fleet, make_router("hetero"), 100.0,
+                            n_queries=400, iters=6)
+    assert q_het > q_rr, (q_het, q_rr)
+
+
+def test_split_requests_rejects_zero_sizes():
+    """Public entry point: a zero-size query would corrupt its neighbor's
+    remainder request slot, so it must be rejected."""
+    from repro.core.simulator import split_requests
+    with pytest.raises(ValueError, match="sizes"):
+        split_requests(np.array([5, 0]), 4)
+    group, req_batch, bounds = split_requests(np.array([5, 1]), 4)
+    np.testing.assert_array_equal(req_batch, [4, 1, 1])
+
+
+def test_cluster_max_qps_hint_matches_cold():
+    fleet = _fleet(sky=2, bdw=1)
+    fleet.estimate_capacity(100.0, n_queries=200)
+    cold = cluster_max_qps(fleet, make_router("round_robin"), 100.0,
+                           n_queries=300, iters=7)
+    for hint in (cold, cold * 0.6, cold * 1.7):
+        warm = cluster_max_qps(fleet, make_router("round_robin"), 100.0,
+                               n_queries=300, iters=7, hint=hint)
+        assert abs(warm - cold) <= 0.05 * cold, (hint, warm, cold)
+
+
+def test_cluster_max_qps_infeasible_returns_zero():
+    """A fleet that can't meet the SLA at any rate must report 0, not the
+    bisection floor."""
+    fleet = _fleet(sky=1, bdw=0)
+    q = cluster_max_qps(fleet, make_router("round_robin"), 1e-6,
+                        n_queries=100, iters=4)
+    assert q == 0.0
+
+
+def test_fleet_sim_with_faults_routes_through_event_engine():
+    from repro.core.simulator import FaultConfig
+    fleet = _fleet(sky=2, bdw=1)
+    t, s = StationaryTraffic(300.0).generate(np.random.default_rng(5), 1.0)
+    faults = FaultConfig(straggler_frac=0.05, straggler_mult=4.0)
+    r = simulate_fleet(t, s, fleet, make_router("round_robin"), faults=faults)
+    r0 = simulate_fleet(t, s, fleet, make_router("round_robin"))
+    assert r.n_queries == len(t)
+    assert r.p95_ms > r0.p95_ms          # stragglers hurt the tail
+    with pytest.raises(ValueError):
+        simulate_fleet(t, s, fleet, make_router("round_robin"), faults=faults,
+                       window_s=0.5, autoscaler=Autoscaler(sla_ms=100.0))
+
+
+def test_unsorted_times_rejected():
+    fleet = _fleet(sky=1, bdw=0)
+    with pytest.raises(ValueError):
+        simulate_fleet(np.array([1.0, 0.5]), np.array([4, 4]), fleet,
+                       make_router("round_robin"))
+
+
+# ----------------------------------------------------------- autoscaler
+
+
+def test_autoscaler_tracks_diurnal_load_and_saves_node_hours():
+    fleet = _fleet(sky=6, bdw=2)
+    fleet.estimate_capacity(100.0, n_queries=300)
+    base = 0.45 * fleet.total_capacity()
+    tr = DiurnalTraffic(base_qps=base, amplitude=0.6, period_s=8.0)
+    t, s = tr.generate(np.random.default_rng(6), 8.0)
+    scaler = Autoscaler(sla_ms=100.0)
+    r = simulate_fleet(t, s, fleet, make_router("least_outstanding"),
+                       window_s=0.5, autoscaler=scaler)
+    static_nh = fleet.n_nodes * 8.0 / 3600.0
+    assert r.node_hours < static_nh          # shed capacity in the trough
+    assert len(r.events) > 0
+    assert r.meets(100.0)
+    assert fleet.n_nodes == 8                # caller's fleet untouched
+    sizes = [row[2] for row in r.timeline]
+    assert min(sizes) < 8                    # actually scaled down
+
+
+def test_autoscaler_scales_up_under_pressure():
+    fleet = _fleet(sky=2, bdw=0)
+    fleet.pool("skylake").max_count = 10
+    fleet.estimate_capacity(100.0, n_queries=300)
+    overload = 2.0 * fleet.total_capacity()
+    t, s = StationaryTraffic(overload).generate(np.random.default_rng(7), 2.0)
+    scaler = Autoscaler(sla_ms=100.0, cooldown_windows=0)
+    r = simulate_fleet(t, s, fleet, make_router("least_outstanding"),
+                       window_s=0.2, autoscaler=scaler)
+    assert r.n_nodes > 2
+    assert all(e.delta > 0 for e in r.events)
+
+
+def test_autoscaler_requires_capacity_weights():
+    """An unweighted fleet reads as ∞ utilization — must error clearly
+    instead of scaling up every window."""
+    fleet = _fleet(sky=2, bdw=0)                # no tune/estimate_capacity
+    t, s = StationaryTraffic(50.0).generate(np.random.default_rng(0), 1.0)
+    with pytest.raises(ValueError, match="capacity"):
+        simulate_fleet(t, s, fleet, make_router("round_robin"),
+                       window_s=0.2, autoscaler=Autoscaler(sla_ms=100.0))
+
+
+def test_autoscaler_respects_pool_bounds():
+    fleet = _fleet(sky=2, bdw=0)
+    fleet.pool("skylake").min_count = 2
+    fleet.pool("skylake").max_count = 3
+    fleet.estimate_capacity(100.0, n_queries=200)
+    scaler = Autoscaler(sla_ms=100.0, cooldown_windows=0)
+    # crushing load: wants to scale far past max_count
+    t, s = StationaryTraffic(4 * fleet.total_capacity()).generate(
+        np.random.default_rng(8), 1.0)
+    r = simulate_fleet(t, s, fleet, make_router("round_robin"),
+                       window_s=0.2, autoscaler=scaler)
+    assert r.n_nodes == 3
+    # idle fleet: wants to scale below min_count
+    t, s = StationaryTraffic(10.0).generate(np.random.default_rng(9), 1.0)
+    r = simulate_fleet(t, s, fleet, make_router("round_robin"),
+                       window_s=0.2, autoscaler=scaler)
+    assert r.n_nodes >= 2
+
+
+# ----------------------------------------------------------- fleet api
+
+
+def test_fleet_tune_fills_knobs_and_capacity():
+    fleet = _fleet(sky=1, bdw=1)
+    fleet.tune(100.0, n_queries=300)
+    for p in fleet.pools:
+        assert p.qps_capacity > 0
+        assert p.spec.batch_size >= 1
+    sky = fleet.pool("skylake").qps_capacity
+    bdw = fleet.pool("broadwell").qps_capacity
+    assert sky > bdw                         # 1.5× slower silicon
+
+
+def test_fleet_validation_and_scale():
+    with pytest.raises(ValueError):
+        Fleet([])
+    with pytest.raises(ValueError):
+        Fleet([Pool("a", NodeSpec(cpu=CPU), 1), Pool("a", NodeSpec(cpu=CPU), 1)])
+    fleet = _fleet(sky=2, bdw=1)
+    assert fleet.scale("skylake", -5) == -1  # clamped at min_count=1
+    assert fleet.pool("skylake").count == 1
+    fleet.pool("skylake").max_count = 2
+    assert fleet.scale("skylake", +5) == 1
+    with pytest.raises(KeyError):
+        fleet.pool("tpu")

@@ -12,10 +12,14 @@ from repro.serve.runtime import OnlineController, ServingRuntime
 
 def test_bucketing():
     assert bucket_for(1) == 1
+    assert bucket_for(2) == 2
     assert bucket_for(3) == 4
     assert bucket_for(64) == 64
     assert bucket_for(65) == 128
+    assert bucket_for(1024) == 1024
+    assert bucket_for(1025, max_bucket=1024) == 1024    # clamped
     assert bucket_for(5000, max_bucket=1024) == 1024
+    assert bucket_for(5, max_bucket=4) == 4
 
 
 def test_pad_and_slice_roundtrip():
@@ -24,6 +28,49 @@ def test_pad_and_slice_roundtrip():
     assert p["x"].shape == (8, 2)
     out = slice_result(p, 3)
     np.testing.assert_array_equal(np.asarray(out["x"]), np.asarray(b["x"]))
+    # exact fit: no copy needed, shapes preserved
+    q = pad_batch(b, 3)
+    assert q["x"].shape == (3, 2)
+    # multi-leaf round-trip
+    b2 = {"x": jnp.ones((5, 2)), "y": jnp.zeros((5,))}
+    p2 = pad_batch(b2, 8)
+    assert p2["x"].shape == (8, 2) and p2["y"].shape == (8,)
+    out2 = slice_result(p2, 5)
+    assert out2["x"].shape == (5, 2) and out2["y"].shape == (5,)
+
+
+def test_pad_batch_rejects_oversize():
+    """A request larger than its bucket means the caller forgot to split —
+    pad_batch must refuse instead of silently dropping rows (it used to
+    crash with a negative broadcast)."""
+    b = {"x": jnp.ones((9, 2))}
+    with pytest.raises(ValueError, match="split oversize"):
+        pad_batch(b, 8)
+
+
+def test_submit_rejects_zero_size():
+    """size=0 would enqueue zero requests but leave a permanent
+    _outstanding entry, deadlocking drain()."""
+    rt = _runtime()
+    try:
+        with pytest.raises(ValueError, match="size"):
+            rt.submit(0, {"x": jnp.ones((0, 4))}, 0)
+    finally:
+        rt.shutdown()
+
+
+def test_runtime_splits_oversize_when_knob_exceeds_bucket():
+    """The online controller can climb batch_size past max_bucket; submit
+    must cap request size at max_bucket so no request outruns its bucket."""
+    rt = _runtime(batch_size=64)
+    rt.max_bucket = 16
+    try:
+        rt.submit(0, {"x": jnp.ones((50, 4))}, 50)      # → ⌈50/16⌉ requests
+        rt.drain(timeout=60)
+        recs = rt.completed()
+        assert len(recs) == 1 and recs[0].latency_ms > 0
+    finally:
+        rt.shutdown()
 
 
 def _runtime(batch_size=32, n_workers=2):
