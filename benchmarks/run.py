@@ -29,6 +29,7 @@ SUITES = [
     ("fig14_gpu_fraction", "benchmarks.gpu_fraction"),
     ("cluster_capacity", "benchmarks.cluster_capacity"),
     ("sched_speed", "benchmarks.sched_speed"),
+    ("live_parity", "benchmarks.live_parity"),
     ("roofline_report", "benchmarks.roofline_report"),
 ]
 

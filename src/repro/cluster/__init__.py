@@ -1,21 +1,38 @@
-"""Cluster tier: heterogeneous fleet simulation on top of the per-node fast
-simulator (paper §VII — DeepRecSched deployed "on hundreds of machines").
+"""Cluster tier: heterogeneous serving fleets — simulated or live — behind
+one ``NodeBackend`` interface (paper §VII — DeepRecSched deployed "on
+hundreds of machines", validated against real execution).
 
+* ``backend`` — the ``NodeBackend`` contract (submit / advance-to-time /
+  completed-records / capacity weight) plus ``SimNodeBackend``, the numpy
+  fast engine behind it.
+* ``live`` — ``LiveNodeBackend``: real ``ServingRuntime`` instances (jitted
+  JAX models, wall-clock pacing, per-node online controllers) behind the
+  same contract, with device-curve calibration to close the sim-vs-real
+  loop.
 * ``fleet`` — ``NodeSpec``/``Pool``/``Fleet``: mixed CPU generations and
   accelerator nodes, each pool with its own DeepRecSched knobs.
-* ``router`` — pluggable query-routing policies (round-robin,
-  least-outstanding-work, size-aware, Hercules-style heterogeneity-aware).
+* ``router`` — pluggable, backend-agnostic query-routing policies
+  (round-robin, least-outstanding-work, size-aware, Hercules-style
+  heterogeneity-aware with per-tenant affinity).
 * ``traffic`` — diurnal / bursty / multi-tenant arrival scenarios.
 * ``autoscaler`` — reactive p95-vs-SLA pool scaling with node-hour
-  accounting.
-* ``cluster_sim`` — the shared-timeline driver (numpy fast engine per node;
-  event engine per node when faults/contention are enabled).
+  accounting, against the ``CapacityLedger`` protocol.
+* ``cluster_sim`` — ``drive_fleet``, the engine-agnostic shared-timeline
+  driver (plus the event engine per node when faults/contention are
+  enabled).
 """
-from repro.cluster.autoscaler import Autoscaler, ScalingEvent  # noqa: F401
+from repro.cluster.autoscaler import (Autoscaler,  # noqa: F401
+                                      CapacityLedger, ScalingEvent)
+from repro.cluster.backend import (CompletedQuery, NodeBackend,  # noqa: F401
+                                   NodeHandle, SimNodeBackend, sim_backends)
 from repro.cluster.cluster_sim import (ClusterResult,  # noqa: F401
-                                       cluster_max_qps, simulate_fleet)
+                                       cluster_max_qps, drive_fleet,
+                                       simulate_fleet)
 from repro.cluster.fleet import (Fleet, NodeSpec, Pool,  # noqa: F401
                                  ScaledDeviceModel)
+from repro.cluster.live import (BucketedDeviceModel,  # noqa: F401
+                                LiveNodeBackend, WallClock, calibrate_device,
+                                live_node)
 from repro.cluster.router import (HeterogeneityAwareRouter,  # noqa: F401
                                   LeastOutstandingRouter, RoundRobinRouter,
                                   Router, SizeAwareRouter, make_router)

@@ -20,12 +20,33 @@ queueing relief per node-hour spent), shrink the one with the lowest
 ``max_count`` bounds fall through to the next candidate.  Capacity
 consumed is accounted in node-hours by the driver; every decision is
 recorded as a ``ScalingEvent`` for the report.
+
+The autoscaler never reaches into engine state: it sees only a
+``CapacityLedger`` — named pools with capacity weights and a ``scale``
+method.  ``fleet.Fleet`` is the canonical ledger; the driver
+(``cluster_sim.drive_fleet``) materializes the corresponding node
+backends — simulated or live — through its backend factory, so the same
+scaling policy governs either engine.
 """
 from __future__ import annotations
 
 import dataclasses
+from typing import Protocol, Sequence, runtime_checkable
 
-from repro.cluster.fleet import Fleet
+
+@runtime_checkable
+class CapacityLedger(Protocol):
+    """What the autoscaler needs of a fleet: named pools carrying capacity
+    weights and bounded resizing.  Satisfied by ``fleet.Fleet``."""
+
+    pools: Sequence
+
+    def total_capacity(self) -> float: ...
+
+    def scale(self, name: str, delta: int) -> int: ...
+
+    @property
+    def n_nodes(self) -> int: ...
 
 
 @dataclasses.dataclass(frozen=True)
@@ -53,7 +74,7 @@ class Autoscaler:
         self.events, self._cooldown = [], 0
 
     def observe(self, t_s: float, p95_ms: float, offered_qps: float,
-                fleet: Fleet) -> int:
+                fleet: CapacityLedger) -> int:
         """One window's verdict; mutates ``fleet`` and returns the node
         delta applied (0 when within band or cooling down)."""
         if self._cooldown > 0:

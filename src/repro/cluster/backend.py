@@ -1,0 +1,169 @@
+"""The ``NodeBackend`` interface: one serving-node contract, two engines.
+
+A backend is what the fleet driver (``cluster_sim.drive_fleet``) and the
+routers see of a node — the same four capabilities regardless of whether
+the node is simulated or real:
+
+  * ``submit(idx, times, sizes, model_ids)`` — a sorted window of queries
+    routed to this node (``idx`` are global trace indices; ``model_ids``
+    carry the per-query tenant label from
+    ``MultiTenantTraffic.generate_labeled``);
+  * ``advance_to(t)`` — advance the node to timeline time ``t`` (a no-op
+    for simulated nodes, whose completion times are computed analytically
+    at submit; a wall-clock wait for live nodes);
+  * ``completed_records()`` — per-query completion facts
+    (``CompletedQuery``), in trace-time coordinates for both engines;
+  * ``weight`` — the capacity weight routers consume (per-node achievable
+    QPS, from ``Fleet.tune``/``estimate_capacity`` or live calibration).
+
+``SimNodeBackend`` wraps the stateful numpy fast-engine entry points in
+``core.simulator`` (``node_pass`` carrying executor/accelerator free times
+across traffic windows — exactly the pipeline ``simulate_arrays`` runs).
+``cluster.live.LiveNodeBackend`` wraps a real ``serve.runtime
+.ServingRuntime`` executing jitted models on this host.  Routers are
+engine-blind: they read only the ``NodeHandle`` surface (identity, spec,
+weight), so the same policy object produces the same routing decisions
+against either backend kind — the property ``benchmarks/live_parity.py``
+exploits to close the sim-vs-real loop.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Protocol, runtime_checkable
+
+import numpy as np
+
+from repro.cluster.fleet import NodeSpec, NodeView
+from repro.core.simulator import node_pass
+
+
+@runtime_checkable
+class NodeHandle(Protocol):
+    """The router-facing surface of a node: stable identity, the spec the
+    cost estimators price work with, and a capacity weight.  Satisfied by
+    ``fleet.NodeView`` and by every ``NodeBackend``."""
+    pool: str
+    index_in_pool: int
+    spec: NodeSpec
+    weight: float
+
+
+@dataclasses.dataclass
+class CompletedQuery:
+    """One query's completion facts, in trace-time seconds (live backends
+    convert wall clock back to the trace timeline so sim and live results
+    are directly comparable)."""
+    index: int                  # global index into the driver's trace
+    t_arrival: float
+    t_done: float               # NaN = dropped / never completed
+    model_id: int = -1          # tenant label; -1 = unlabeled traffic
+    error: str | None = None    # live only: the apply_fn failure, if any
+
+    @property
+    def latency_ms(self) -> float:
+        return (self.t_done - self.t_arrival) * 1e3
+
+
+class NodeBackend:
+    """Base class for serving-node backends (see module docstring).
+
+    ``realtime`` distinguishes the two timeline semantics: simulated
+    backends complete work analytically the moment it is submitted, live
+    backends complete work when the wall clock does.  A fleet must be
+    homogeneous in this flag — the driver refuses to mix virtual and wall
+    time on one timeline.
+    """
+
+    realtime = False
+
+    pool: str = "node"
+    index_in_pool: int = 0
+    spec: NodeSpec
+    weight: float = 1.0
+
+    @property
+    def key(self) -> tuple[str, int]:
+        """Stable node identity — what router state and the driver's
+        backend pool are keyed by across fleet resizes."""
+        return (self.pool, self.index_in_pool)
+
+    @property
+    def capacity_weight(self) -> float:
+        return self.weight
+
+    def start(self, t0: float) -> None:
+        """Anchor the backend's timeline at trace time ``t0`` (live
+        backends pin the shared wall clock here; sim backends need
+        nothing — their free times were seeded at construction)."""
+
+    def submit(self, idx: np.ndarray, times: np.ndarray, sizes: np.ndarray,
+               model_ids: np.ndarray | None = None) -> np.ndarray | None:
+        """Accept a sorted window of queries routed to this node.
+
+        Simulated backends return the per-query completion times
+        immediately (the driver folds them into its result arrays without
+        waiting); live backends return ``None`` — their completions
+        surface later through ``completed_records``.
+        """
+        raise NotImplementedError
+
+    def advance_to(self, t: float) -> None:
+        """Advance the node's timeline to trace time ``t``."""
+
+    def drain(self, timeout: float = 120.0) -> None:
+        """Block until all submitted work has completed."""
+
+    def completed_records(self) -> list[CompletedQuery]:
+        """Everything this node has completed so far."""
+        raise NotImplementedError
+
+    def close(self) -> None:
+        """Release node resources (worker threads, devices)."""
+
+
+class SimNodeBackend(NodeBackend):
+    """A simulated node: the numpy fast engine behind the backend contract.
+
+    Wraps ``core.simulator.node_pass`` statefully — executor and
+    accelerator free times persist across ``submit`` calls, so queued work
+    from one traffic window delays the next, exactly as the windowed
+    driver has always modeled it.  ``t0`` seeds the free times at the
+    node's boot instant (autoscaled nodes boot idle at the window start
+    they first appear in).
+    """
+
+    def __init__(self, view: NodeView, t0: float = 0.0):
+        self.pool = view.pool
+        self.index_in_pool = view.index_in_pool
+        self.spec = view.spec
+        self.weight = view.weight
+        self.cfg = view.spec.scheduler_config()
+        self.cpu_free = np.full(self.spec.n_executors, float(t0))
+        self.acc_free = np.full(self.spec.n_accelerators, float(t0))
+        self._chunks: list[tuple[np.ndarray, np.ndarray, np.ndarray,
+                                 np.ndarray | None]] = []
+
+    def submit(self, idx: np.ndarray, times: np.ndarray, sizes: np.ndarray,
+               model_ids: np.ndarray | None = None) -> np.ndarray:
+        done, _, _, self.cpu_free, self.acc_free = node_pass(
+            times, sizes, self.spec.cpu, self.cfg, accel=self.spec.accel,
+            cpu_free=self.cpu_free, acc_free=self.acc_free)
+        self._chunks.append((np.asarray(idx), np.asarray(times, float),
+                             done, model_ids))
+        return done
+
+    def completed_records(self) -> list[CompletedQuery]:
+        out = []
+        for idx, times, done, mids in self._chunks:
+            for j in range(len(idx)):
+                out.append(CompletedQuery(
+                    index=int(idx[j]), t_arrival=float(times[j]),
+                    t_done=float(done[j]),
+                    model_id=int(mids[j]) if mids is not None else -1))
+        return out
+
+
+def sim_backends(views: list[NodeView], t0: float = 0.0
+                 ) -> list[SimNodeBackend]:
+    """One ``SimNodeBackend`` per node of a fleet, booted idle at ``t0``."""
+    return [SimNodeBackend(v, t0=t0) for v in views]

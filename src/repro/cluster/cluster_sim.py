@@ -1,18 +1,32 @@
-"""Fleet-level serving simulation on a shared timeline.
+"""Fleet-level serving on a shared timeline, generic over node backends.
 
-Every node advances through the same trace with the per-node numpy fast
-engine (``core.simulator.advance_pool`` carrying executor free-times across
-traffic windows), so a 64-node fleet over a 1500-query trace costs tens of
-per-node vectorized advances instead of a global event heap.  When
-faults/contention are enabled the driver falls back to the event-driven
-reference per node (``event_done_times``) and merges per-query latencies —
-node-local percentiles don't compose, latencies do.
+The windowed driver ``drive_fleet`` advances every node through the same
+trace via the ``NodeBackend`` contract (``cluster.backend``): routers
+assign each traffic window across the node list, each node accepts its
+queries with ``submit``, and the driver folds completions into fleet-wide
+latencies.  The driver is engine-agnostic — the same loop runs
 
-Two entry points:
-  * ``simulate_fleet(times, sizes, fleet, router, ...)`` — one end-to-end
-    run; optional ``window_s`` + ``Autoscaler`` turn it into a windowed
-    loop where the fleet grows/shrinks at window boundaries and capacity
-    is accounted in node-hours.
+  * ``SimNodeBackend``s (the numpy fast engine: ``core.simulator
+    .node_pass`` carrying executor free-times across windows, so a 64-node
+    fleet over a 1500-query trace costs tens of per-node vectorized
+    advances instead of a global event heap), and
+  * ``LiveNodeBackend``s (``cluster.live``: real ``ServingRuntime``
+    instances executing jitted models, paced on the wall clock) —
+
+which is what lets ``benchmarks/live_parity.py`` push one trace through
+both and compare simulated against measured tail latency.  When
+faults/contention are enabled ``simulate_fleet`` falls back to the
+event-driven reference per node (``event_done_times``) and merges
+per-query latencies — node-local percentiles don't compose, latencies do.
+
+Entry points:
+  * ``drive_fleet(times, sizes, backends, router, ...)`` — the shared
+    windowed loop over any backend kind; optional ``window_s`` +
+    ``Autoscaler`` (with a fleet ledger + backend factory) turn it into a
+    resizing loop billed in node-hours.
+  * ``simulate_fleet(times, sizes, fleet, router, ...)`` — the simulated
+    fleet: builds ``SimNodeBackend``s from the fleet and runs
+    ``drive_fleet`` (or the event engine when faults/contention are on).
   * ``cluster_max_qps(fleet, router, sla_ms, ...)`` — the paper's y-axis
     lifted to the cluster: largest stationary arrival rate whose fleet-wide
     p95 meets the SLA (same trace-rescaling bracket + bisection as the
@@ -25,20 +39,28 @@ import dataclasses
 import numpy as np
 
 from repro.cluster.autoscaler import Autoscaler, ScalingEvent
-from repro.cluster.fleet import Fleet, NodeView
+from repro.cluster.backend import NodeBackend, SimNodeBackend
+from repro.cluster.fleet import Fleet
 from repro.cluster.router import Router
 from repro.core.latency_model import ContentionModel
 from repro.core.query_gen import (PRODUCTION, SizeDist, queries_from_arrays,
                                   rescale_trace, sample_trace)
-from repro.core.simulator import (FaultConfig, _fast_eligible,
-                                  bracket_bisect, event_done_times,
-                                  latency_percentiles_ms, node_pass,
+from repro.core.simulator import (SUSTAIN_FRACTION, FaultConfig,
+                                  _fast_eligible, bracket_bisect,
+                                  event_done_times, latency_percentiles_ms,
                                   warm_bracket)
 
 
 @dataclasses.dataclass
 class PoolStats:
     n_nodes: int
+    n_queries: int
+    p95_ms: float
+
+
+@dataclasses.dataclass
+class ModelStats:
+    """Per-tenant latency summary (``model_ids`` labeled traffic)."""
     n_queries: int
     p95_ms: float
 
@@ -59,47 +81,42 @@ class ClusterResult:
     # fast path: one row per window, (t_start_s, offered_qps, n_nodes,
     # p95_ms); empty in events mode (faults/contention), which is unwindowed
     timeline: list[tuple] = dataclasses.field(default_factory=list)
+    # per-model-id latency breakdown when the trace carries tenant labels
+    per_model: dict[int, ModelStats] = dataclasses.field(default_factory=dict)
+    # live only: apply_fn failures; errored queries also count as dropped
+    # (they were not actually served)
+    errors: int = 0
 
     def meets(self, sla_ms: float) -> bool:
         return self.p95_ms <= sla_ms and self.dropped == 0
 
 
-class _NodeState:
-    """One node's executor/accelerator free-times, carried across windows."""
-
-    def __init__(self, view: NodeView, t0: float = 0.0):
-        self.view = view
-        spec = view.spec
-        self.cfg = spec.scheduler_config()
-        self.cpu_free = np.full(spec.n_executors, t0)
-        self.acc_free = np.full(spec.n_accelerators, t0)
-
-    def advance(self, arrivals: np.ndarray, sizes: np.ndarray) -> np.ndarray:
-        """Completion time per query (NaN = dropped); the same
-        ``node_pass`` pipeline as ``simulate_arrays``, made stateful so
-        the next window's queries queue behind this one's leftovers."""
-        spec = self.view.spec
-        done, _, _, self.cpu_free, self.acc_free = node_pass(
-            arrivals, sizes, spec.cpu, self.cfg, accel=spec.accel,
-            cpu_free=self.cpu_free, acc_free=self.acc_free)
-        return done
-
-
 def _result(times: np.ndarray, done: np.ndarray, pool_of: np.ndarray,
-            fleet: Fleet, node_hours: float, events: list,
-            timeline: list) -> ClusterResult:
+            pool_counts: dict[str, int], n_nodes: int, node_hours: float,
+            events: list, timeline: list,
+            model_ids: np.ndarray | None = None,
+            errors: int = 0) -> ClusterResult:
     completed = ~np.isnan(done)
     n_done = int(completed.sum())
     per_pool = {}
-    for p in fleet.pools:
-        sel = (pool_of == p.name) & completed
-        per_pool[p.name] = PoolStats(
-            n_nodes=p.count, n_queries=int((pool_of == p.name).sum()),
+    for name, count in pool_counts.items():
+        sel = (pool_of == name) & completed
+        per_pool[name] = PoolStats(
+            n_nodes=count, n_queries=int((pool_of == name).sum()),
             p95_ms=float(np.percentile(done[sel] - times[sel], 95) * 1e3)
             if sel.any() else 0.0)
+    per_model: dict[int, ModelStats] = {}
+    if model_ids is not None and len(times):
+        for m in np.unique(model_ids):
+            sel = (model_ids == m) & completed
+            per_model[int(m)] = ModelStats(
+                n_queries=int((model_ids == m).sum()),
+                p95_ms=float(np.percentile(done[sel] - times[sel], 95) * 1e3)
+                if sel.any() else 0.0)
     if n_done == 0:
-        return ClusterResult(0, 0, 0, 0, 0, 0, len(times), fleet.n_nodes,
-                             node_hours, per_pool, events, timeline)
+        return ClusterResult(0, 0, 0, 0, 0, 0, len(times), n_nodes,
+                             node_hours, per_pool, events, timeline,
+                             per_model, errors)
     lats = done[completed] - times[completed]
     dur = float(done[completed].max()) - float(times[0])
     p50, p95, p99, mean = latency_percentiles_ms(lats)
@@ -107,8 +124,208 @@ def _result(times: np.ndarray, done: np.ndarray, pool_of: np.ndarray,
         qps=n_done / max(dur, 1e-12),
         p50_ms=p50, p95_ms=p95, p99_ms=p99, mean_ms=mean,
         n_queries=n_done, dropped=len(times) - n_done,
-        n_nodes=fleet.n_nodes, node_hours=node_hours,
-        per_pool=per_pool, events=events, timeline=timeline)
+        n_nodes=n_nodes, node_hours=node_hours,
+        per_pool=per_pool, events=events, timeline=timeline,
+        per_model=per_model, errors=errors)
+
+
+def _window_grid(times: np.ndarray, window_s: float | None
+                 ) -> tuple[float, float, float, int]:
+    """(t_start, horizon, window_s, n_windows) — the window grid starts at
+    the first arrival and node-hours are billed over the arrival span
+    [times[0], times[-1]], matching the events path and never iterating
+    phantom windows for a shifted trace."""
+    n = len(times)
+    t_start = float(times[0]) if n else 0.0
+    horizon = float(times[-1]) if n else 0.0
+    span = horizon - t_start
+    if window_s is None or window_s >= span:
+        # no epsilon: an exact-multiple span must not grow a phantom
+        # empty window (the last window is inclusive of t == horizon)
+        return t_start, horizon, max(span, 1e-9), 1
+    return t_start, horizon, window_s, int(np.ceil(span / window_s))
+
+
+def drive_fleet(times: np.ndarray, sizes: np.ndarray,
+                backends: list[NodeBackend] | None, router: Router, *,
+                window_s: float | None = None,
+                autoscaler: Autoscaler | None = None,
+                fleet: Fleet | None = None,
+                factory=None,
+                model_ids: np.ndarray | None = None,
+                drain_timeout: float = 120.0) -> ClusterResult:
+    """Run one trace through a fleet of node backends.  ``times`` must be
+    sorted; ``model_ids`` (optional) labels each query with its tenant and
+    is threaded through both the router and ``NodeBackend.submit``.
+
+    Two ways to name the fleet:
+
+      * ``backends`` — an explicit node list (the live tier: already-built
+        ``LiveNodeBackend``s; autoscaling unavailable without a ledger);
+      * ``fleet`` + ``factory`` — a :class:`Fleet` ledger plus
+        ``factory(view, t0) -> NodeBackend``; nodes are materialized
+        lazily per window, which is what lets an :class:`Autoscaler`
+        (mutating the ledger at window boundaries) boot new nodes idle at
+        the window start and retire removed ones after their assigned
+        work completes.
+
+    Simulated backends return completion times from ``submit`` and the
+    loop runs in virtual time; realtime backends (``realtime = True``)
+    return ``None``, the driver blocks at each window boundary
+    (``advance_to``) while the wall clock catches up, and completions are
+    collected from ``completed_records`` after a final drain.  Mixed
+    fleets are rejected — one timeline cannot be both virtual and real.
+    """
+    times = np.asarray(times, float)
+    sizes = np.asarray(sizes, np.int64)
+    if len(times) and np.any(np.diff(times) < 0):
+        raise ValueError("times must be sorted (routers and the per-node "
+                         "FCFS advance assume arrival order)")
+    if autoscaler is not None:
+        if window_s is None:
+            raise ValueError("autoscaling requires window_s — scaling "
+                             "happens at window boundaries, and a "
+                             "single-window run would only observe after "
+                             "all queries completed")
+        if fleet is None or factory is None:
+            raise ValueError("autoscaling resizes the fleet between "
+                             "windows — pass the fleet ledger and a "
+                             "backend factory(view, t0)")
+        autoscaler.reset()
+    if (backends is None) == (fleet is None):
+        raise ValueError("pass exactly one of backends= or fleet=+factory=")
+    router.reset()
+    n = len(times)
+    done = np.full(n, np.nan)
+    pool_of = np.empty(n, object)
+
+    pool: dict[tuple, NodeBackend] = {}
+    for b in (backends or []):
+        if b.key in pool:
+            raise ValueError(f"duplicate backend identity {b.key}: give "
+                             f"each node a distinct (pool, index_in_pool)")
+        pool[b.key] = b
+    retired: list[NodeBackend] = []
+    t_start, horizon, window_s, n_windows = _window_grid(times, window_s)
+
+    def _kind(batch, current):
+        """Fold a batch of backends into the fleet's realtime flag —
+        evaluated lazily because factory-built nodes (which may be live)
+        only exist once their first window materializes them."""
+        kinds = {b.realtime for b in batch}
+        if current is not None:
+            kinds.add(current)
+        if len(kinds) > 1:
+            raise ValueError("cannot mix realtime and simulated backends "
+                             "on one timeline")
+        return kinds.pop() if kinds else current
+
+    realtime = None
+    if pool:
+        realtime = _kind(pool.values(), None)
+        if realtime:
+            for b in pool.values():
+                b.start(t_start)
+    seen: dict[tuple, set] = {}       # realtime: record indices consumed
+    node_hours = 0.0
+    timeline: list[tuple] = []
+
+    for w in range(n_windows):
+        w0, w1 = t_start + w * window_s, t_start + (w + 1) * window_s
+        idx = np.flatnonzero((times >= w0) & (times < w1 if w < n_windows - 1
+                                              else times <= horizon))
+        if fleet is not None:
+            views = fleet.node_views()
+            created = []
+            for v in views:
+                k = (v.pool, v.index_in_pool)
+                if k not in pool:
+                    pool[k] = factory(v, w0)
+                    created.append(pool[k])
+            if created:
+                realtime = _kind(created, realtime)
+                if realtime:
+                    for b in created:       # boot on the shared timeline
+                        b.start(w0)
+            active = [pool[(v.pool, v.index_in_pool)] for v in views]
+        else:
+            active = list(pool.values())
+        width = min(w1, horizon) - w0     # last window may be truncated
+        node_hours += len(active) * width / 3600.0
+        wt, ws = times[idx], sizes[idx]
+        wm = model_ids[idx] if model_ids is not None else None
+        assign = router.assign(wt, ws, active, model_ids=wm)
+        for i, b in enumerate(active):
+            sel = assign == i
+            if not sel.any():
+                continue
+            ret = b.submit(idx[sel], wt[sel], ws[sel],
+                           wm[sel] if wm is not None else None)
+            if ret is not None:
+                done[idx[sel]] = ret
+                pool_of[idx[sel]] = b.pool
+        if realtime:
+            for b in active:
+                b.advance_to(w1)
+            # window p95 from completions landed so far — queries still in
+            # flight at the boundary report in a later window (monitoring
+            # semantics; the final result uses the full drained records).
+            # Consumption is tracked per query index, not list position:
+            # completions land out of order, so a length cursor would
+            # double-count old records and skip late ones.
+            lats = []
+            for b in active:
+                consumed = seen.setdefault(b.key, set())
+                for r in b.completed_records():
+                    if r.index in consumed:
+                        continue
+                    consumed.add(r.index)
+                    if r.error is None:
+                        lats.append(r.latency_ms)
+            p95 = float(np.percentile(lats, 95)) if lats else 0.0
+        else:
+            wl = done[idx] - times[idx]
+            ok = ~np.isnan(wl)
+            p95 = float(np.percentile(wl[ok], 95) * 1e3) if ok.any() else 0.0
+        offered = len(idx) / max(width, 1e-9)
+        timeline.append((w0, offered, len(active), p95))
+        if autoscaler is not None:
+            autoscaler.observe(w1, p95, offered, fleet)
+            alive = {(v.pool, v.index_in_pool) for v in fleet.node_views()}
+            for k in [k for k in pool if k not in alive]:
+                retired.append(pool.pop(k))
+
+    errors = 0
+    if realtime:
+        for b in list(pool.values()) + retired:
+            b.drain(drain_timeout)
+            for r in b.completed_records():
+                if r.error is not None:
+                    # a query whose apply_fn failed was not served: count
+                    # it dropped (its near-instant "latency" would inflate
+                    # measured capacity), surfaced via `errors`
+                    errors += 1
+                    continue
+                done[r.index] = r.t_done
+                pool_of[r.index] = b.pool
+    if fleet is not None:
+        # factory-built backends are owned by the driver (the caller never
+        # sees them) — release their resources; a no-op for sim nodes,
+        # thread/runtime shutdown for live ones
+        for b in list(pool.values()) + retired:
+            b.close()
+
+    if fleet is not None:
+        pool_counts = {p.name: p.count for p in fleet.pools}
+        n_nodes = fleet.n_nodes
+    else:
+        pool_counts = {}
+        for b in pool.values():
+            pool_counts[b.pool] = pool_counts.get(b.pool, 0) + 1
+        n_nodes = len(pool)
+    return _result(times, done, pool_of, pool_counts, n_nodes, node_hours,
+                   list(autoscaler.events) if autoscaler else [], timeline,
+                   model_ids=model_ids, errors=errors)
 
 
 def simulate_fleet(times: np.ndarray, sizes: np.ndarray, fleet: Fleet,
@@ -116,15 +333,17 @@ def simulate_fleet(times: np.ndarray, sizes: np.ndarray, fleet: Fleet,
                    autoscaler: Autoscaler | None = None,
                    faults: FaultConfig | None = None,
                    contention: ContentionModel | None = None,
+                   model_ids: np.ndarray | None = None,
                    seed: int = 0) -> ClusterResult:
-    """Run one trace through the fleet.  ``times`` must be sorted.
+    """Run one trace through a simulated fleet.  ``times`` must be sorted.
 
-    Fast path (default): windowed numpy advance per node, stateful across
-    windows; with an ``Autoscaler`` the fleet is resized at window
-    boundaries (new nodes boot idle at the window start; removed nodes
-    finish their assigned work first — their completions are already
-    recorded).  With ``faults``/``contention`` every node routes through
-    the event-driven reference instead (single window, no autoscaling).
+    Fast path (default): ``drive_fleet`` over per-node ``SimNodeBackend``s
+    (windowed numpy advance, stateful across windows); with an
+    ``Autoscaler`` the fleet is resized at window boundaries (new nodes
+    boot idle at the window start; removed nodes finish their assigned
+    work first — their completions are already recorded).  With
+    ``faults``/``contention`` every node routes through the event-driven
+    reference instead (single window, no autoscaling).
     """
     times = np.asarray(times, float)
     sizes = np.asarray(sizes, np.int64)
@@ -135,10 +354,6 @@ def simulate_fleet(times: np.ndarray, sizes: np.ndarray, fleet: Fleet,
         raise ValueError("autoscaling requires window_s — scaling happens "
                          "at window boundaries, and a single-window run "
                          "would only observe after all queries completed")
-    router.reset()
-    n = len(times)
-    done = np.full(n, np.nan)
-    pool_of = np.empty(n, object)
 
     events_mode = not _fast_eligible(contention, faults or FaultConfig())
     if events_mode:
@@ -146,8 +361,12 @@ def simulate_fleet(times: np.ndarray, sizes: np.ndarray, fleet: Fleet,
             raise ValueError("windowing/autoscaling need the fast path; "
                              "faults/contention force the (unwindowed) "
                              "event engine")
+        router.reset()
+        n = len(times)
+        done = np.full(n, np.nan)
+        pool_of = np.empty(n, object)
         nodes = fleet.node_views()
-        assign = router.assign(times, sizes, nodes)
+        assign = router.assign(times, sizes, nodes, model_ids=model_ids)
         for i, nv in enumerate(nodes):
             sel = assign == i
             if not sel.any():
@@ -159,60 +378,15 @@ def simulate_fleet(times: np.ndarray, sizes: np.ndarray, fleet: Fleet,
                 faults=faults or FaultConfig(), seed=seed + i)
             pool_of[sel] = nv.pool
         horizon = float(times[-1]) - float(times[0]) if n else 0.0
-        return _result(times, done, pool_of, fleet,
-                       fleet.n_nodes * horizon / 3600.0, [], [])
+        return _result(times, done, pool_of,
+                       {p.name: p.count for p in fleet.pools}, fleet.n_nodes,
+                       fleet.n_nodes * horizon / 3600.0, [], [],
+                       model_ids=model_ids)
 
-    # ------------------------------------------------- windowed fast path
     work_fleet = fleet.copy() if autoscaler is not None else fleet
-    if autoscaler is not None:
-        autoscaler.reset()
-    # the window grid starts at the first arrival and node-hours are
-    # billed over the arrival span [times[0], times[-1]] — matching the
-    # events path and never iterating phantom windows for a shifted trace
-    t_start = float(times[0]) if n else 0.0
-    horizon = float(times[-1]) if n else 0.0
-    span = horizon - t_start
-    if window_s is None or window_s >= span:
-        window_s, n_windows = max(span, 1e-9), 1
-    else:
-        # no epsilon: an exact-multiple span must not grow a phantom
-        # empty window (the last window is inclusive of t == horizon)
-        n_windows = int(np.ceil(span / window_s))
-    states: dict[tuple, _NodeState] = {}
-    node_hours = 0.0
-    timeline: list[tuple] = []
-
-    for w in range(n_windows):
-        w0, w1 = t_start + w * window_s, t_start + (w + 1) * window_s
-        idx = np.flatnonzero((times >= w0) & (times < w1 if w < n_windows - 1
-                                              else times <= horizon))
-        nodes = work_fleet.node_views()
-        width = min(w1, horizon) - w0     # last window may be truncated
-        node_hours += len(nodes) * width / 3600.0
-        wt, ws = times[idx], sizes[idx]
-        assign = router.assign(wt, ws, nodes)
-        for i, nv in enumerate(nodes):
-            key = (nv.pool, nv.index_in_pool)
-            if key not in states:
-                states[key] = _NodeState(nv, t0=w0)
-            sel = assign == i
-            if not sel.any():
-                continue
-            done[idx[sel]] = states[key].advance(wt[sel], ws[sel])
-            pool_of[idx[sel]] = nv.pool
-        wl = done[idx] - times[idx]
-        ok = ~np.isnan(wl)
-        p95 = float(np.percentile(wl[ok], 95) * 1e3) if ok.any() else 0.0
-        offered = len(idx) / max(width, 1e-9)
-        timeline.append((w0, offered, work_fleet.n_nodes, p95))
-        if autoscaler is not None:
-            autoscaler.observe(w1, p95, offered, work_fleet)
-            active = {(nv.pool, nv.index_in_pool)
-                      for nv in work_fleet.node_views()}
-            states = {k: v for k, v in states.items() if k in active}
-
-    return _result(times, done, pool_of, work_fleet, node_hours,
-                   list(autoscaler.events) if autoscaler else [], timeline)
+    return drive_fleet(times, sizes, None, router, window_s=window_s,
+                       autoscaler=autoscaler, fleet=work_fleet,
+                       factory=SimNodeBackend, model_ids=model_ids)
 
 
 def cluster_max_qps(fleet: Fleet, router: Router, sla_ms: float, *,
@@ -238,7 +412,7 @@ def cluster_max_qps(fleet: Fleet, router: Router, sla_ms: float, *,
             return hit
         r = simulate_fleet(rescale_trace(unit_times, qps), sizes, fleet,
                            router, seed=seed)
-        v = r.meets(sla_ms) and r.qps >= 0.85 * qps
+        v = r.meets(sla_ms) and r.qps >= SUSTAIN_FRACTION * qps
         _memo[qps] = v
         return v
 

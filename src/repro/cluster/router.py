@@ -19,15 +19,27 @@ indices given the fleet's ``NodeView`` list.  Policies:
     to the globally cheapest node — so large batches flow to the devices
     that amortize them until those saturate, then overflow to CPUs.
 
-Estimated per-query work is computed per node *class* (pools share specs)
-from the same service-time tables the fast simulator uses, so routing cost
+Routers are *backend-agnostic*: they see nodes only through the
+``NodeHandle`` surface of ``cluster.backend`` (stable identity, spec,
+capacity weight) — satisfied by simulated and live ``NodeBackend``s alike,
+so a policy makes identical decisions whether the node behind the handle
+is the numpy fast engine or a real ``ServingRuntime``.  Estimated
+per-query work is computed per node *class* (pools share specs) from the
+same service-time tables the fast simulator uses, so routing cost
 estimates and simulated reality agree.
+
+Multi-tenant traffic (``MultiTenantTraffic.generate_labeled``) threads a
+per-query ``model_ids`` array through ``assign``; the heterogeneity-aware
+router can pin tenants to pools (``affinity=``) to enforce per-model
+placement/SLA policies.
 """
 from __future__ import annotations
 
+from typing import Sequence
+
 import numpy as np
 
-from repro.cluster.fleet import NodeView
+from repro.cluster.backend import NodeHandle
 from repro.core.latency_model import service_time_table
 
 
@@ -38,7 +50,8 @@ class Router:
     name = "base"
 
     def assign(self, times: np.ndarray, sizes: np.ndarray,
-               nodes: list[NodeView]) -> np.ndarray:
+               nodes: Sequence[NodeHandle],
+               model_ids: np.ndarray | None = None) -> np.ndarray:
         """Node index (into ``nodes``) for each query of a sorted window."""
         raise NotImplementedError
 
@@ -66,7 +79,7 @@ def _class_drain_seconds(spec, sizes: np.ndarray
     return est, off
 
 
-def _est_work(nodes: list[NodeView], sizes: np.ndarray
+def _est_work(nodes: Sequence[NodeHandle], sizes: np.ndarray
               ) -> tuple[np.ndarray, np.ndarray]:
     """(n_nodes, n_queries) drain-seconds estimate and offload-path mask,
     one row per node, with per-class rows computed once (pools share spec
@@ -84,7 +97,7 @@ def _est_work(nodes: list[NodeView], sizes: np.ndarray
     return np.stack(est_rows), np.stack(off_rows)
 
 
-def _load_state(store: dict, nodes: list[NodeView]) -> np.ndarray:
+def _load_state(store: dict, nodes: Sequence[NodeHandle]) -> np.ndarray:
     """Per-node state aligned with ``nodes``, keyed by stable node identity
     ``(pool, index_in_pool)`` — an autoscaling resize must not wipe the
     surviving nodes' backlogs (new nodes start idle at 0)."""
@@ -92,7 +105,7 @@ def _load_state(store: dict, nodes: list[NodeView]) -> np.ndarray:
                      for nv in nodes])
 
 
-def _store_state(values: np.ndarray, nodes: list[NodeView]) -> dict:
+def _store_state(values: np.ndarray, nodes: Sequence[NodeHandle]) -> dict:
     """Rebuilding from the current node list drops removed nodes."""
     return {(nv.pool, nv.index_in_pool): float(values[i])
             for i, nv in enumerate(nodes)}
@@ -107,7 +120,7 @@ class RoundRobinRouter(Router):
     def reset(self) -> None:
         self._next = 0
 
-    def assign(self, times, sizes, nodes) -> np.ndarray:
+    def assign(self, times, sizes, nodes, model_ids=None) -> np.ndarray:
         n = len(nodes)
         out = (self._next + np.arange(len(times))) % n
         self._next = int((self._next + len(times)) % n)
@@ -124,7 +137,7 @@ class LeastOutstandingRouter(Router):
     def reset(self) -> None:
         self._store, self._last_t = {}, 0.0
 
-    def assign(self, times, sizes, nodes) -> np.ndarray:
+    def assign(self, times, sizes, nodes, model_ids=None) -> np.ndarray:
         backlog = _load_state(self._store, nodes)
         est, _ = _est_work(nodes, sizes)
         out = np.empty(len(times), np.int64)
@@ -164,7 +177,7 @@ class SizeAwareRouter(Router):
     def reset(self) -> None:
         self._store = {}
 
-    def assign(self, times, sizes, nodes) -> np.ndarray:
+    def assign(self, times, sizes, nodes, model_ids=None) -> np.ndarray:
         n = len(nodes)
         counts = _load_state(self._store, nodes)
         weights = np.array([nv.weight for nv in nodes])
@@ -210,11 +223,21 @@ class HeterogeneityAwareRouter(Router):
     the query goes to the globally cheapest node.  Large-batch queries
     therefore flow to accelerator nodes while the accelerators have
     headroom and overflow onto CPU pools when they saturate; small queries
-    spread over every node inversely to device speed."""
+    spread over every node inversely to device speed.
+
+    ``affinity`` (optional) maps a tenant's model id to the pool name(s)
+    its queries may run on — per-model placement for multi-tenant traffic
+    (labels from ``MultiTenantTraffic.generate_labeled`` arrive via the
+    ``model_ids`` argument of ``assign``).  A tenant whose allowed pools
+    have no node in the current fleet falls back to every node rather
+    than dropping traffic."""
 
     name = "hetero"
 
-    def __init__(self):
+    def __init__(self, affinity: dict[int, object] | None = None):
+        # stored as given; assign() normalizes (affinity is just as often
+        # assigned post-construction — make_router takes no kwargs)
+        self.affinity = dict(affinity or {})
         self._cpu_store: dict = {}
         self._acc_store: dict = {}
         self._last_t = 0.0
@@ -222,10 +245,19 @@ class HeterogeneityAwareRouter(Router):
     def reset(self) -> None:
         self._cpu_store, self._acc_store, self._last_t = {}, {}, 0.0
 
-    def assign(self, times, sizes, nodes) -> np.ndarray:
+    def assign(self, times, sizes, nodes, model_ids=None) -> np.ndarray:
         cpu_b = _load_state(self._cpu_store, nodes)
         acc_b = _load_state(self._acc_store, nodes)
         est, off = _est_work(nodes, sizes)
+        allowed: dict[int, np.ndarray] = {}
+        if self.affinity and model_ids is not None:
+            pools = np.array([nv.pool for nv in nodes])
+            for m, names in self.affinity.items():
+                # a bare string must not be iterated character-wise
+                names = {names} if isinstance(names, str) else set(names)
+                mask = np.isin(pools, list(names))
+                if mask.any():              # else: fall back to every node
+                    allowed[m] = mask
         out = np.empty(len(times), np.int64)
         last_t = self._last_t
         for j, t in enumerate(np.asarray(times, float)):
@@ -236,6 +268,8 @@ class HeterogeneityAwareRouter(Router):
             np.maximum(acc_b, 0.0, out=acc_b)
             path = off[:, j]
             score = np.where(path, acc_b, cpu_b) + est[:, j]
+            if model_ids is not None and int(model_ids[j]) in allowed:
+                score = np.where(allowed[int(model_ids[j])], score, np.inf)
             i = int(np.argmin(score))
             (acc_b if path[i] else cpu_b)[i] += est[i, j]
             out[j] = i

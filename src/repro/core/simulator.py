@@ -24,6 +24,11 @@ Engines (``simulate(..., engine=...)``):
       - contention — busy-executor-dependent service-time inflation.
   * ``"auto"`` (default) — fast path when no such knob is active, else the
     event-driven reference.
+
+The stateful per-node entry points (``node_pass``, ``advance_pool``,
+``split_requests``, ``event_done_times``) are consumed by the cluster
+tier's ``NodeBackend`` layer (``repro.cluster.backend``), which presents
+this engine and the live JAX ``ServingRuntime`` behind one interface.
 """
 from __future__ import annotations
 
@@ -537,6 +542,12 @@ def _event_loop(queries: list[Query], cpu: DeviceModel,
 
 # ------------------------------------------------- achievable-QPS search
 
+# sustain guard for every achievable-QPS search (per-node, cluster, and the
+# live-parity benchmark): a rate only counts as feasible when the system
+# actually processes ~this fraction of the offered rate — with a finite
+# trace the backlog is bounded, so p95 alone can look fine at ANY λ
+SUSTAIN_FRACTION = 0.85
+
 
 def warm_bracket(ok, lo: float, hint: float | None) -> tuple[float, float]:
     """Seed a doubling bracket around a known-nearby answer instead of
@@ -619,10 +630,9 @@ def max_qps_under_sla(cpu: DeviceModel, cfg: SchedulerConfig, sla_ms: float,
             r = _simulate_events(queries_from_arrays(arrivals, sizes), cpu,
                                  cfg, accel=accel, contention=contention,
                                  seed=seed)
-        # sustain guard: with a finite query set the backlog is bounded, so
-        # p95 alone can look fine at ANY λ — the system must also actually
-        # process at ~the offered rate (completion window ≈ arrival window)
-        v = r.meets(sla_ms) and r.dropped == 0 and r.qps >= 0.85 * qps
+        # completion window ≈ arrival window, see SUSTAIN_FRACTION
+        v = (r.meets(sla_ms) and r.dropped == 0
+             and r.qps >= SUSTAIN_FRACTION * qps)
         _memo[qps] = v
         return v
 

@@ -18,6 +18,13 @@ def pad_batch(batch: dict, to: int) -> dict:
     """Pad every leaf's leading dim to ``to`` (repeating row 0 — cheap and
     numerically safe for inference; results past the true size are sliced).
 
+    numpy leaves are padded host-side with numpy: an eager ``jnp`` pad
+    would compile one concatenate executable per distinct (rows, bucket)
+    pair — hundreds of tiny compiles scattered through a live run's first
+    seconds — whereas numpy padding is shape-oblivious and the jitted
+    model still sees only the ``to``-row bucket shape.  Device-array
+    leaves keep the ``jnp`` path.
+
     Raises ``ValueError`` on a leaf larger than ``to``: ``bucket_for``
     clamps at ``max_bucket``, so an oversize request means the caller
     forgot to split (see ``ServingRuntime.submit``) — padding "negatively"
@@ -30,8 +37,9 @@ def pad_batch(batch: dict, to: int) -> dict:
                 f"requests into ≤-bucket chunks before padding")
         if n == to:
             return x
-        reps = jnp.broadcast_to(x[:1], (to - n,) + x.shape[1:])
-        return jnp.concatenate([x, reps], axis=0)
+        xp = np if isinstance(x, np.ndarray) else jnp
+        reps = xp.broadcast_to(x[:1], (to - n,) + x.shape[1:])
+        return xp.concatenate([x, reps], axis=0)
     return {k: pad(v) for k, v in batch.items()}
 
 

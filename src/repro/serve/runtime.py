@@ -36,6 +36,7 @@ class QueryRecord:
     size: int
     t_arrival: float
     t_done: float = 0.0
+    error: str | None = None   # first apply_fn failure among the requests
 
     @property
     def latency_ms(self) -> float:
@@ -55,6 +56,8 @@ class ServingRuntime:
         self._records: dict[int, QueryRecord] = {}
         self.batch_size = batch_size
         self.max_bucket = max_bucket
+        self._n_done = 0
+        self._fresh_done: list[QueryRecord] = []
         self._stop = threading.Event()
         self._workers = [threading.Thread(target=self._worker, daemon=True)
                          for _ in range(n_workers)]
@@ -103,6 +106,25 @@ class ServingRuntime:
         with self._lock:
             return [r for r in self._records.values() if r.t_done > 0]
 
+    def record(self, qid: int) -> QueryRecord:
+        with self._lock:
+            return self._records[qid]
+
+    @property
+    def n_completed(self) -> int:
+        """Completed-query count — an O(1) read (plain int, GIL-atomic)."""
+        return self._n_done
+
+    def take_completed(self) -> list[QueryRecord]:
+        """Atomically drain the completed-since-last-call buffer, in
+        completion order.  This is the control loop's feed: per-query
+        polls cost O(new completions), not an O(all records) rebuild
+        under the lock (which would make a long-lived serving process
+        quadratic in its own history)."""
+        with self._lock:
+            out, self._fresh_done = self._fresh_done, []
+            return out
+
     def percentile_ms(self, p: float) -> float:
         lats = [r.latency_ms for r in self.completed()]
         return float(np.percentile(lats, p)) if lats else 0.0
@@ -115,15 +137,28 @@ class ServingRuntime:
             req = self._q.get()
             if req is None:
                 return
-            bucket = bucket_for(req.size, self.max_bucket)
-            padded = pad_batch(req.batch, bucket)
-            jax.block_until_ready(self._apply(padded))
-            now = time.monotonic()
-            with self._lock:
-                self._outstanding[req.qid] -= 1
-                if self._outstanding[req.qid] == 0:
-                    del self._outstanding[req.qid]
-                    self._records[req.qid].t_done = now
+            err = None
+            try:
+                bucket = bucket_for(req.size, self.max_bucket)
+                padded = pad_batch(req.batch, bucket)
+                jax.block_until_ready(self._apply(padded))
+            except Exception as e:
+                # an apply_fn failure must not kill the worker thread or
+                # strand the query's _outstanding entry (which would
+                # deadlock drain()) — complete the query, carry the error
+                err = f"{type(e).__name__}: {e}"
+            finally:
+                now = time.monotonic()
+                with self._lock:
+                    rec = self._records[req.qid]
+                    if err is not None and rec.error is None:
+                        rec.error = err
+                    self._outstanding[req.qid] -= 1
+                    if self._outstanding[req.qid] == 0:
+                        del self._outstanding[req.qid]
+                        rec.t_done = now
+                        self._n_done += 1
+                        self._fresh_done.append(rec)
 
 
 class OnlineController:
@@ -140,19 +175,36 @@ class OnlineController:
         self.sla_ms = sla_ms
         self.ladder = list(ladder)
         self.window = window
-        self._seen = 0
+        self._pending: list[QueryRecord] = []
         self.history: list[tuple[int, float]] = []
 
     def step(self) -> None:
-        done = self.rt.completed()
-        if len(done) - self._seen < self.window:
+        # O(new completions) per poll, completion-ordered (take_completed
+        # drains the runtime's fresh-done buffer — no full-record rescans,
+        # no out-of-order double counting)
+        self._pending += self.rt.take_completed()
+        if len(self._pending) < self.window:
             return
-        recent = done[self._seen:]
-        self._seen = len(done)
-        p95 = float(np.percentile([r.latency_ms for r in recent], 95))
-        i = self.ladder.index(self.rt.batch_size)
+        recent, self._pending = self._pending, []
+        # errored queries complete near-instantly; feeding their fake
+        # latencies to the controller would read as headroom and climb the
+        # knob on a failing node — an all-errors window reads as a breach
+        healthy = [r.latency_ms for r in recent if r.error is None]
+        p95 = float(np.percentile(healthy, 95)) if healthy else float("inf")
+        i = self._rung()
         if p95 > self.sla_ms and i > 0:
             self.rt.batch_size = self.ladder[i - 1]
         elif p95 < 0.7 * self.sla_ms and i < len(self.ladder) - 1:
             self.rt.batch_size = self.ladder[i + 1]
         self.history.append((self.rt.batch_size, p95))
+
+    def _rung(self) -> int:
+        """Ladder index of the current knob, snapping an off-ladder batch
+        size (a runtime constructed with one, or an external knob write)
+        to the nearest rung instead of raising ``ValueError``."""
+        b = self.rt.batch_size
+        if b in self.ladder:
+            return self.ladder.index(b)
+        i = min(range(len(self.ladder)), key=lambda k: abs(self.ladder[k] - b))
+        self.rt.batch_size = self.ladder[i]
+        return i

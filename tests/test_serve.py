@@ -108,6 +108,40 @@ def test_runtime_splits_by_batch_size():
         rt.shutdown()
 
 
+def test_pad_batch_numpy_stays_numpy():
+    """numpy leaves are padded host-side (no per-shape XLA compile churn);
+    device leaves keep the jnp path."""
+    p = pad_batch({"x": np.ones((3, 2), np.float32)}, 8)
+    assert isinstance(p["x"], np.ndarray) and p["x"].shape == (8, 2)
+    q = pad_batch({"x": jnp.ones((3, 2))}, 8)
+    assert not isinstance(q["x"], np.ndarray) and q["x"].shape == (8, 2)
+
+
+def test_worker_error_surfaces_and_drain_completes():
+    """An apply_fn exception must not kill the worker or strand the
+    query's _outstanding entry (which used to deadlock drain()); the error
+    is carried on the QueryRecord."""
+    calls = []
+
+    def apply_fn(batch):
+        calls.append(batch["x"].shape[0])
+        if len(calls) == 1:
+            raise RuntimeError("boom")
+        return batch["x"].sum()
+
+    rt = ServingRuntime(apply_fn, n_workers=1, batch_size=32)
+    try:
+        rt.submit(0, {"x": np.ones((8, 2), np.float32)}, 8)
+        rt.drain(timeout=30)                     # must not deadlock
+        rt.submit(1, {"x": np.ones((8, 2), np.float32)}, 8)
+        rt.drain(timeout=30)                     # worker still alive
+        bad, good = rt.record(0), rt.record(1)
+        assert bad.t_done > 0 and "boom" in bad.error
+        assert good.t_done > 0 and good.error is None
+    finally:
+        rt.shutdown()
+
+
 def test_online_controller_steps_down_on_sla_violation():
     rt = _runtime(batch_size=64)
     ctl = OnlineController(rt, sla_ms=0.0001, window=5)   # impossible SLA
@@ -130,5 +164,58 @@ def test_online_controller_steps_up_when_headroom():
         rt.drain(timeout=60)
         ctl.step()
         assert rt.batch_size > 16
+    finally:
+        rt.shutdown()
+
+
+def _fed_controller(batch_size, sla_ms, ladder=None):
+    """A controller whose runtime has a full window of completed queries."""
+    rt = _runtime(batch_size=batch_size)
+    kwargs = {} if ladder is None else {"ladder": ladder}
+    ctl = OnlineController(rt, sla_ms=sla_ms, window=5, **kwargs)
+    for qid in range(6):
+        rt.submit(qid, {"x": jnp.ones((8, 4))}, 8)
+    rt.drain(timeout=60)
+    return rt, ctl
+
+
+def test_online_controller_snaps_off_ladder_knob():
+    """A runtime constructed with a batch size not on the ladder used to
+    raise ValueError in step(); it must snap to the nearest rung and keep
+    climbing from there."""
+    rt, ctl = _fed_controller(batch_size=48, sla_ms=1e6)   # 48 ∉ ladder
+    try:
+        ctl.step()                                          # must not raise
+        assert rt.batch_size in ctl.ladder
+        assert rt.batch_size == 64           # snapped to 32|64, headroom → up
+    finally:
+        rt.shutdown()
+
+
+def test_online_controller_clamps_at_ladder_ends():
+    rt, ctl = _fed_controller(batch_size=1, sla_ms=1e-6)   # breach at floor
+    try:
+        ctl.step()
+        assert rt.batch_size == 1                           # clamped
+    finally:
+        rt.shutdown()
+    rt, ctl = _fed_controller(batch_size=16, sla_ms=1e6, ladder=(4, 8, 16))
+    try:
+        ctl.step()
+        assert rt.batch_size == 16             # top of the ladder: clamped
+    finally:
+        rt.shutdown()
+
+
+def test_online_controller_holds_inside_hysteresis_band():
+    """p95 between 0.7×SLA and SLA: neither step direction fires."""
+    rt, ctl = _fed_controller(batch_size=16, sla_ms=1.0)
+    try:
+        done = rt.completed()
+        p95 = float(np.percentile([r.latency_ms for r in done], 95))
+        ctl.sla_ms = p95 / 0.85                # 0.7×SLA < p95 < SLA
+        ctl.step()
+        assert rt.batch_size == 16
+        assert ctl.history and ctl.history[-1][0] == 16
     finally:
         rt.shutdown()
