@@ -28,6 +28,7 @@ SUITES = [
     ("fig13_tail_latency", "benchmarks.tail_latency"),
     ("fig14_gpu_fraction", "benchmarks.gpu_fraction"),
     ("cluster_capacity", "benchmarks.cluster_capacity"),
+    ("resilience", "benchmarks.resilience"),
     ("sched_speed", "benchmarks.sched_speed"),
     ("live_parity", "benchmarks.live_parity"),
     ("roofline_report", "benchmarks.roofline_report"),
@@ -38,12 +39,18 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated substring filter on suite names")
+    ap.add_argument("--list", action="store_true",
+                    help="print the available suite names and exit")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write per-suite rows as JSON to PATH")
     ap.add_argument("--strict", action="store_true",
                     help="exit nonzero when any row's derived column "
                          "carries a FAIL soft-check verdict")
     args = ap.parse_args()
+    if args.list:
+        for name, module in SUITES:
+            print(f"{name:28s} {module}")
+        return
 
     import importlib
 

@@ -1,7 +1,8 @@
 """Fleet-scale scenario: a heterogeneous datacenter tier (Skylake +
 Broadwell + GPU pools, per-pool DeepRecSched knobs) serving a compressed
-diurnal day, with query routing and reactive autoscaling — the paper's
-§VII deployment story on the numpy fast engine.
+diurnal day, with query routing, reactive + predictive autoscaling, and a
+mid-day rack kill with query re-route — the paper's §VII deployment story
+on the numpy fast engine, plus the fleet lifecycle layer.
 
     PYTHONPATH=src python examples/datacenter_fleet.py [--synthetic]
 
@@ -12,7 +13,8 @@ import argparse
 
 import numpy as np
 
-from repro.cluster import (Autoscaler, DiurnalTraffic, Fleet, NodeSpec, Pool,
+from repro.cluster import (Autoscaler, DiurnalTraffic, Fleet, FleetFaults,
+                           NodeKill, NodeSpec, Pool, PredictiveAutoscaler,
                            ScaledDeviceModel, make_router, simulate_fleet)
 from repro.core.latency_model import (GPU_1080TI, AnalyticalDeviceModel,
                                       TableDeviceModel)
@@ -20,6 +22,7 @@ from repro.core.latency_model import (GPU_1080TI, AnalyticalDeviceModel,
 SLA_MS = 100.0           # dlrm-rmc1 medium tier
 DAY_S = 60.0             # one diurnal period, compressed
 WINDOW_S = 2.0
+BOOT_S = 6.0             # node boot latency for the predictive comparison
 
 
 def build_fleet(synthetic: bool) -> Fleet:
@@ -72,7 +75,7 @@ def main() -> None:
                             autoscaler=scaler)
 
     print(f"\n{'t(s)':>5s} {'offered':>8s} {'nodes':>6s} {'p95(ms)':>8s}")
-    for t0, offered, n_nodes, p95 in r_auto.timeline[::3]:
+    for t0, offered, n_nodes, p95, _ in r_auto.timeline[::3]:
         bar = "#" * int(p95 / SLA_MS * 20)
         print(f"{t0:5.0f} {offered:8.0f} {n_nodes:6d} {p95:8.1f} {bar}")
 
@@ -93,6 +96,40 @@ def main() -> None:
         r = simulate_fleet(times, sizes, fleet, make_router(name))
         print(f"  {name:18s} p95={r.p95_ms:9.1f}ms  "
               f"{'meets SLA' if r.meets(SLA_MS) else 'violates'}")
+
+    # ---- predictive boot-ahead scaling: nodes take BOOT_S to come up
+    for p in fleet.pools:
+        p.spec.boot_s = BOOT_S
+    predictive = PredictiveAutoscaler(sla_ms=SLA_MS, traffic=traffic,
+                                      lead_s=BOOT_S + 2 * WINDOW_S)
+    r_pred = simulate_fleet(times, sizes, fleet, make_router("round_robin"),
+                            window_s=WINDOW_S, autoscaler=predictive)
+    r_rct = simulate_fleet(times, sizes, fleet, make_router("round_robin"),
+                           window_s=WINDOW_S,
+                           autoscaler=Autoscaler(sla_ms=SLA_MS))
+    print(f"\nwith node boot latency ({BOOT_S:.0f}s) on the same day:")
+    for name, r in (("reactive", r_rct), ("predictive", r_pred)):
+        reasons = sorted({e.reason for e in r.events})
+        print(f"  {name:10s} SLA-violation minutes="
+              f"{r.sla_violation_minutes(SLA_MS):6.3f}  "
+              f"node_hours={r.node_hours:.3f}  triggers={reasons}")
+
+    # ---- kill a quarter of the skylake pool mid-day: re-route recovers
+    n_sky = fleet.pool("skylake").count
+    kills = tuple(NodeKill(DAY_S / 2, "skylake", i)
+                  for i in range(max(n_sky // 4, 1)))
+    r_kill = simulate_fleet(times, sizes, fleet, make_router("round_robin"),
+                            window_s=WINDOW_S,
+                            fleet_faults=FleetFaults(kills=kills))
+    r_drop = simulate_fleet(times, sizes, fleet, make_router("round_robin"),
+                            window_s=WINDOW_S,
+                            fleet_faults=FleetFaults(kills=kills,
+                                                     reroute=False))
+    print(f"\nkilling {len(kills)} skylake nodes at t={DAY_S / 2:.0f}s:")
+    print(f"  with re-route   : {r_kill.rerouted} orphans re-routed, "
+          f"{r_kill.dropped} dropped, p95={r_kill.p95_ms:.1f}ms")
+    print(f"  without re-route: {r_drop.dropped} dropped "
+          f"(every orphan lost)")
 
 
 if __name__ == "__main__":

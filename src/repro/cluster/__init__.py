@@ -15,16 +15,26 @@ hundreds of machines", validated against real execution).
   (round-robin, least-outstanding-work, size-aware, Hercules-style
   heterogeneity-aware with per-tenant affinity).
 * ``traffic`` — diurnal / bursty / multi-tenant arrival scenarios.
-* ``autoscaler`` — reactive p95-vs-SLA pool scaling with node-hour
-  accounting, against the ``CapacityLedger`` protocol.
+* ``lifecycle`` — the node lifecycle layer: ``NodeState``
+  (BOOTING → SERVING → DRAINING → DEAD) owned by a ``FleetController``
+  that materializes, boots, drains, retires, and kills backends on the
+  shared timeline; ``FleetFaults`` kill plans with re-route.
+* ``autoscaler`` — reactive p95-vs-SLA pool scaling plus the predictive
+  boot-latency-ahead ``PredictiveAutoscaler`` over traffic forecasts,
+  with node-hour accounting, against the ``CapacityLedger`` protocol.
 * ``cluster_sim`` — ``drive_fleet``, the engine-agnostic shared-timeline
   driver (plus the event engine per node when faults/contention are
   enabled).
 """
 from repro.cluster.autoscaler import (Autoscaler,  # noqa: F401
-                                      CapacityLedger, ScalingEvent)
+                                      CapacityLedger, PredictiveAutoscaler,
+                                      ScalingEvent)
 from repro.cluster.backend import (CompletedQuery, NodeBackend,  # noqa: F401
-                                   NodeHandle, SimNodeBackend, sim_backends)
+                                   NodeHandle, PendingQuery, SimNodeBackend,
+                                   sim_backends)
+from repro.cluster.lifecycle import (FleetController,  # noqa: F401
+                                     FleetFaults, LifecycleEvent, NodeKill,
+                                     NodeState)
 from repro.cluster.cluster_sim import (ClusterResult,  # noqa: F401
                                        cluster_max_qps, drive_fleet,
                                        simulate_fleet)

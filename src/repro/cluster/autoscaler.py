@@ -1,8 +1,10 @@
-"""Reactive autoscaling for the cluster tier: p95-vs-SLA plus capacity
-headroom.
+"""Autoscaling for the cluster tier: reactive p95/utilization scaling and
+predictive boot-ahead scaling over traffic forecasts.
 
 After each traffic window the driver reports the window's observed p95 and
-offered rate; the autoscaler grows/shrinks pools at window boundaries:
+offered rate; an autoscaler grows/shrinks pools at window boundaries.
+
+**Reactive** (:class:`Autoscaler`):
 
   * scale **up** when the SLA is threatened — p95 > ``up_at``·SLA — or the
     fleet is running hot (offered rate > ``util_high`` × total capacity,
@@ -14,24 +16,40 @@ offered rate; the autoscaler grows/shrinks pools at window boundaries:
   * a cooldown of ``cooldown_windows`` windows between events damps
     flapping.
 
-Pool choice: grow the pool with the highest per-node capacity (most
-queueing relief per node-hour spent), shrink the one with the lowest
-(cheapest capacity to shed); pools pinned at their ``min_count``/
-``max_count`` bounds fall through to the next candidate.  Capacity
-consumed is accounted in node-hours by the driver; every decision is
-recorded as a ``ScalingEvent`` for the report.
+**Predictive** (:class:`PredictiveAutoscaler`): with node boot latency
+(``NodeSpec.boot_s`` > 0) a reactive scaler is structurally late — by the
+time p95 breaches, the node it orders arrives ``boot_s`` too late for the
+ramp that hurt it.  The predictive scaler forecasts the offered rate
+``lead_s`` seconds ahead (set ``lead_s ≈ boot_s + window_s``) — from the
+scenario's known :class:`~repro.cluster.traffic.Traffic` rate curve when
+given one, else by Holt's linear-trend EWMA over the observed timeline —
+and scales when the *forecast* crosses the utilization bar, so capacity
+finishes booting as the ramp arrives.  Reactive triggers remain as a
+backstop, and scale-down additionally requires forecast headroom (don't
+shed right before the morning ramp).
 
-The autoscaler never reaches into engine state: it sees only a
+Pool choice is shared by both: grow the pool with the highest per-node
+capacity (most queueing relief per node-hour spent), shrink the one with
+the lowest (cheapest capacity to shed); pools pinned at their
+``min_count``/``max_count`` bounds fall through to the next candidate.
+Capacity consumed is accounted in node-hours by the driver; every decision
+is recorded as a :class:`ScalingEvent` whose ``reason`` names the trigger
+that fired (``"p95"`` / ``"util"`` / ``"forecast"``).
+
+An autoscaler never reaches into engine state: it sees only a
 ``CapacityLedger`` — named pools with capacity weights and a ``scale``
 method.  ``fleet.Fleet`` is the canonical ledger; the driver
 (``cluster_sim.drive_fleet``) materializes the corresponding node
-backends — simulated or live — through its backend factory, so the same
-scaling policy governs either engine.
+backends — simulated or live — through the fleet lifecycle controller, so
+the same scaling policy governs either engine (and newly ordered nodes
+pay their spec's ``boot_s`` before serving).
 """
 from __future__ import annotations
 
 import dataclasses
 from typing import Protocol, Sequence, runtime_checkable
+
+import numpy as np
 
 
 @runtime_checkable
@@ -56,6 +74,7 @@ class ScalingEvent:
     delta: int
     p95_ms: float
     n_nodes: int              # fleet size after the event
+    reason: str = ""          # trigger that fired: "p95" | "util" | "forecast"
 
 
 @dataclasses.dataclass
@@ -73,6 +92,68 @@ class Autoscaler:
     def reset(self) -> None:
         self.events, self._cooldown = [], 0
 
+    def _capacity(self, fleet: CapacityLedger) -> float:
+        cap = fleet.total_capacity()
+        if cap <= 0:
+            raise ValueError(
+                "fleet has no capacity weights — run Fleet.tune() or "
+                "Fleet.estimate_capacity() before autoscaling (otherwise "
+                "the utilization signal reads ∞ and scales up every window)")
+        return cap
+
+    def _apply(self, ranked, delta: int, t_s: float, p95_ms: float,
+               fleet: CapacityLedger, reason: str) -> int:
+        """Shared ranked-pool walk: first pool whose bounds admit the
+        delta takes it; the event records which trigger asked."""
+        for pool in ranked:
+            applied = fleet.scale(pool.name, delta)
+            if applied:
+                self.events.append(ScalingEvent(t_s, pool.name, applied,
+                                                p95_ms, fleet.n_nodes,
+                                                reason))
+                self._cooldown = self.cooldown_windows
+                return applied
+        return 0
+
+    def _grow(self, t_s: float, p95_ms: float, fleet: CapacityLedger,
+              reason: str) -> int:
+        ranked = sorted(fleet.pools, key=lambda p: -p.qps_capacity)
+        return self._apply(ranked, +self.step, t_s, p95_ms, fleet, reason)
+
+    def _grow_to_rate(self, rate_qps: float, t_s: float, p95_ms: float,
+                      fleet: CapacityLedger, reason: str) -> int:
+        """Proportional sizing: order however many nodes close the gap
+        between the fleet's capacity and ``rate_qps / util_high`` in one
+        boundary (an HPA-style step, not a fixed increment — a steep ramp
+        would outrun one-node-per-window).  Greedy over the ranked pools,
+        one event per pool touched; the reactive scaler feeds the
+        *current* offered rate in, the predictive one its forecast."""
+        need = rate_qps / self.util_high - fleet.total_capacity()
+        total = 0
+        for pool in sorted(fleet.pools, key=lambda p: -p.qps_capacity):
+            if need <= 0:
+                break
+            want = max(int(np.ceil(need / max(pool.qps_capacity, 1e-9))),
+                       self.step)
+            applied = fleet.scale(pool.name, +want)
+            if applied:
+                self.events.append(ScalingEvent(t_s, pool.name, applied,
+                                                p95_ms, fleet.n_nodes,
+                                                reason))
+                need -= applied * pool.qps_capacity
+                total += applied
+        if total:
+            self._cooldown = self.cooldown_windows
+        return total
+
+    def _shrink(self, t_s: float, p95_ms: float, offered_qps: float,
+                cap: float, fleet: CapacityLedger, reason: str) -> int:
+        ranked = [p for p in sorted(fleet.pools,
+                                    key=lambda p: p.qps_capacity)
+                  if offered_qps < self.util_high
+                  * (cap - self.step * p.qps_capacity)]
+        return self._apply(ranked, -self.step, t_s, p95_ms, fleet, reason)
+
     def observe(self, t_s: float, p95_ms: float, offered_qps: float,
                 fleet: CapacityLedger) -> int:
         """One window's verdict; mutates ``fleet`` and returns the node
@@ -80,29 +161,72 @@ class Autoscaler:
         if self._cooldown > 0:
             self._cooldown -= 1
             return 0
-        cap = fleet.total_capacity()
-        if cap <= 0:
-            raise ValueError(
-                "fleet has no capacity weights — run Fleet.tune() or "
-                "Fleet.estimate_capacity() before autoscaling (otherwise "
-                "the utilization signal reads ∞ and scales up every window)")
+        cap = self._capacity(fleet)
         util = offered_qps / cap
-        if p95_ms > self.up_at * self.sla_ms or util > self.util_high:
-            ranked = sorted(fleet.pools, key=lambda p: -p.qps_capacity)
-            delta = +self.step
-        elif p95_ms < self.down_at * self.sla_ms and util < self.util_low:
-            ranked = [p for p in sorted(fleet.pools,
-                                        key=lambda p: p.qps_capacity)
-                      if offered_qps < self.util_high
-                      * (cap - self.step * p.qps_capacity)]
-            delta = -self.step
+        if p95_ms > self.up_at * self.sla_ms:
+            return self._grow(t_s, p95_ms, fleet, "p95")
+        if util > self.util_high:
+            return self._grow_to_rate(offered_qps, t_s, p95_ms, fleet,
+                                      "util")
+        if p95_ms < self.down_at * self.sla_ms and util < self.util_low:
+            return self._shrink(t_s, p95_ms, offered_qps, cap, fleet, "util")
+        return 0
+
+
+@dataclasses.dataclass
+class PredictiveAutoscaler(Autoscaler):
+    """Boot-latency-ahead scaling over a traffic forecast (see module
+    docstring).  ``traffic`` is any object with a vectorized ``rate(t)``
+    curve (the ``cluster.traffic`` scenarios); without one the forecast
+    is Holt's linear trend over the observed offered rates."""
+
+    traffic: object | None = None
+    lead_s: float = 0.0          # forecast horizon; ≈ boot_s + window_s
+    ewma_alpha: float = 0.4      # level smoothing (trend uses alpha/2)
+    _level: float | None = None
+    _slope: float = 0.0
+    _last_t: float | None = None
+
+    def reset(self) -> None:
+        super().reset()
+        self._level, self._slope, self._last_t = None, 0.0, None
+
+    def forecast(self, t_s: float, offered_qps: float) -> float:
+        """Expected offered rate at ``t_s + lead_s`` — exact from the
+        scenario curve when known, extrapolated otherwise.  Always feeds
+        the EWMA so a mid-run fallback has history."""
+        if self._level is None:
+            self._level, self._last_t = offered_qps, t_s
         else:
+            dt = max(t_s - self._last_t, 1e-9)
+            a, prev = self.ewma_alpha, self._level
+            self._level = a * offered_qps + (1 - a) * (
+                self._level + self._slope * dt)
+            self._slope = (a / 2) * (self._level - prev) / dt \
+                + (1 - a / 2) * self._slope
+            self._last_t = t_s
+        if self.traffic is not None:
+            return float(np.asarray(
+                self.traffic.rate(np.array([t_s + self.lead_s]))).ravel()[0])
+        return max(self._level + self._slope * self.lead_s, 0.0)
+
+    def observe(self, t_s: float, p95_ms: float, offered_qps: float,
+                fleet: CapacityLedger) -> int:
+        fc = self.forecast(t_s, offered_qps)   # keep EWMA warm every window
+        if self._cooldown > 0:
+            self._cooldown -= 1
             return 0
-        for pool in ranked:
-            applied = fleet.scale(pool.name, delta)
-            if applied:
-                self.events.append(ScalingEvent(t_s, pool.name, applied,
-                                                p95_ms, fleet.n_nodes))
-                self._cooldown = self.cooldown_windows
-                return applied
+        cap = self._capacity(fleet)
+        util = offered_qps / cap
+        if fc > self.util_high * cap:
+            return self._grow_to_rate(fc, t_s, p95_ms, fleet, "forecast")
+        if p95_ms > self.up_at * self.sla_ms:          # reactive backstop
+            return self._grow(t_s, p95_ms, fleet, "p95")
+        if util > self.util_high:
+            return self._grow_to_rate(offered_qps, t_s, p95_ms, fleet,
+                                      "util")
+        if (p95_ms < self.down_at * self.sla_ms and util < self.util_low
+                and fc < self.util_low * cap):
+            return self._shrink(t_s, p95_ms, max(offered_qps, fc), cap,
+                                fleet, "util")
         return 0

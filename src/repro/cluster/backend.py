@@ -49,6 +49,17 @@ class NodeHandle(Protocol):
 
 
 @dataclasses.dataclass
+class PendingQuery:
+    """One query a backend accepted but had not completed when it was
+    killed (``NodeBackend.cancel_pending``) — everything the fleet
+    controller needs to re-route it to a surviving node."""
+    index: int                  # global index into the driver's trace
+    t_arrival: float
+    size: int
+    model_id: int = -1
+
+
+@dataclasses.dataclass
 class CompletedQuery:
     """One query's completion facts, in trace-time seconds (live backends
     convert wall clock back to the trace timeline so sim and live results
@@ -117,6 +128,35 @@ class NodeBackend:
         """Everything this node has completed so far."""
         raise NotImplementedError
 
+    def take_new_records(self) -> list[CompletedQuery]:
+        """Completions since the last call — the windowed driver's
+        monitoring feed.  The base implementation diffs
+        ``completed_records`` against a seen-set (correct for any
+        backend); ``LiveNodeBackend`` overrides it with an O(new
+        completions) cursor into the runtime's append-only completion
+        log, so per-window polls don't rescan a long run's full history.
+        """
+        seen = self._taken = getattr(self, "_taken", set())
+        out = []
+        for r in self.completed_records():
+            if r.index not in seen:
+                seen.add(r.index)
+                out.append(r)
+        return out
+
+    def cancel_pending(self, t: float) -> list[PendingQuery]:
+        """Kill the node at trace time ``t``: every accepted query the
+        node had not already completed is forgotten and returned for
+        re-routing, and the backend accepts no further ``submit``.
+        "Already completed" is engine-specific at the boundary: a
+        simulated node keeps analytic completions with ``done <= t``; a
+        live node shuts its ``ServingRuntime`` down mid-run and keeps
+        whatever the runtime had physically finished by the shutdown
+        (including a worker's in-flight request).  Either way, a query
+        is in exactly one of ``completed_records()`` or the returned
+        pending list — nothing is double-counted or lost."""
+        raise NotImplementedError
+
     def close(self) -> None:
         """Release node resources (worker threads, devices)."""
 
@@ -141,26 +181,52 @@ class SimNodeBackend(NodeBackend):
         self.cpu_free = np.full(self.spec.n_executors, float(t0))
         self.acc_free = np.full(self.spec.n_accelerators, float(t0))
         self._chunks: list[tuple[np.ndarray, np.ndarray, np.ndarray,
-                                 np.ndarray | None]] = []
+                                 np.ndarray, np.ndarray | None]] = []
+        self._killed = False
 
     def submit(self, idx: np.ndarray, times: np.ndarray, sizes: np.ndarray,
                model_ids: np.ndarray | None = None) -> np.ndarray:
+        if self._killed:
+            raise RuntimeError(f"node {self.key} is dead (cancel_pending "
+                               f"was called) — it accepts no new queries")
         done, _, _, self.cpu_free, self.acc_free = node_pass(
             times, sizes, self.spec.cpu, self.cfg, accel=self.spec.accel,
             cpu_free=self.cpu_free, acc_free=self.acc_free)
         self._chunks.append((np.asarray(idx), np.asarray(times, float),
-                             done, model_ids))
+                             done, np.asarray(sizes, np.int64), model_ids))
         return done
 
     def completed_records(self) -> list[CompletedQuery]:
         out = []
-        for idx, times, done, mids in self._chunks:
+        for idx, times, done, _, mids in self._chunks:
             for j in range(len(idx)):
                 out.append(CompletedQuery(
                     index=int(idx[j]), t_arrival=float(times[j]),
                     t_done=float(done[j]),
                     model_id=int(mids[j]) if mids is not None else -1))
         return out
+
+    def cancel_pending(self, t: float) -> list[PendingQuery]:
+        """A simulated kill at trace time ``t``: the analytically computed
+        completion at ``done > t`` never actually happened — strip those
+        queries (and NaN drops) from the node's history and hand them
+        back for re-routing; completions at ``done <= t`` stand."""
+        self._killed = True
+        orphans: list[PendingQuery] = []
+        kept = []
+        for idx, times, done, sizes, mids in self._chunks:
+            alive = done <= t            # NaN compares False → orphaned
+            for j in np.flatnonzero(~alive):
+                orphans.append(PendingQuery(
+                    index=int(idx[j]), t_arrival=float(times[j]),
+                    size=int(sizes[j]),
+                    model_id=int(mids[j]) if mids is not None else -1))
+            if alive.any():
+                kept.append((idx[alive], times[alive], done[alive],
+                             sizes[alive],
+                             mids[alive] if mids is not None else None))
+        self._chunks = kept
+        return orphans
 
 
 def sim_backends(views: list[NodeView], t0: float = 0.0

@@ -19,11 +19,17 @@ faults/contention are enabled ``simulate_fleet`` falls back to the
 event-driven reference per node (``event_done_times``) and merges
 per-query latencies — node-local percentiles don't compose, latencies do.
 
+Node *membership* — who exists, who is booting, who is draining, who
+died — is owned by ``cluster.lifecycle.FleetController``; the driver only
+routes windows across the controller's SERVING nodes and re-routes the
+queries a killed node surrenders (``NodeBackend.cancel_pending``).
+
 Entry points:
   * ``drive_fleet(times, sizes, backends, router, ...)`` — the shared
     windowed loop over any backend kind; optional ``window_s`` +
     ``Autoscaler`` (with a fleet ledger + backend factory) turn it into a
-    resizing loop billed in node-hours.
+    resizing loop billed in node-hours, and ``fleet_faults`` kills whole
+    nodes mid-run.
   * ``simulate_fleet(times, sizes, fleet, router, ...)`` — the simulated
     fleet: builds ``SimNodeBackend``s from the fleet and runs
     ``drive_fleet`` (or the event engine when faults/contention are on).
@@ -41,6 +47,8 @@ import numpy as np
 from repro.cluster.autoscaler import Autoscaler, ScalingEvent
 from repro.cluster.backend import NodeBackend, SimNodeBackend
 from repro.cluster.fleet import Fleet
+from repro.cluster.lifecycle import (FleetController, FleetFaults,
+                                     LifecycleEvent)
 from repro.cluster.router import Router
 from repro.core.latency_model import ContentionModel
 from repro.core.query_gen import (PRODUCTION, SizeDist, queries_from_arrays,
@@ -79,23 +87,40 @@ class ClusterResult:
     per_pool: dict[str, PoolStats]
     events: list[ScalingEvent] = dataclasses.field(default_factory=list)
     # fast path: one row per window, (t_start_s, offered_qps, n_nodes,
-    # p95_ms); empty in events mode (faults/contention), which is unwindowed
+    # p95_ms, width_s) — the last window's width is the truncated
+    # remainder, not window_s; empty in events mode (faults/contention),
+    # which is unwindowed
     timeline: list[tuple] = dataclasses.field(default_factory=list)
     # per-model-id latency breakdown when the trace carries tenant labels
     per_model: dict[int, ModelStats] = dataclasses.field(default_factory=dict)
     # live only: apply_fn failures; errored queries also count as dropped
     # (they were not actually served)
     errors: int = 0
+    # fleet-fault accounting: queries a killed node surrendered that were
+    # re-submitted to survivors (with reroute=False they count as dropped)
+    rerouted: int = 0
+    # node state transitions (BOOTING/SERVING/DRAINING/DEAD) on the trace
+    # timeline, from the lifecycle controller
+    lifecycle: list[LifecycleEvent] = dataclasses.field(default_factory=list)
 
     def meets(self, sla_ms: float) -> bool:
         return self.p95_ms <= sla_ms and self.dropped == 0
+
+    def sla_violation_minutes(self, sla_ms: float) -> float:
+        """Window-minutes the fleet spent above the SLA — the per-window
+        p95 rows of ``timeline`` weighted by each window's width.  The
+        resilience benchmark's comparison axis for predictive-vs-reactive
+        scaling (a run-wide p95 hides *when* the fleet was late)."""
+        return sum(row[4] for row in self.timeline
+                   if row[3] > sla_ms) / 60.0
 
 
 def _result(times: np.ndarray, done: np.ndarray, pool_of: np.ndarray,
             pool_counts: dict[str, int], n_nodes: int, node_hours: float,
             events: list, timeline: list,
             model_ids: np.ndarray | None = None,
-            errors: int = 0) -> ClusterResult:
+            errors: int = 0, rerouted: int = 0,
+            lifecycle: list | None = None) -> ClusterResult:
     completed = ~np.isnan(done)
     n_done = int(completed.sum())
     per_pool = {}
@@ -116,7 +141,7 @@ def _result(times: np.ndarray, done: np.ndarray, pool_of: np.ndarray,
     if n_done == 0:
         return ClusterResult(0, 0, 0, 0, 0, 0, len(times), n_nodes,
                              node_hours, per_pool, events, timeline,
-                             per_model, errors)
+                             per_model, errors, rerouted, lifecycle or [])
     lats = done[completed] - times[completed]
     dur = float(done[completed].max()) - float(times[0])
     p50, p95, p99, mean = latency_percentiles_ms(lats)
@@ -126,7 +151,8 @@ def _result(times: np.ndarray, done: np.ndarray, pool_of: np.ndarray,
         n_queries=n_done, dropped=len(times) - n_done,
         n_nodes=n_nodes, node_hours=node_hours,
         per_pool=per_pool, events=events, timeline=timeline,
-        per_model=per_model, errors=errors)
+        per_model=per_model, errors=errors, rerouted=rerouted,
+        lifecycle=lifecycle or [])
 
 
 def _window_grid(times: np.ndarray, window_s: float | None
@@ -153,21 +179,34 @@ def drive_fleet(times: np.ndarray, sizes: np.ndarray,
                 fleet: Fleet | None = None,
                 factory=None,
                 model_ids: np.ndarray | None = None,
+                fleet_faults: FleetFaults | None = None,
                 drain_timeout: float = 120.0) -> ClusterResult:
     """Run one trace through a fleet of node backends.  ``times`` must be
     sorted; ``model_ids`` (optional) labels each query with its tenant and
     is threaded through both the router and ``NodeBackend.submit``.
 
+    Node *membership* is owned by a :class:`~repro.cluster.lifecycle
+    .FleetController`: the driver routes each window only across the
+    controller's SERVING nodes, so booting nodes (``NodeSpec.boot_s``),
+    draining nodes (autoscaler removals finishing their assigned work),
+    and killed nodes (``fleet_faults``) are invisible to every routing
+    policy.  When a :class:`FleetFaults` kill lands, the dead backend's
+    ``cancel_pending`` hook surrenders its unfinished queries and the
+    driver re-routes them to the survivors at the detection boundary
+    (latency still measured from the original arrival); with
+    ``reroute=False`` they are dropped instead.
+
     Two ways to name the fleet:
 
       * ``backends`` — an explicit node list (the live tier: already-built
-        ``LiveNodeBackend``s; autoscaling unavailable without a ledger);
+        ``LiveNodeBackend``s; autoscaling and fault restarts unavailable
+        without a ledger/factory);
       * ``fleet`` + ``factory`` — a :class:`Fleet` ledger plus
         ``factory(view, t0) -> NodeBackend``; nodes are materialized
         lazily per window, which is what lets an :class:`Autoscaler`
-        (mutating the ledger at window boundaries) boot new nodes idle at
-        the window start and retire removed ones after their assigned
-        work completes.
+        (mutating the ledger at window boundaries) order new nodes —
+        BOOTING until their ``boot_s`` elapses — and retire removed ones
+        after their assigned work completes.
 
     Simulated backends return completion times from ``submit`` and the
     loop runs in virtual time; realtime backends (``realtime = True``)
@@ -192,113 +231,99 @@ def drive_fleet(times: np.ndarray, sizes: np.ndarray,
                              "windows — pass the fleet ledger and a "
                              "backend factory(view, t0)")
         autoscaler.reset()
-    if (backends is None) == (fleet is None):
-        raise ValueError("pass exactly one of backends= or fleet=+factory=")
+    if (fleet_faults is not None and fleet_faults.kills
+            and window_s is None):
+        raise ValueError("fleet_faults kills need window_s — kills are "
+                         "detected at window boundaries, and a single-"
+                         "window run would only notice after the trace "
+                         "ended (every orphan dropped, nothing re-routed)")
+    controller = FleetController(fleet=fleet, factory=factory,
+                                 backends=backends, faults=fleet_faults)
     router.reset()
     n = len(times)
     done = np.full(n, np.nan)
     pool_of = np.empty(n, object)
-
-    pool: dict[tuple, NodeBackend] = {}
-    for b in (backends or []):
-        if b.key in pool:
-            raise ValueError(f"duplicate backend identity {b.key}: give "
-                             f"each node a distinct (pool, index_in_pool)")
-        pool[b.key] = b
-    retired: list[NodeBackend] = []
     t_start, horizon, window_s, n_windows = _window_grid(times, window_s)
-
-    def _kind(batch, current):
-        """Fold a batch of backends into the fleet's realtime flag —
-        evaluated lazily because factory-built nodes (which may be live)
-        only exist once their first window materializes them."""
-        kinds = {b.realtime for b in batch}
-        if current is not None:
-            kinds.add(current)
-        if len(kinds) > 1:
-            raise ValueError("cannot mix realtime and simulated backends "
-                             "on one timeline")
-        return kinds.pop() if kinds else current
-
-    realtime = None
-    if pool:
-        realtime = _kind(pool.values(), None)
-        if realtime:
-            for b in pool.values():
-                b.start(t_start)
-    seen: dict[tuple, set] = {}       # realtime: record indices consumed
+    controller.start(t_start)
     node_hours = 0.0
+    rerouted = 0
     timeline: list[tuple] = []
+
+    def _submit(active, assign, gidx, wt, ws, wm):
+        for i, b in enumerate(active):
+            sel = assign == i
+            if not sel.any():
+                continue
+            ret = b.submit(gidx[sel], wt[sel], ws[sel],
+                           wm[sel] if wm is not None else None)
+            if ret is not None:
+                done[gidx[sel]] = ret
+                pool_of[gidx[sel]] = b.pool
 
     for w in range(n_windows):
         w0, w1 = t_start + w * window_s, t_start + (w + 1) * window_s
         idx = np.flatnonzero((times >= w0) & (times < w1 if w < n_windows - 1
                                               else times <= horizon))
-        if fleet is not None:
-            views = fleet.node_views()
-            created = []
-            for v in views:
-                k = (v.pool, v.index_in_pool)
-                if k not in pool:
-                    pool[k] = factory(v, w0)
-                    created.append(pool[k])
-            if created:
-                realtime = _kind(created, realtime)
-                if realtime:
-                    for b in created:       # boot on the shared timeline
-                        b.start(w0)
-            active = [pool[(v.pool, v.index_in_pool)] for v in views]
-        else:
-            active = list(pool.values())
+        active, orphans = controller.begin_window(w0)
+        if orphans:
+            # a killed node's unfinished queries: void their (analytic)
+            # completions, then re-submit to the survivors at the
+            # detection boundary — re-routed queries re-arrive at w0 but
+            # their latency is still measured from the original arrival
+            oidx = np.array([q.index for q in orphans], np.int64)
+            done[oidx] = np.nan
+            pool_of[oidx] = None
+            if controller.faults.reroute and active:
+                ot = np.full(len(orphans), w0)
+                osz = np.array([q.size for q in orphans], np.int64)
+                om = np.array([q.model_id for q in orphans], np.int64) \
+                    if model_ids is not None else None
+                _submit(active, router.assign(ot, osz, active,
+                                              model_ids=om),
+                        oidx, ot, osz, om)
+                rerouted += len(orphans)
         width = min(w1, horizon) - w0     # last window may be truncated
-        node_hours += len(active) * width / 3600.0
+        node_hours += controller.billable_n * width / 3600.0
         wt, ws = times[idx], sizes[idx]
         wm = model_ids[idx] if model_ids is not None else None
-        assign = router.assign(wt, ws, active, model_ids=wm)
-        for i, b in enumerate(active):
-            sel = assign == i
-            if not sel.any():
-                continue
-            ret = b.submit(idx[sel], wt[sel], ws[sel],
-                           wm[sel] if wm is not None else None)
-            if ret is not None:
-                done[idx[sel]] = ret
-                pool_of[idx[sel]] = b.pool
-        if realtime:
-            for b in active:
+        if len(active):
+            assign = router.assign(wt, ws, active, model_ids=wm)
+            _submit(active, assign, idx, wt, ws, wm)
+        # else: no SERVING node this window — queries stay NaN (dropped)
+        if controller.realtime:
+            advancing = controller.advance_targets()
+            for b in advancing:
                 b.advance_to(w1)
             # window p95 from completions landed so far — queries still in
             # flight at the boundary report in a later window (monitoring
             # semantics; the final result uses the full drained records).
-            # Consumption is tracked per query index, not list position:
-            # completions land out of order, so a length cursor would
-            # double-count old records and skip late ones.
-            lats = []
-            for b in active:
-                consumed = seen.setdefault(b.key, set())
-                for r in b.completed_records():
-                    if r.index in consumed:
-                        continue
-                    consumed.add(r.index)
-                    if r.error is None:
-                        lats.append(r.latency_ms)
+            # take_new_records is O(new completions) per node — a cursor
+            # into the runtime's completion log, not a rescan of every
+            # record the node ever finished.
+            lats = [r.latency_ms for b in advancing
+                    for r in b.take_new_records() if r.error is None]
             p95 = float(np.percentile(lats, 95)) if lats else 0.0
         else:
             wl = done[idx] - times[idx]
             ok = ~np.isnan(wl)
             p95 = float(np.percentile(wl[ok], 95) * 1e3) if ok.any() else 0.0
         offered = len(idx) / max(width, 1e-9)
-        timeline.append((w0, offered, len(active), p95))
+        timeline.append((w0, offered, len(active), p95, width))
         if autoscaler is not None:
             autoscaler.observe(w1, p95, offered, fleet)
-            alive = {(v.pool, v.index_in_pool) for v in fleet.node_views()}
-            for k in [k for k in pool if k not in alive]:
-                retired.append(pool.pop(k))
+            controller.reconcile(w1)
+
+    # kills that landed after the last window boundary: no windows remain
+    # to re-route in, so their orphans can only drop
+    for q in controller.finish(horizon):
+        done[q.index] = np.nan
+        pool_of[q.index] = None
 
     errors = 0
-    if realtime:
-        for b in list(pool.values()) + retired:
+    if controller.realtime:
+        for b in controller.advance_targets():
             b.drain(drain_timeout)
+        for b in controller.all_created():
             for r in b.completed_records():
                 if r.error is not None:
                     # a query whose apply_fn failed was not served: count
@@ -308,30 +333,27 @@ def drive_fleet(times: np.ndarray, sizes: np.ndarray,
                     continue
                 done[r.index] = r.t_done
                 pool_of[r.index] = b.pool
-    if fleet is not None:
-        # factory-built backends are owned by the driver (the caller never
-        # sees them) — release their resources; a no-op for sim nodes,
-        # thread/runtime shutdown for live ones
-        for b in list(pool.values()) + retired:
-            b.close()
+    # factory-built backends are owned by the driver (the caller never
+    # sees them) — release their resources; a no-op for sim nodes,
+    # thread/runtime shutdown for live ones
+    controller.close_all()
 
     if fleet is not None:
         pool_counts = {p.name: p.count for p in fleet.pools}
-        n_nodes = fleet.n_nodes
     else:
-        pool_counts = {}
-        for b in pool.values():
-            pool_counts[b.pool] = pool_counts.get(b.pool, 0) + 1
-        n_nodes = len(pool)
-    return _result(times, done, pool_of, pool_counts, n_nodes, node_hours,
+        pool_counts = controller.pool_counts()
+    return _result(times, done, pool_of, pool_counts, controller.n_nodes,
+                   node_hours,
                    list(autoscaler.events) if autoscaler else [], timeline,
-                   model_ids=model_ids, errors=errors)
+                   model_ids=model_ids, errors=errors, rerouted=rerouted,
+                   lifecycle=list(controller.events))
 
 
 def simulate_fleet(times: np.ndarray, sizes: np.ndarray, fleet: Fleet,
                    router: Router, *, window_s: float | None = None,
                    autoscaler: Autoscaler | None = None,
                    faults: FaultConfig | None = None,
+                   fleet_faults: FleetFaults | None = None,
                    contention: ContentionModel | None = None,
                    model_ids: np.ndarray | None = None,
                    seed: int = 0) -> ClusterResult:
@@ -340,10 +362,13 @@ def simulate_fleet(times: np.ndarray, sizes: np.ndarray, fleet: Fleet,
     Fast path (default): ``drive_fleet`` over per-node ``SimNodeBackend``s
     (windowed numpy advance, stateful across windows); with an
     ``Autoscaler`` the fleet is resized at window boundaries (new nodes
-    boot idle at the window start; removed nodes finish their assigned
-    work first — their completions are already recorded).  With
-    ``faults``/``contention`` every node routes through the event-driven
-    reference instead (single window, no autoscaling).
+    are ordered at a boundary and serve after their spec's ``boot_s``;
+    removed nodes finish their assigned work first — their completions
+    are already recorded).  ``fleet_faults`` kills whole nodes mid-run
+    through the lifecycle controller (unfinished queries re-routed to
+    survivors) and stays on the fast path.  With per-node ``faults``/
+    ``contention`` every node routes through the event-driven reference
+    instead (single window, no autoscaling, no fleet faults).
     """
     times = np.asarray(times, float)
     sizes = np.asarray(sizes, np.int64)
@@ -361,6 +386,11 @@ def simulate_fleet(times: np.ndarray, sizes: np.ndarray, fleet: Fleet,
             raise ValueError("windowing/autoscaling need the fast path; "
                              "faults/contention force the (unwindowed) "
                              "event engine")
+        if fleet_faults is not None:
+            raise ValueError("fleet_faults (whole-node kills) need the "
+                             "windowed fast path; per-node faults/"
+                             "contention force the unwindowed event "
+                             "engine — use one fault layer per run")
         router.reset()
         n = len(times)
         done = np.full(n, np.nan)
@@ -386,7 +416,8 @@ def simulate_fleet(times: np.ndarray, sizes: np.ndarray, fleet: Fleet,
     work_fleet = fleet.copy() if autoscaler is not None else fleet
     return drive_fleet(times, sizes, None, router, window_s=window_s,
                        autoscaler=autoscaler, fleet=work_fleet,
-                       factory=SimNodeBackend, model_ids=model_ids)
+                       factory=SimNodeBackend, model_ids=model_ids,
+                       fleet_faults=fleet_faults)
 
 
 def cluster_max_qps(fleet: Fleet, router: Router, sla_ms: float, *,
@@ -418,8 +449,10 @@ def cluster_max_qps(fleet: Fleet, router: Router, sla_ms: float, *,
 
     if not ok(lo):
         return 0.0                # even the floor rate misses the SLA
+    # the runaway-doubling cap guards both branches: an explicit hi is a
+    # bracket start like a hint (bracket_bisect doubles past a hi that is
+    # still feasible), not an unguarded ceiling
+    cap = 4e6 * max(fleet.n_nodes, 1)
     if hi is None:
         lo, hi = warm_bracket(ok, lo, hint)
-        return bracket_bisect(ok, lo, hi, iters,
-                              cap=4e6 * max(fleet.n_nodes, 1))
-    return bracket_bisect(ok, lo, hi, iters)
+    return bracket_bisect(ok, lo, hi, iters, cap=cap)

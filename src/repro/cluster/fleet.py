@@ -41,7 +41,14 @@ class ScaledDeviceModel:
 
 @dataclasses.dataclass
 class NodeSpec:
-    """One node class: devices, executor counts, and DeepRecSched knobs."""
+    """One node class: devices, executor counts, and DeepRecSched knobs.
+
+    ``boot_s`` is the node-class boot latency: a node of this spec added
+    to a running fleet (autoscaling, fault restart) spends its first
+    ``boot_s`` seconds in the BOOTING lifecycle state and receives no
+    queries until the delay elapses (``cluster.lifecycle``).  Nodes
+    present when a run starts are warm.
+    """
     cpu: DeviceModel
     accel: DeviceModel | None = None
     n_executors: int = 40
@@ -49,6 +56,7 @@ class NodeSpec:
     batch_size: int = 8
     offload_threshold: int | None = None
     request_overhead_s: float = 1.35e-4
+    boot_s: float = 0.0
 
     def scheduler_config(self) -> SchedulerConfig:
         return SchedulerConfig(

@@ -1,0 +1,352 @@
+"""Fleet lifecycle: first-class node states on the shared timeline.
+
+The paper's deployment story (§VII, "hundreds of machines") is won or
+lost in the provisioning layer: nodes are not eternal.  This module owns
+node *membership* for one ``drive_fleet`` run — previously inlined
+pool-dict bookkeeping in the driver — as an explicit state machine:
+
+    BOOTING ──boot_s elapses──▶ SERVING ──ledger removal──▶ DRAINING
+       │                          │                            │
+       └────────── kill ──────────┴──────── kill / drained ────┴──▶ DEAD
+
+  * **BOOTING** — the node is materialized (billed!) but serves nothing
+    until its spec's ``boot_s`` elapses.  Nodes present when the run
+    starts are warm; nodes added later (autoscaling, fault restart) pay
+    the boot delay.
+  * **SERVING** — the only state routers ever see: ``drive_fleet`` routes
+    each window across ``FleetController.serving()``.
+  * **DRAINING** — removed from the ledger by an autoscaler: receives no
+    new queries but finishes its assigned work (live nodes keep
+    advancing on the wall clock until the final drain).  A draining node
+    lingers unbilled until the run ends; if the ledger names its key
+    again (the pool regrows) the drain is *cancelled* and it resumes
+    warm — scale-in-protection semantics rather than instance
+    termination (terminate-after-idle is a roadmap item).
+  * **DEAD** — killed by a :class:`FleetFaults` plan: the backend's
+    ``cancel_pending`` hook surrenders its unfinished queries, and the
+    controller hands them back to the driver for *re-routing* to the
+    surviving SERVING nodes (or drops them when ``reroute=False`` — the
+    ablation baseline).  A ``restart_after_s`` schedule re-materializes
+    the node later, through BOOTING like any cold node.
+
+Both engines run the same controller: ``SimNodeBackend.cancel_pending``
+rolls analytic completions past the kill instant back out of its history;
+``LiveNodeBackend.cancel_pending`` shuts its ``ServingRuntime`` down
+mid-run.  Kills land at the first window boundary at or after their
+trace time (detection is windowed, like any health check).
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+
+from repro.cluster.backend import NodeBackend, PendingQuery
+from repro.cluster.fleet import Fleet, NodeView
+
+
+class NodeState(enum.Enum):
+    BOOTING = "booting"
+    SERVING = "serving"
+    DRAINING = "draining"
+    DEAD = "dead"
+
+
+@dataclasses.dataclass(frozen=True)
+class NodeKill:
+    """Kill one node at trace time ``t_s``.  With ``restart_after_s`` the
+    node re-materializes that many seconds after the kill — as a fresh
+    backend, through BOOTING, paying its spec's ``boot_s``."""
+    t_s: float
+    pool: str
+    index_in_pool: int
+    restart_after_s: float | None = None
+
+    @property
+    def key(self) -> tuple[str, int]:
+        return (self.pool, self.index_in_pool)
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetFaults:
+    """Fleet-level fault plan — whole-node kills at trace times, driving
+    both engines through the one ``FleetController``.  ``reroute=False``
+    drops a killed node's unfinished queries instead of re-routing them
+    to survivors (what the resilience benchmark compares against).
+    Orthogonal to ``core.simulator.FaultConfig``, which models
+    *intra-node* faults (stragglers, request failures) in the event
+    engine.
+
+    Known approximation when combined with an autoscaler on the *same*
+    pool: kills are not written back to the ``Fleet`` ledger (node
+    identity is positional — shrinking the count would rename surviving
+    nodes), so a dead node's slot keeps its ledger capacity.  The
+    utilization trigger therefore under-reacts to a kill (the p95
+    backstop still fires), and regrowing the pool cannot reuse a dead
+    index.  Kill-only and autoscale-only runs are exact."""
+    kills: tuple[NodeKill, ...] = ()
+    reroute: bool = True
+
+
+@dataclasses.dataclass(frozen=True)
+class LifecycleEvent:
+    """One state transition, for ``ClusterResult.lifecycle`` reports."""
+    t_s: float
+    pool: str
+    index_in_pool: int
+    state: NodeState
+
+
+@dataclasses.dataclass
+class _Node:
+    backend: NodeBackend
+    state: NodeState
+    serve_at: float
+
+
+class FleetController:
+    """Materializes, boots, drains, retires, and kills node backends for
+    one ``drive_fleet`` run (see module docstring).
+
+    Two ownership modes, mirroring the driver's:
+
+      * ``fleet`` + ``factory`` — the ledger names the nodes; the
+        controller materializes backends lazily per window and owns them
+        (``close_all``).  Autoscaler mutations are picked up by
+        ``reconcile``; fault restarts re-materialize through the factory.
+      * ``backends`` — an explicit caller-owned node list (the live
+        tier).  Kills work; restarts need a factory and are rejected.
+    """
+
+    def __init__(self, *, fleet: Fleet | None = None, factory=None,
+                 backends: list[NodeBackend] | None = None,
+                 faults: FleetFaults | None = None):
+        if (backends is None) == (fleet is None):
+            raise ValueError("pass exactly one of backends= or fleet=+factory=")
+        if fleet is not None and factory is None:
+            raise ValueError("fleet mode needs a backend factory(view, t0)")
+        self.fleet = fleet
+        self.factory = factory
+        self.faults = faults or FleetFaults()
+        if backends is not None and any(
+                k.restart_after_s is not None for k in self.faults.kills):
+            raise ValueError("restart_after_s needs the fleet=+factory= "
+                             "mode — an explicit backend list gives the "
+                             "controller no way to build a replacement node")
+        self.realtime: bool | None = None
+        self.events: list[LifecycleEvent] = []
+        self._nodes: dict[tuple, _Node] = {}
+        self._order: list[tuple] = []          # insertion order (explicit)
+        self._dead: dict[tuple, float | None] = {}   # key → restart due
+        self._graveyard: list[NodeBackend] = []      # killed backends
+        self._kills = sorted(self.faults.kills, key=lambda k: k.t_s)
+        self._next_kill = 0
+        self._owned = fleet is not None
+        self._explicit = list(backends or [])
+
+    # ------------------------------------------------------------ plumbing
+
+    def _fold_kind(self, batch: list[NodeBackend]) -> None:
+        kinds = {b.realtime for b in batch}
+        if self.realtime is not None:
+            kinds.add(self.realtime)
+        if len(kinds) > 1:
+            raise ValueError("cannot mix realtime and simulated backends "
+                             "on one timeline")
+        if kinds:
+            self.realtime = kinds.pop()
+
+    def _transition(self, t: float, key: tuple, state: NodeState) -> None:
+        self.events.append(LifecycleEvent(t, key[0], key[1], state))
+
+    def _materialize(self, view: NodeView, t: float, *, warm: bool) -> None:
+        b = self.factory(view, t)
+        self._fold_kind([b])
+        if self.realtime:
+            b.start(t)
+        key = (view.pool, view.index_in_pool)
+        boot = 0.0 if warm else float(view.spec.boot_s)
+        state = NodeState.SERVING if boot <= 0 else NodeState.BOOTING
+        self._nodes[key] = _Node(b, state, t + boot)
+        self._order.append(key)
+        self._transition(t, key, state)
+
+    def _view_keys(self) -> list[tuple]:
+        if self.fleet is not None:
+            return [(v.pool, v.index_in_pool) for v in self.fleet.node_views()]
+        return list(self._order)
+
+    # ------------------------------------------------------------ protocol
+
+    def start(self, t0: float) -> None:
+        """Materialize the initial fleet, warm (nodes present at the start
+        of a run don't pay ``boot_s`` — only nodes added mid-run do)."""
+        if self._explicit:
+            keys = set()
+            for b in self._explicit:
+                if b.key in keys:
+                    raise ValueError(
+                        f"duplicate backend identity {b.key}: give each "
+                        f"node a distinct (pool, index_in_pool)")
+                keys.add(b.key)
+            self._fold_kind(self._explicit)
+            for b in self._explicit:
+                if self.realtime:
+                    b.start(t0)
+                self._nodes[b.key] = _Node(b, NodeState.SERVING, t0)
+                self._order.append(b.key)
+                self._transition(t0, b.key, NodeState.SERVING)
+        else:
+            for v in self.fleet.node_views():
+                self._materialize(v, t0, warm=True)
+
+    def begin_window(self, t: float
+                     ) -> tuple[list[NodeBackend], list[PendingQuery]]:
+        """Advance the lifecycle to window start ``t``: restart dead nodes
+        whose schedule came due, materialize ledger additions (BOOTING),
+        promote BOOTING nodes whose delay elapsed, and apply kills whose
+        trace time has arrived.  Returns the SERVING node list routers
+        may see plus the killed nodes' unfinished queries (empty unless a
+        kill landed this window)."""
+        views = {(v.pool, v.index_in_pool): v
+                 for v in self.fleet.node_views()} if self.fleet else {}
+        # fault restarts that came due (fleet mode only; a key the ledger
+        # no longer names — shrunk away meanwhile — stays dead)
+        for key, due in list(self._dead.items()):
+            if due is not None and due <= t:
+                del self._dead[key]
+                if key in views:
+                    self._materialize(views[key], t, warm=False)
+        # ledger additions (autoscaler growth), cold — except a key whose
+        # node is still DRAINING from an earlier shrink: the ledger naming
+        # it again cancels the drain (the backend never stopped, so it
+        # resumes SERVING warm rather than colliding with a fresh twin)
+        for key, v in views.items():
+            node = self._nodes.get(key)
+            if node is not None:
+                if node.state is NodeState.DRAINING:
+                    # a node drained mid-boot resumes the rest of its boot
+                    back = (NodeState.SERVING
+                            if node.serve_at <= t + 1e-9
+                            else NodeState.BOOTING)
+                    node.state = back
+                    self._transition(t, key, back)
+            elif key not in self._dead:
+                self._materialize(v, t, warm=False)
+        # boot promotions (ulp tolerance: serve_at is built by a different
+        # float-add chain than the window grid, and a last-bit excess must
+        # not defer the promotion by a whole window)
+        for key, node in self._nodes.items():
+            if node.state is NodeState.BOOTING \
+                    and node.serve_at <= t + 1e-9:
+                node.state = NodeState.SERVING
+                self._transition(t, key, NodeState.SERVING)
+        # kills whose trace time arrived (cancel at the kill instant —
+        # analytic completions past it never happened)
+        orphans: list[PendingQuery] = []
+        while (self._next_kill < len(self._kills)
+               and self._kills[self._next_kill].t_s <= t):
+            kill = self._kills[self._next_kill]
+            self._next_kill += 1
+            orphans += self._kill(kill)
+        return self.serving(), orphans
+
+    def _kill(self, kill: NodeKill) -> list[PendingQuery]:
+        node = self._nodes.pop(kill.key, None)
+        restart = (None if kill.restart_after_s is None
+                   else kill.t_s + kill.restart_after_s)
+        self._dead[kill.key] = restart
+        if kill.key in self._order:
+            self._order.remove(kill.key)
+        if node is None:
+            return []                    # never materialized / already dead
+        self._transition(kill.t_s, kill.key, NodeState.DEAD)
+        orphans = node.backend.cancel_pending(kill.t_s)
+        self._graveyard.append(node.backend)
+        return orphans
+
+    def finish(self, horizon: float) -> list[PendingQuery]:
+        """Apply kills that landed after the last window boundary (their
+        orphans can only be dropped — no windows remain to re-route in)."""
+        orphans: list[PendingQuery] = []
+        while (self._next_kill < len(self._kills)
+               and self._kills[self._next_kill].t_s <= horizon):
+            kill = self._kills[self._next_kill]
+            self._next_kill += 1
+            orphans += self._kill(kill)
+        return orphans
+
+    def drain(self, key: tuple, t: float) -> None:
+        """Retire one node gracefully: it stops receiving queries but
+        finishes the work already assigned to it (live nodes keep
+        advancing until the final drain).  The graceful half of a kill —
+        nothing is orphaned."""
+        node = self._nodes.get(key)
+        if node is not None and node.state in (NodeState.BOOTING,
+                                               NodeState.SERVING):
+            node.state = NodeState.DRAINING
+            self._transition(t, key, NodeState.DRAINING)
+
+    def reconcile(self, t: float) -> None:
+        """Pick up ledger mutations (autoscaler shrink): nodes the fleet
+        no longer names stop receiving queries but finish their assigned
+        work — DRAINING, not dropped."""
+        if self.fleet is None:
+            return
+        alive = {(v.pool, v.index_in_pool) for v in self.fleet.node_views()}
+        for key in list(self._nodes):
+            if key not in alive:
+                self.drain(key, t)
+
+    # ------------------------------------------------------------- queries
+
+    def serving(self) -> list[NodeBackend]:
+        """The router-visible fleet, in ledger order (fleet mode) or
+        insertion order (explicit backends)."""
+        return [self._nodes[k].backend for k in self._view_keys()
+                if k in self._nodes
+                and self._nodes[k].state is NodeState.SERVING]
+
+    def advance_targets(self) -> list[NodeBackend]:
+        """Realtime nodes that must track the window boundary: SERVING
+        plus DRAINING (still finishing assigned work)."""
+        return [n.backend for n in self._nodes.values()
+                if n.state in (NodeState.SERVING, NodeState.DRAINING)]
+
+    def all_created(self) -> list[NodeBackend]:
+        """Every backend this run ever materialized, dead ones included —
+        the final record-collection (and close) set."""
+        return [n.backend for n in self._nodes.values()] + self._graveyard
+
+    def states(self) -> dict[tuple, NodeState]:
+        out = {k: n.state for k, n in self._nodes.items()}
+        for k in self._dead:
+            out[k] = NodeState.DEAD
+        return out
+
+    @property
+    def billable_n(self) -> int:
+        """Nodes billed for the current window: BOOTING (you pay for an
+        instance from the moment it is provisioned) + SERVING.  DRAINING
+        remainders and the dead are free, matching the pre-lifecycle
+        driver's accounting."""
+        return sum(n.state in (NodeState.BOOTING, NodeState.SERVING)
+                   for n in self._nodes.values())
+
+    @property
+    def n_nodes(self) -> int:
+        return self.billable_n
+
+    def pool_counts(self) -> dict[str, int]:
+        out: dict[str, int] = {}
+        for k, n in self._nodes.items():
+            if n.state in (NodeState.BOOTING, NodeState.SERVING):
+                out[k[0]] = out.get(k[0], 0) + 1
+        return out
+
+    def close_all(self) -> None:
+        """Release every owned backend (fleet mode: the caller never saw
+        them).  Explicit backends stay the caller's to close."""
+        if not self._owned:
+            return
+        for b in self.all_created():
+            b.close()

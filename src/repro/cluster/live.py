@@ -34,7 +34,7 @@ from typing import Callable
 
 import numpy as np
 
-from repro.cluster.backend import CompletedQuery, NodeBackend
+from repro.cluster.backend import CompletedQuery, NodeBackend, PendingQuery
 from repro.cluster.fleet import NodeSpec
 from repro.serve.runtime import OnlineController, ServingRuntime
 
@@ -176,7 +176,11 @@ class LiveNodeBackend(NodeBackend):
         self.controller = controller
         self.feed_errors: list[str] = []
         self._own_runtime = own_runtime
-        self._meta: dict[int, tuple[float, int]] = {}  # idx → (arrival, mid)
+        # idx → (arrival, size, model_id); sizes kept so a kill can hand
+        # unfinished queries back to the controller for re-routing
+        self._meta: dict[int, tuple[float, int, int]] = {}
+        self._killed = False
+        self._log_cursor = 0           # take_new_records position
         self._sched: queue.Queue = queue.Queue()
         self._closing = threading.Event()
         self._feeder = threading.Thread(target=self._feed, daemon=True)
@@ -189,12 +193,15 @@ class LiveNodeBackend(NodeBackend):
 
     def submit(self, idx: np.ndarray, times: np.ndarray, sizes: np.ndarray,
                model_ids: np.ndarray | None = None) -> None:
+        if self._killed:
+            raise RuntimeError(f"node {self.key} is dead (cancel_pending "
+                               f"was called) — it accepts no new queries")
         if self.clock.origin is None and len(times):
             self.clock.start(float(times[0]))
         for j in range(len(idx)):
             i, t = int(idx[j]), float(times[j])
             m = int(model_ids[j]) if model_ids is not None else -1
-            self._meta[i] = (t, m)
+            self._meta[i] = (t, int(sizes[j]), m)
             self._sched.put((t, i, int(sizes[j]), m))
         return None
 
@@ -213,15 +220,39 @@ class LiveNodeBackend(NodeBackend):
             time.sleep(0.005)
         self.rt.drain(max(deadline - time.monotonic(), 0.01))
 
-    def completed_records(self) -> list[CompletedQuery]:
+    def _to_trace(self, r) -> CompletedQuery:
         origin = self.clock.origin or 0.0
-        out = []
-        for r in self.rt.completed():
-            t_arr, m = self._meta.get(r.qid, (r.t_arrival - origin, -1))
-            out.append(CompletedQuery(index=r.qid, t_arrival=t_arr,
-                                      t_done=r.t_done - origin,
-                                      model_id=m, error=r.error))
-        return out
+        t_arr, _, m = self._meta.get(r.qid, (r.t_arrival - origin, 0, -1))
+        return CompletedQuery(index=r.qid, t_arrival=t_arr,
+                              t_done=r.t_done - origin,
+                              model_id=m, error=r.error)
+
+    def completed_records(self) -> list[CompletedQuery]:
+        return [self._to_trace(r) for r in self.rt.completed()]
+
+    def take_new_records(self) -> list[CompletedQuery]:
+        """O(new completions): a cursor into the runtime's append-only
+        completion log, not a seen-set rescan of every record the node
+        ever finished (which would make the driver's per-window p95 loop
+        O(total·windows) over a long run)."""
+        fresh = self.rt.completed_log(self._log_cursor)
+        self._log_cursor += len(fresh)
+        return [self._to_trace(r) for r in fresh]
+
+    def cancel_pending(self, t: float) -> list[PendingQuery]:
+        """Kill the node mid-run: stop the feeder pacing queries in, shut
+        the ``ServingRuntime`` down (workers abandon their queue), and
+        return every accepted query that had not completed — both the
+        still-scheduled ones and those lost inside the runtime."""
+        self._killed = True
+        self._closing.set()
+        self._sched.put(None)
+        self._feeder.join(timeout=5)
+        self.rt.shutdown()
+        done = {r.qid for r in self.rt.completed()}
+        return [PendingQuery(index=i, t_arrival=meta[0], size=meta[1],
+                             model_id=meta[2])
+                for i, meta in sorted(self._meta.items()) if i not in done]
 
     def close(self) -> None:
         # wake the feeder even mid-sleep: a close() during the trace (e.g.

@@ -23,7 +23,11 @@ Routers are *backend-agnostic*: they see nodes only through the
 ``NodeHandle`` surface of ``cluster.backend`` (stable identity, spec,
 capacity weight) — satisfied by simulated and live ``NodeBackend``s alike,
 so a policy makes identical decisions whether the node behind the handle
-is the numpy fast engine or a real ``ServingRuntime``.  Estimated
+is the numpy fast engine or a real ``ServingRuntime``.  They are also
+*lifecycle-blind*: the fleet driver hands ``assign`` only the nodes the
+``cluster.lifecycle.FleetController`` reports as SERVING, so booting,
+draining, and dead nodes never appear in the candidate list (and the
+per-key state stores below survive nodes entering/leaving it).  Estimated
 per-query work is computed per node *class* (pools share specs) from the
 same service-time tables the fast simulator uses, so routing cost
 estimates and simulated reality agree.

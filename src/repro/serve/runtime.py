@@ -58,6 +58,7 @@ class ServingRuntime:
         self.max_bucket = max_bucket
         self._n_done = 0
         self._fresh_done: list[QueryRecord] = []
+        self._done_log: list[QueryRecord] = []
         self._stop = threading.Event()
         self._workers = [threading.Thread(target=self._worker, daemon=True)
                          for _ in range(n_workers)]
@@ -125,6 +126,17 @@ class ServingRuntime:
             out, self._fresh_done = self._fresh_done, []
             return out
 
+    def completed_log(self, start: int) -> list[QueryRecord]:
+        """Completion-ordered records from position ``start`` of the
+        append-only completion log — an O(new) read for callers keeping
+        their own cursor (``len(previous) + start`` is the next cursor).
+        Independent of ``take_completed``'s drain buffer, so a fleet
+        driver's window monitor and a node's ``OnlineController`` can
+        both consume completions without stealing each other's records.
+        """
+        with self._lock:
+            return self._done_log[start:]
+
     def percentile_ms(self, p: float) -> float:
         lats = [r.latency_ms for r in self.completed()]
         return float(np.percentile(lats, p)) if lats else 0.0
@@ -159,6 +171,7 @@ class ServingRuntime:
                         rec.t_done = now
                         self._n_done += 1
                         self._fresh_done.append(rec)
+                        self._done_log.append(rec)
 
 
 class OnlineController:

@@ -1,0 +1,412 @@
+"""Fleet lifecycle semantics: boot delays, kill/drain/re-route, the
+predictive autoscaler, and traffic forecast calibration — small traces,
+canned device curves (tier-1 budget)."""
+import numpy as np
+import pytest
+
+from repro.cluster import (Autoscaler, DiurnalTraffic, Fleet, FleetController,
+                           FleetFaults, MultiTenantTraffic, NodeKill,
+                           NodeSpec, NodeState, Pool, PredictiveAutoscaler,
+                           SimNodeBackend, StationaryTraffic, cluster_max_qps,
+                           drive_fleet, make_router, simulate_fleet)
+from repro.cluster.fleet import NodeView
+from repro.core.latency_model import TableDeviceModel
+from repro.core.query_gen import PRODUCTION, SizeDist, sample_trace
+
+pytestmark = pytest.mark.cluster
+
+CPU = TableDeviceModel(np.array([1., 4, 16, 64, 256, 1024]),
+                       np.array([.0008, .001, .0018, .0045, .015, .058]))
+
+
+def _fleet(n=4, boot_s=0.0, max_count=None) -> Fleet:
+    return Fleet([Pool("sky", NodeSpec(cpu=CPU, batch_size=8, boot_s=boot_s),
+                       count=n, min_count=1, max_count=max_count)])
+
+
+def _views(n=3, pool="pool"):
+    spec = NodeSpec(cpu=CPU, batch_size=8, n_executors=4)
+    return [NodeView(pool, i, spec, 100.0) for i in range(n)]
+
+
+def _trace(n=400, qps=600.0, seed=3):
+    unit, sizes = sample_trace(np.random.default_rng(seed), n)
+    return unit / qps, sizes
+
+
+# ------------------------------------------------------------- booting
+
+
+def test_booting_node_receives_no_queries_until_boot_elapses():
+    """A node added to a running fleet is BOOTING — invisible to routers —
+    until its spec's boot_s has passed; the initial fleet is warm."""
+    fleet = _fleet(n=1, boot_s=1.0, max_count=4)
+    ctrl = FleetController(fleet=fleet, factory=SimNodeBackend)
+    ctrl.start(0.0)
+    serving, _ = ctrl.begin_window(0.0)
+    assert len(serving) == 1                 # initial node: warm, no boot
+    fleet.scale("sky", +1)                   # ordered at t=0.5
+    serving, _ = ctrl.begin_window(0.5)
+    assert len(serving) == 1
+    assert ctrl.states()[("sky", 1)] is NodeState.BOOTING
+    serving, _ = ctrl.begin_window(1.2)      # 0.5 + 1.0 = 1.5 not yet due
+    assert len(serving) == 1
+    serving, _ = ctrl.begin_window(1.5)
+    assert len(serving) == 2
+    assert ctrl.states()[("sky", 1)] is NodeState.SERVING
+    assert ctrl.billable_n == 2              # booting nodes were billed
+
+
+def test_boot_delay_visible_in_lifecycle_events():
+    """End-to-end: every autoscaled node's BOOTING→SERVING gap ≥ boot_s
+    (rounded up to the next window boundary)."""
+    fleet = _fleet(n=2, boot_s=0.4, max_count=8)
+    fleet.estimate_capacity(100.0, n_queries=200)
+    overload = 2.5 * fleet.total_capacity()
+    t, s = StationaryTraffic(overload).generate(np.random.default_rng(7), 3.0)
+    r = simulate_fleet(t, s, fleet, make_router("least_outstanding"),
+                       window_s=0.2,
+                       autoscaler=Autoscaler(sla_ms=100.0,
+                                             cooldown_windows=0))
+    booted = {}
+    checked = 0
+    for e in r.lifecycle:
+        if e.state is NodeState.BOOTING:
+            booted[(e.pool, e.index_in_pool)] = e.t_s
+        elif e.state is NodeState.SERVING and (e.pool, e.index_in_pool) \
+                in booted:
+            assert e.t_s - booted[(e.pool, e.index_in_pool)] >= 0.4 - 1e-9
+            checked += 1
+    assert checked > 0                       # the overload did scale up
+
+
+def test_zero_boot_keeps_legacy_instant_serving():
+    """boot_s=0 (the default) reproduces the pre-lifecycle behavior:
+    a node added at a window boundary serves from that same window."""
+    fleet = _fleet(n=1, max_count=2)
+    ctrl = FleetController(fleet=fleet, factory=SimNodeBackend)
+    ctrl.start(0.0)
+    fleet.scale("sky", +1)
+    serving, _ = ctrl.begin_window(0.5)
+    assert len(serving) == 2
+
+
+# ------------------------------------------------------------ kill/re-route
+
+
+def test_killed_sim_node_pending_queries_complete_on_survivors():
+    times, sizes = _trace(n=400, qps=2000.0)      # deep queues: many pending
+    backends = [SimNodeBackend(v) for v in _views(2)]
+    faults = FleetFaults(kills=(NodeKill(0.1, "pool", 0),))
+    r = drive_fleet(times, sizes, backends, make_router("round_robin"),
+                    window_s=0.05, fleet_faults=faults)
+    assert r.rerouted > 0
+    assert r.dropped == 0                    # every orphan recovered
+    dead, survivor = backends
+    for rec in dead.completed_records():     # the dead node's history holds
+        assert rec.t_done <= 0.1 + 1e-12     # only pre-kill completions
+    surv = {rec.index for rec in survivor.completed_records()}
+    dead_idx = {rec.index for rec in dead.completed_records()}
+    assert surv | dead_idx == set(range(400))
+    assert len(surv & dead_idx) == 0
+    with pytest.raises(RuntimeError, match="dead"):
+        dead.submit(np.array([999]), np.array([5.0]), np.array([4]))
+
+
+def test_kill_without_reroute_drops_orphans():
+    times, sizes = _trace(n=400, qps=2000.0)
+    re = drive_fleet(times, sizes,
+                     [SimNodeBackend(v) for v in _views(2)],
+                     make_router("round_robin"), window_s=0.05,
+                     fleet_faults=FleetFaults(
+                         kills=(NodeKill(0.1, "pool", 0),)))
+    no = drive_fleet(times, sizes,
+                     [SimNodeBackend(v) for v in _views(2)],
+                     make_router("round_robin"), window_s=0.05,
+                     fleet_faults=FleetFaults(
+                         kills=(NodeKill(0.1, "pool", 0),), reroute=False))
+    assert re.dropped == 0 and re.rerouted > 0
+    assert no.rerouted == 0
+    assert no.dropped == re.rerouted         # same orphans, now lost
+
+
+def test_kill_and_restart_cycles_through_boot():
+    fleet = _fleet(n=3, boot_s=0.2)
+    t, s = _trace(n=500, qps=1000.0)
+    faults = FleetFaults(kills=(NodeKill(0.15, "sky", 0,
+                                         restart_after_s=0.1),))
+    r = simulate_fleet(t, s, fleet, make_router("least_outstanding"),
+                       window_s=0.05, fleet_faults=faults)
+    seq = [e.state for e in r.lifecycle if (e.pool, e.index_in_pool)
+           == ("sky", 0)]
+    assert seq[0] is NodeState.SERVING       # warm at start
+    assert NodeState.DEAD in seq
+    i = seq.index(NodeState.DEAD)
+    assert seq[i + 1:] == [NodeState.BOOTING, NodeState.SERVING]
+    assert r.dropped == 0
+
+
+def test_kill_all_nodes_drops_tail_without_crashing():
+    times, sizes = _trace(n=200, qps=800.0)
+    faults = FleetFaults(kills=(NodeKill(0.1, "pool", 0),
+                                NodeKill(0.1, "pool", 1)))
+    r = drive_fleet(times, sizes, [SimNodeBackend(v) for v in _views(2)],
+                    make_router("round_robin"), window_s=0.05,
+                    fleet_faults=faults)
+    assert r.dropped > 0                     # no survivors to re-route to
+    assert r.n_queries + r.dropped == 200
+    assert r.n_nodes == 0
+
+
+def test_fleet_faults_argument_contract():
+    times, sizes = _trace(n=50)
+    backends = [SimNodeBackend(v) for v in _views(2)]
+    with pytest.raises(ValueError, match="window_s"):
+        drive_fleet(times, sizes, backends, make_router("round_robin"),
+                    fleet_faults=FleetFaults(
+                        kills=(NodeKill(0.1, "pool", 0),)))
+    with pytest.raises(ValueError, match="restart"):
+        drive_fleet(times, sizes, backends, make_router("round_robin"),
+                    window_s=0.1,
+                    fleet_faults=FleetFaults(kills=(
+                        NodeKill(0.1, "pool", 0, restart_after_s=0.1),)))
+    from repro.core.simulator import FaultConfig
+    with pytest.raises(ValueError, match="fleet_faults"):
+        simulate_fleet(times, sizes, _fleet(2), make_router("round_robin"),
+                       faults=FaultConfig(straggler_frac=0.1),
+                       fleet_faults=FleetFaults())
+
+
+def test_killed_live_node_pending_queries_complete_on_survivors():
+    """The live tier mirrors the sim kill: cancel_pending shuts the
+    ServingRuntime down mid-run and surrenders its queued work, which the
+    driver re-routes to the surviving node."""
+    import time
+
+    import jax.numpy as jnp
+
+    from repro.cluster import (BucketedDeviceModel, LiveNodeBackend,
+                               WallClock)
+    from repro.serve.runtime import ServingRuntime
+
+    def apply_fn(batch):
+        time.sleep(0.02)                 # 20ms service: queues build
+        return jnp.asarray(batch["x"]).sum()
+
+    dev = BucketedDeviceModel(np.array([1, 2, 4, 8, 16, 32, 64]),
+                              np.full(7, 2e-2))
+    spec = NodeSpec(cpu=dev, n_executors=1, batch_size=16,
+                    request_overhead_s=0.0)
+    clock = WallClock()
+    backends = [LiveNodeBackend(
+        ServingRuntime(apply_fn, n_workers=1, batch_size=16, max_bucket=64),
+        lambda size, mid: {"x": np.ones((size, 4), np.float32)},
+        spec=spec, pool="live", index_in_pool=i, weight=100.0, clock=clock,
+        own_runtime=True) for i in range(2)]
+    times = np.linspace(0.0, 0.2, 40)    # 5ms arrivals vs 20ms service
+    sizes = np.full(40, 8, np.int64)
+    faults = FleetFaults(kills=(NodeKill(0.1, "live", 0),))
+    try:
+        r = drive_fleet(times, sizes, backends, make_router("round_robin"),
+                        window_s=0.05, fleet_faults=faults, drain_timeout=30)
+        assert r.rerouted > 0
+        assert r.dropped == 0 and r.n_queries == 40 and r.errors == 0
+        with pytest.raises(RuntimeError, match="dead"):
+            backends[0].submit(np.array([99]), np.array([0.9]),
+                               np.array([4]))
+    finally:
+        for b in backends:
+            b.close()
+
+
+# ------------------------------------------------------------- draining
+
+
+def test_draining_node_invisible_to_routers_sim_and_live():
+    """The DRAINING router contract: sim and live controllers expose the
+    same SERVING list, so any policy makes identical decisions while a
+    node drains."""
+    times, sizes = _trace(n=120, qps=300.0)
+    spec = NodeSpec(cpu=CPU, batch_size=16, n_executors=1,
+                    request_overhead_s=0.0)
+    sim_ctrl = FleetController(
+        backends=[SimNodeBackend(NodeView("live", i, spec, 100.0))
+                  for i in range(3)])
+    sim_ctrl.start(0.0)
+
+    from repro.cluster import LiveNodeBackend, WallClock
+    from repro.serve.runtime import ServingRuntime
+    import jax.numpy as jnp
+
+    def apply_fn(batch):
+        return jnp.asarray(batch["x"]).sum()
+
+    clock = WallClock()
+    live = [LiveNodeBackend(
+        ServingRuntime(apply_fn, n_workers=1, batch_size=16, max_bucket=64),
+        lambda size, mid: {"x": np.ones((size, 4), np.float32)},
+        spec=spec, pool="live", index_in_pool=i, weight=100.0, clock=clock,
+        own_runtime=True) for i in range(3)]
+    live_ctrl = FleetController(backends=live)
+    live_ctrl.start(0.0)
+    try:
+        sim_ctrl.drain(("live", 1), 0.0)
+        live_ctrl.drain(("live", 1), 0.0)
+        s_nodes, l_nodes = sim_ctrl.serving(), live_ctrl.serving()
+        assert [b.key for b in s_nodes] == [b.key for b in l_nodes] \
+            == [("live", 0), ("live", 2)]
+        for name in ("round_robin", "least_outstanding", "size_aware",
+                     "hetero"):
+            a_sim = make_router(name).assign(times, sizes, s_nodes)
+            a_live = make_router(name).assign(times, sizes, l_nodes)
+            np.testing.assert_array_equal(a_sim, a_live)
+        # draining nodes keep advancing (realtime) but are not billed
+        assert len(live_ctrl.advance_targets()) == 3
+        assert live_ctrl.billable_n == sim_ctrl.billable_n == 2
+    finally:
+        for b in live:
+            b.close()
+
+
+def test_shrink_then_regrow_revives_draining_node():
+    """A pool that shrinks and later regrows must get its node back: the
+    ledger naming a DRAINING key again cancels the drain (the backend
+    never stopped) instead of stranding it invisible to routers."""
+    fleet = _fleet(n=2, max_count=4)
+    ctrl = FleetController(fleet=fleet, factory=SimNodeBackend)
+    ctrl.start(0.0)
+    fleet.scale("sky", -1)
+    ctrl.reconcile(1.0)
+    assert ctrl.states()[("sky", 1)] is NodeState.DRAINING
+    serving, _ = ctrl.begin_window(2.0)
+    assert len(serving) == 1
+    fleet.scale("sky", +1)                   # regrow: same positional key
+    serving, _ = ctrl.begin_window(3.0)
+    assert len(serving) == 2
+    assert ctrl.states()[("sky", 1)] is NodeState.SERVING
+    assert ctrl.billable_n == 2
+
+
+def test_single_window_violation_minutes_counted():
+    """A run whose trace fits in one window must still report violation
+    time when that window breaches (regression: the diff-of-starts width
+    estimate returned 0.0 for len(timeline) == 1)."""
+    fleet = _fleet(n=1)
+    t, s = _trace(n=600, qps=20000.0)        # far past one node's capacity
+    r = simulate_fleet(t, s, fleet, make_router("round_robin"))
+    assert len(r.timeline) == 1
+    assert r.p95_ms > 100.0
+    viol = r.sla_violation_minutes(100.0)
+    span_min = (t[-1] - t[0]) / 60.0
+    np.testing.assert_allclose(viol, span_min, rtol=1e-6)
+
+
+def test_autoscaler_shrink_marks_nodes_draining():
+    fleet = _fleet(n=6)
+    fleet.estimate_capacity(100.0, n_queries=200)
+    t, s = StationaryTraffic(10.0).generate(np.random.default_rng(2), 2.0)
+    r = simulate_fleet(t, s, fleet, make_router("round_robin"),
+                       window_s=0.25,
+                       autoscaler=Autoscaler(sla_ms=100.0,
+                                             cooldown_windows=0))
+    assert any(e.state is NodeState.DRAINING for e in r.lifecycle)
+    assert r.dropped == 0                    # drained work still completed
+
+
+# ------------------------------------------------- take_new_records cursor
+
+
+def test_take_new_records_returns_each_completion_once():
+    times, sizes = _trace(n=60)
+    b = SimNodeBackend(_views(1)[0])
+    b.submit(np.arange(30), times[:30], sizes[:30])
+    first = b.take_new_records()
+    assert sorted(r.index for r in first) == list(range(30))
+    assert b.take_new_records() == []
+    b.submit(np.arange(30, 60), times[30:], sizes[30:])
+    second = b.take_new_records()
+    assert sorted(r.index for r in second) == list(range(30, 60))
+    # full history remains available alongside the cursor
+    assert len(b.completed_records()) == 60
+
+
+# --------------------------------------------------- predictive autoscaler
+
+
+def test_scaling_events_carry_trigger_reason():
+    fleet = _fleet(n=2, max_count=10)
+    fleet.estimate_capacity(100.0, n_queries=200)
+    overload = 2.0 * fleet.total_capacity()
+    t, s = StationaryTraffic(overload).generate(np.random.default_rng(7), 2.0)
+    r = simulate_fleet(t, s, fleet, make_router("least_outstanding"),
+                       window_s=0.2,
+                       autoscaler=Autoscaler(sla_ms=100.0,
+                                             cooldown_windows=0))
+    assert len(r.events) > 0
+    assert all(e.reason in ("p95", "util") for e in r.events)
+
+
+def test_predictive_scales_ahead_of_known_ramp():
+    """With the scenario curve in hand the predictive scaler fires
+    'forecast' events while the reactive one is still comfortable."""
+    fleet = _fleet(n=2, boot_s=0.5, max_count=12)
+    fleet.estimate_capacity(100.0, n_queries=200)
+    base = 0.5 * fleet.total_capacity()
+    tr = DiurnalTraffic(base_qps=base, amplitude=0.9, period_s=8.0)
+    t, s = tr.generate(np.random.default_rng(3), 8.0)
+    scaler = PredictiveAutoscaler(sla_ms=100.0, cooldown_windows=0,
+                                  traffic=tr, lead_s=1.0)
+    r = simulate_fleet(t, s, fleet, make_router("least_outstanding"),
+                       window_s=0.5, autoscaler=scaler)
+    assert any(e.reason == "forecast" for e in r.events)
+
+
+def test_predictive_ewma_fallback_tracks_a_ramp():
+    """Without a known curve the Holt-trend forecast still extrapolates a
+    steady ramp upward (forecast > last observation)."""
+    sc = PredictiveAutoscaler(sla_ms=100.0, lead_s=2.0)
+    fc = 0.0
+    for i, t in enumerate(np.arange(0.0, 10.0, 0.5)):
+        fc = sc.forecast(t, offered_qps=100.0 + 50.0 * t)
+    assert fc > 100.0 + 50.0 * 9.5           # above the last observation
+
+
+# --------------------------------------------------- traffic calibration
+
+
+@pytest.mark.parametrize("traffic", [
+    DiurnalTraffic(base_qps=300.0, amplitude=0.7, period_s=10.0),
+    MultiTenantTraffic(tenants=(
+        ("a", DiurnalTraffic(base_qps=150.0, amplitude=0.5, period_s=10.0),
+         PRODUCTION),
+        ("b", StationaryTraffic(100.0), SizeDist("fixed", mean=4.0)),
+    )),
+], ids=["diurnal", "multi_tenant"])
+def test_expected_queries_matches_empirical_thinning(traffic):
+    """The closed-form/trapezoid ∫rate is what the predictive scaler and
+    the node-hour budgets trust — it must match the thinned-Poisson
+    generator empirically, not just analytically."""
+    horizon = 10.0
+    expect = traffic.expected_queries(horizon)
+    counts = [len(traffic.generate(np.random.default_rng(seed), horizon)[0])
+              for seed in range(30)]
+    mean = float(np.mean(counts))
+    # 30-seed mean: sigma_mean = sqrt(expect/30); allow 4 sigma
+    assert abs(mean - expect) < 4 * np.sqrt(expect / 30), (mean, expect)
+
+
+# ----------------------------------------------------------- search cap
+
+
+def test_cluster_max_qps_explicit_hi_is_bracket_not_ceiling():
+    """An explicit hi below the true capacity must not silently cap the
+    answer — the doubling bracket (bounded by the same cap= guard as the
+    hint path) climbs past it."""
+    fleet = _fleet(n=2)
+    fleet.estimate_capacity(100.0, n_queries=200)
+    cold = cluster_max_qps(fleet, make_router("round_robin"), 100.0,
+                           n_queries=300, iters=7)
+    assert cold > 0
+    low_hi = cluster_max_qps(fleet, make_router("round_robin"), 100.0,
+                             n_queries=300, iters=7, hi=cold * 0.3)
+    assert low_hi >= 0.9 * cold, (low_hi, cold)
