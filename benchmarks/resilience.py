@@ -94,10 +94,13 @@ def predictive_scenario(cpu, sla_ms: float) -> None:
     }
     res = {}
     for name, scaler in scalers.items():
-        # round_robin isolates the capacity-timing question — backlog-
-        # estimating routers briefly flood a freshly joined node, which
-        # charges both policies a join transient unrelated to scaling
-        r = simulate_fleet(times, sizes, fleet, make_router("round_robin"),
+        # the backlog-estimating router now runs the scaling scenario
+        # directly: join-warmup seeds a freshly promoted node at the
+        # fleet-median backlog, so joining no longer floods it with a
+        # transient unrelated to scaling (which this benchmark used to
+        # route around with round_robin)
+        r = simulate_fleet(times, sizes, fleet,
+                           make_router("least_outstanding"),
                            window_s=window_s, autoscaler=scaler)
         res[name] = r
         reasons = {}

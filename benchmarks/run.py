@@ -31,6 +31,7 @@ SUITES = [
     ("resilience", "benchmarks.resilience"),
     ("sched_speed", "benchmarks.sched_speed"),
     ("live_parity", "benchmarks.live_parity"),
+    ("remote_scaling", "benchmarks.remote_scaling"),
     ("roofline_report", "benchmarks.roofline_report"),
 ]
 

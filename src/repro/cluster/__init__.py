@@ -9,6 +9,10 @@ hundreds of machines", validated against real execution).
   JAX models, wall-clock pacing, per-node online controllers) behind the
   same contract, with device-curve calibration to close the sim-vs-real
   loop.
+* ``remote`` — ``RemoteNodeBackend``: worker *processes* over localhost
+  sockets (``serve.remote`` wire protocol) behind the same contract, plus
+  the ``WorkerSupervisor`` that spawns, health-checks, and reaps them —
+  real multi-core serving, real ``SIGKILL`` faults, measured boot times.
 * ``fleet`` — ``NodeSpec``/``Pool``/``Fleet``: mixed CPU generations and
   accelerator nodes, each pool with its own DeepRecSched knobs.
 * ``router`` — pluggable, backend-agnostic query-routing policies
@@ -43,6 +47,10 @@ from repro.cluster.fleet import (Fleet, NodeSpec, Pool,  # noqa: F401
 from repro.cluster.live import (BucketedDeviceModel,  # noqa: F401
                                 LiveNodeBackend, WallClock, calibrate_device,
                                 live_node)
+from repro.cluster.remote import (RemoteBackendFactory,  # noqa: F401
+                                  RemoteNodeBackend, WorkerCrashed,
+                                  WorkerSupervisor, boot_remote_fleet,
+                                  remote_node)
 from repro.cluster.router import (HeterogeneityAwareRouter,  # noqa: F401
                                   LeastOutstandingRouter, RoundRobinRouter,
                                   Router, SizeAwareRouter, make_router)

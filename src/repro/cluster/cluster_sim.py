@@ -237,6 +237,12 @@ def drive_fleet(times: np.ndarray, sizes: np.ndarray,
                          "detected at window boundaries, and a single-"
                          "window run would only notice after the trace "
                          "ended (every orphan dropped, nothing re-routed)")
+    if fleet is not None and fleet_faults is not None and fleet_faults.kills:
+        # kills are written back to pool membership (ledger-owned node
+        # identity): run them against a copy so back-to-back runs on the
+        # caller's fleet stay fair.  Autoscaler-only mutations keep the
+        # long-standing contract — the caller sees the final ledger.
+        fleet = fleet.copy()
     controller = FleetController(fleet=fleet, factory=factory,
                                  backends=backends, faults=fleet_faults)
     router.reset()
@@ -413,6 +419,8 @@ def simulate_fleet(times: np.ndarray, sizes: np.ndarray, fleet: Fleet,
                        fleet.n_nodes * horizon / 3600.0, [], [],
                        model_ids=model_ids)
 
+    # autoscaler resizes mutate the ledger — never the caller's fleet
+    # (kill write-back is already copy-guarded inside drive_fleet)
     work_fleet = fleet.copy() if autoscaler is not None else fleet
     return drive_fleet(times, sizes, None, router, window_s=window_s,
                        autoscaler=autoscaler, fleet=work_fleet,

@@ -78,6 +78,14 @@ class Pool:
     ``qps_capacity`` is the per-node achievable QPS under the fleet's SLA
     (filled by ``Fleet.tune`` or ``Fleet.estimate_capacity``); routers use
     it as the node weight.  ``min_count``/``max_count`` bound autoscaling.
+
+    Node identity is *ledger-owned*: ``members`` holds the explicit node
+    indices this pool currently names (``None`` is the common compact
+    case, meaning ``range(count)``).  A fault kill removes its exact
+    index (``Fleet.kill``) instead of renaming the survivors by
+    decrementing ``count``, so capacity accounting tracks the true pool
+    and regrowth can reuse the dead slot.  ``count == len(members)``
+    always.
     """
     name: str
     spec: NodeSpec
@@ -85,6 +93,13 @@ class Pool:
     qps_capacity: float = 0.0
     min_count: int = 1
     max_count: int | None = None
+    members: list[int] | None = None
+
+    def member_ids(self) -> list[int]:
+        """The node indices this pool names, ascending."""
+        if self.members is None:
+            return list(range(self.count))
+        return list(self.members)
 
 
 class Fleet:
@@ -114,19 +129,64 @@ class Fleet:
 
     def scale(self, name: str, delta: int) -> int:
         """Grow (+) or shrink (−) a pool, clamped to its bounds; returns
-        the delta actually applied."""
+        the delta actually applied.  Growth fills the lowest free indices
+        first — reusing slots earlier kills vacated — and shrink retires
+        the highest-numbered members."""
         p = self.pool(name)
         target = p.count + delta
         lo = p.min_count
         hi = p.max_count if p.max_count is not None else target
         applied = max(lo, min(target, hi)) - p.count
+        if applied > 0:
+            members = p.member_ids()
+            used = set(members)
+            nxt = 0
+            for _ in range(applied):
+                while nxt in used:
+                    nxt += 1
+                members.append(nxt)
+                used.add(nxt)
+            p.members = sorted(members)
+        elif applied < 0:
+            p.members = sorted(p.member_ids())[:applied]
         p.count += applied
         return applied
 
+    def kill(self, name: str, index: int) -> bool:
+        """Write a node death back to the ledger: the exact index leaves
+        the pool's membership (survivors keep their identities), capacity
+        accounting drops with it, and a later ``scale(+)`` may refill the
+        slot.  A fault is a fact, not a scaling decision — ``min_count``
+        does not apply.  Returns whether the index was a member."""
+        p = self.pool(name)
+        members = p.member_ids()
+        if index not in members:
+            return False
+        members.remove(index)
+        p.members = members
+        p.count -= 1
+        return True
+
+    def restore(self, name: str, index: int) -> bool:
+        """Re-add a previously killed index (fault restart); no-op when
+        the ledger already names it.  Bypasses ``max_count`` like
+        ``kill`` bypasses ``min_count`` — re-provisioning a dead machine
+        is not a scaling decision."""
+        p = self.pool(name)
+        members = p.member_ids()
+        if index in members:
+            return False
+        p.members = sorted(members + [index])
+        p.count += 1
+        return True
+
     def copy(self) -> "Fleet":
         """Deep-enough copy: pools are fresh objects, specs/devices shared
-        (device models are immutable apart from their service-time cache)."""
-        return Fleet([dataclasses.replace(p) for p in self.pools])
+        (device models are immutable apart from their service-time cache);
+        membership lists are copied, not aliased."""
+        return Fleet([dataclasses.replace(
+            p, members=None if p.members is None else list(p.members))
+            for p in self.pools])
 
     def total_capacity(self) -> float:
         return sum(p.count * p.qps_capacity for p in self.pools)
@@ -169,11 +229,11 @@ class Fleet:
     # ------------------------------------------------------------- nodes
 
     def node_views(self) -> list["NodeView"]:
-        """Flattened per-node view (pool order, then index within pool) —
-        what routers and the cluster driver iterate over."""
+        """Flattened per-node view (pool order, then member index within
+        pool) — what routers and the cluster driver iterate over."""
         out = []
         for p in self.pools:
-            for i in range(p.count):
+            for i in p.member_ids():
                 out.append(NodeView(pool=p.name, index_in_pool=i, spec=p.spec,
                                     weight=max(p.qps_capacity, 1e-9)))
         return out

@@ -76,13 +76,12 @@ class FleetFaults:
     *intra-node* faults (stragglers, request failures) in the event
     engine.
 
-    Known approximation when combined with an autoscaler on the *same*
-    pool: kills are not written back to the ``Fleet`` ledger (node
-    identity is positional — shrinking the count would rename surviving
-    nodes), so a dead node's slot keeps its ledger capacity.  The
-    utilization trigger therefore under-reacts to a kill (the p95
-    backstop still fires), and regrowing the pool cannot reuse a dead
-    index.  Kill-only and autoscale-only runs are exact."""
+    In fleet mode kills are written back to the ``Fleet`` ledger
+    (``Fleet.kill`` — node identity is ledger-owned via ``Pool.members``,
+    so removing an exact index never renames survivors): an autoscaler
+    sharing the pool sees the true post-kill capacity on its utilization
+    trigger, and regrowth reuses the dead index for its replacement
+    node."""
     kills: tuple[NodeKill, ...] = ()
     reroute: bool = True
 
@@ -207,15 +206,22 @@ class FleetController:
         trace time has arrived.  Returns the SERVING node list routers
         may see plus the killed nodes' unfinished queries (empty unless a
         kill landed this window)."""
-        views = {(v.pool, v.index_in_pool): v
-                 for v in self.fleet.node_views()} if self.fleet else {}
-        # fault restarts that came due (fleet mode only; a key the ledger
-        # no longer names — shrunk away meanwhile — stays dead)
+        # fault restarts that came due (fleet mode only): re-provisioning
+        # a dead machine puts its index back in the ledger first — kills
+        # were written out of it — then boots a fresh backend cold
         for key, due in list(self._dead.items()):
             if due is not None and due <= t:
                 del self._dead[key]
-                if key in views:
-                    self._materialize(views[key], t, warm=False)
+                if key in self._nodes:
+                    continue      # the pool regrew into this slot meanwhile
+                self.fleet.restore(key[0], key[1])
+                p = self.fleet.pool(key[0])
+                view = NodeView(pool=key[0], index_in_pool=key[1],
+                                spec=p.spec,
+                                weight=max(p.qps_capacity, 1e-9))
+                self._materialize(view, t, warm=False)
+        views = {(v.pool, v.index_in_pool): v
+                 for v in self.fleet.node_views()} if self.fleet else {}
         # ledger additions (autoscaler growth), cold — except a key whose
         # node is still DRAINING from an earlier shrink: the ledger naming
         # it again cancels the drain (the backend never stopped, so it
@@ -230,7 +236,12 @@ class FleetController:
                             else NodeState.BOOTING)
                     node.state = back
                     self._transition(t, key, back)
-            elif key not in self._dead:
+            else:
+                # growth may refill a killed slot (Fleet.scale hands out
+                # the lowest free index): the ledger naming a dead key
+                # again means a fresh replacement node — cancel any
+                # scheduled restart, it would now be a duplicate
+                self._dead.pop(key, None)
                 self._materialize(v, t, warm=False)
         # boot promotions (ulp tolerance: serve_at is built by a different
         # float-add chain than the window grid, and a last-bit excess must
@@ -252,6 +263,19 @@ class FleetController:
 
     def _kill(self, kill: NodeKill) -> list[PendingQuery]:
         node = self._nodes.pop(kill.key, None)
+        matched = node is not None
+        if self.fleet is not None:
+            try:
+                # ledger-owned identity: the death is a ledger fact — the
+                # autoscaler's utilization trigger must see the true pool
+                matched |= self.fleet.kill(kill.pool, kill.index_in_pool)
+            except KeyError:
+                pass                     # kill plan names an unknown pool
+        if not matched:
+            # the plan names a node that never existed (typo'd index or
+            # pool): nothing died, and scheduling a restart would later
+            # materialize a phantom node the fleet never had
+            return []
         restart = (None if kill.restart_after_s is None
                    else kill.t_s + kill.restart_after_s)
         self._dead[kill.key] = restart

@@ -27,8 +27,6 @@ reports simulated-vs-measured agreement.
 from __future__ import annotations
 
 import dataclasses
-import queue
-import threading
 import time
 from typing import Callable
 
@@ -36,7 +34,9 @@ import numpy as np
 
 from repro.cluster.backend import CompletedQuery, NodeBackend, PendingQuery
 from repro.cluster.fleet import NodeSpec
-from repro.serve.runtime import OnlineController, ServingRuntime
+from repro.serve.batching import bucket_ladder
+from repro.serve.runtime import (OnlineController, PacedFeeder,
+                                 ServingRuntime)
 
 
 class WallClock:
@@ -92,7 +92,8 @@ class BucketedDeviceModel:
 def calibrate_device(apply_fn: Callable[[dict], object],
                      make_batch: Callable[[int, int], dict], *,
                      max_bucket: int = 256, burst: int = 32, reps: int = 5,
-                     warmup_bursts: int = 1) -> BucketedDeviceModel:
+                     warmup_bursts: int = 1,
+                     buckets: list[int] | None = None) -> BucketedDeviceModel:
     """Measure the *steady-state runtime-path* request cost at every
     bucket ≤ ``max_bucket``.
 
@@ -113,10 +114,14 @@ def calibrate_device(apply_fn: Callable[[dict], object],
     scheduler noise in both directions (a minimum would latch onto
     frequency-boosted bursts and overstate sustained speed).
     """
-    buckets, b = [], 1
-    while b <= max_bucket:
-        buckets.append(b)
-        b *= 2
+    if buckets is None:
+        buckets = bucket_ladder(max_bucket)
+    else:
+        # an explicit subset — callers stepping the ladder externally
+        # (e.g. the remote tier's lockstep fleet calibration measures one
+        # bucket across every worker at once)
+        buckets = sorted(int(b) for b in buckets)
+        max_bucket = max(max_bucket, buckets[-1])
     # batch_size = max_bucket → any query of size ≤ max_bucket is exactly
     # one request, padded to bucket_for(size) = size for power-of-two sizes
     rt = ServingRuntime(apply_fn, n_workers=1, batch_size=max_bucket,
@@ -181,10 +186,8 @@ class LiveNodeBackend(NodeBackend):
         self._meta: dict[int, tuple[float, int, int]] = {}
         self._killed = False
         self._log_cursor = 0           # take_new_records position
-        self._sched: queue.Queue = queue.Queue()
-        self._closing = threading.Event()
-        self._feeder = threading.Thread(target=self._feed, daemon=True)
-        self._feeder.start()
+        self._feeder = PacedFeeder(self.clock.wall, self._release,
+                                   self._feed_error)
 
     # ------------------------------------------------------------ backend
 
@@ -202,7 +205,7 @@ class LiveNodeBackend(NodeBackend):
             i, t = int(idx[j]), float(times[j])
             m = int(model_ids[j]) if model_ids is not None else -1
             self._meta[i] = (t, int(sizes[j]), m)
-            self._sched.put((t, i, int(sizes[j]), m))
+            self._feeder.put(t, i, int(sizes[j]), m)
         return None
 
     def advance_to(self, t: float) -> None:
@@ -213,7 +216,7 @@ class LiveNodeBackend(NodeBackend):
         # bounded feeder wait (queue.join() has no timeout): a feeder
         # still sleeping toward far-future arrivals must trip the caller's
         # timeout, not block for the rest of the trace
-        while self._sched.unfinished_tasks:
+        while self._feeder.unfinished:
             if time.monotonic() >= deadline:
                 raise TimeoutError("feeder did not drain (queries still "
                                    "scheduled past the timeout)")
@@ -245,9 +248,7 @@ class LiveNodeBackend(NodeBackend):
         return every accepted query that had not completed — both the
         still-scheduled ones and those lost inside the runtime."""
         self._killed = True
-        self._closing.set()
-        self._sched.put(None)
-        self._feeder.join(timeout=5)
+        self._feeder.stop()
         self.rt.shutdown()
         done = {r.qid for r in self.rt.completed()}
         return [PendingQuery(index=i, t_arrival=meta[0], size=meta[1],
@@ -255,37 +256,22 @@ class LiveNodeBackend(NodeBackend):
                 for i, meta in sorted(self._meta.items()) if i not in done]
 
     def close(self) -> None:
-        # wake the feeder even mid-sleep: a close() during the trace (e.g.
-        # a drain timeout) must not leave a thread pacing queries into a
-        # shut-down runtime for the rest of the trace's wall time
-        self._closing.set()
-        self._sched.put(None)
-        self._feeder.join(timeout=5)
+        # stop() wakes the feeder even mid-sleep: a close() during the
+        # trace (e.g. a drain timeout) must not leave a thread pacing
+        # queries into a shut-down runtime for the rest of its wall time
+        self._feeder.stop()
         if self._own_runtime:
             self.rt.shutdown()
 
     # ------------------------------------------------------------- feeder
 
-    def _feed(self) -> None:
-        while True:
-            item = self._sched.get()
-            if item is None:
-                self._sched.task_done()
-                return
-            t, i, size, mid = item
-            try:
-                if self._closing.is_set():
-                    continue               # discard still-scheduled work
-                delay = self.clock.wall(t) - time.monotonic()
-                if delay > 0 and self._closing.wait(delay):
-                    continue               # woken by close(), not arrival
-                self.rt.submit(i, self.make_batch(size, mid), size)
-                if self.controller is not None:
-                    self.controller.step()
-            except Exception as e:         # keep feeding; query → dropped
-                self.feed_errors.append(f"qid {i}: {type(e).__name__}: {e}")
-            finally:
-                self._sched.task_done()
+    def _release(self, qid: int, size: int, mid: int) -> None:
+        self.rt.submit(qid, self.make_batch(size, mid), size)
+        if self.controller is not None:
+            self.controller.step()
+
+    def _feed_error(self, qid: int, e: Exception) -> None:
+        self.feed_errors.append(f"qid {qid}: {type(e).__name__}: {e}")
 
 
 def live_node(apply_fn: Callable[[dict], object],

@@ -1,0 +1,597 @@
+"""Remote node backends: worker *processes* behind the ``NodeBackend``
+contract — the third engine next to ``SimNodeBackend`` and
+``LiveNodeBackend``.
+
+A ``RemoteNodeBackend`` adapts one spawned worker process
+(``serve.remote.serve_worker`` hosting a ``ServingRuntime``) to the exact
+interface the fleet driver, routers, lifecycle controller, and autoscaler
+already consume, so ``drive_fleet`` runs unchanged over real processes:
+
+  * ``submit`` ships a traffic window over the socket in one frame; the
+    *worker's own* feeder thread paces each query into its runtime at the
+    query's trace arrival instant (trace time is anchored by sharing one
+    ``CLOCK_MONOTONIC`` origin across all workers of a host — the
+    supervisor sends the origin value, it does not re-derive it, so every
+    node paces against the same instant);
+  * ``take_new_records``/``completed_records`` poll the worker's
+    append-only completion log through a cursor (O(new) per window) and
+    cache rows locally, so a node's history survives its process;
+  * ``cancel_pending`` is a real ``SIGKILL``: the process dies, and every
+    accepted query not in the local completion cache is surrendered as an
+    orphan for the driver's existing re-route path — including work the
+    worker had finished but not yet reported, which is exactly the
+    at-least-once re-execution a real fleet performs after losing a node;
+  * ``close`` is an idempotent graceful shutdown (verb, then reap).
+
+The ``WorkerSupervisor`` owns process lifecycle: it spawns workers
+(``python -m repro.serve.remote``), reads the port rendezvous off stdout,
+connects, health-checks (``ping``), and reaps zombies (``reap`` —
+``Popen.poll`` collects the exit status of anything that died, planned or
+not).  ``remote_node``/``boot_remote_fleet`` measure real boot latency:
+``NodeSpec.boot_s`` on a remote node is the *measured* spawn+calibrate
+wall time of that process, not a modeling constant.  ``boot_remote_fleet``
+calibrates all workers concurrently, so each node's device curve carries
+the core contention of the full fleet actually running — what a
+``SimNodeBackend`` twin needs for sim-vs-remote parity on an
+oversubscribed host.
+
+``RemoteBackendFactory`` plugs the same spawn path into ``drive_fleet``'s
+``fleet=``+``factory=`` mode: an autoscaler ordering a node mid-run now
+boots a genuine OS process (the driver blocks for the real spawn — keep
+the ledger spec's ``boot_s`` at 0 for remote fleets, the wall clock has
+already paid the true delay, which the factory records per node in
+``boot_history``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import socket
+import subprocess
+import sys
+import threading
+import time
+
+import numpy as np
+
+import repro
+from repro.cluster.backend import CompletedQuery, NodeBackend, PendingQuery
+from repro.cluster.fleet import NodeSpec
+from repro.cluster.live import BucketedDeviceModel, WallClock
+from repro.serve.batching import bucket_ladder
+from repro.serve.remote import (MAX_FRAME, PORT_ANNOUNCE, ProtocolError,
+                                recv_frame, send_frame)
+
+
+class WorkerCrashed(RuntimeError):
+    """The worker process behind a remote node is gone (killed, crashed,
+    or unreachable) — the caller should treat the node as dead."""
+
+
+def _rpc(sock: socket.socket, msg: dict, *, timeout: float | None = 60.0,
+         max_frame: int = MAX_FRAME) -> dict:
+    """One request/reply exchange; raises ``WorkerCrashed`` when the
+    transport fails and ``RuntimeError`` when the worker reports an
+    application error.  An *outgoing* frame over the cap raises
+    ``ProtocolError`` before any bytes move — that is the caller's
+    payload, not a dead worker, and the stream is still clean."""
+    old = sock.gettimeout()
+    try:
+        sock.settimeout(timeout)
+        try:
+            send_frame(sock, msg, max_frame)
+        except ProtocolError:
+            raise                          # local oversize: caller error
+        try:
+            reply = recv_frame(sock, max_frame)
+        except ProtocolError as e:         # peer poisoned the stream
+            raise WorkerCrashed(f"worker unreachable on "
+                                f"{msg.get('op')!r}: "
+                                f"{type(e).__name__}: {e}") from e
+    except OSError as e:
+        raise WorkerCrashed(f"worker unreachable on {msg.get('op')!r}: "
+                            f"{type(e).__name__}: {e}") from e
+    finally:
+        try:
+            sock.settimeout(old)
+        except OSError:
+            pass
+    if reply is None:
+        raise WorkerCrashed(f"worker closed the connection on "
+                            f"{msg.get('op')!r}")
+    return reply
+
+
+def _check(reply: dict) -> dict:
+    if not reply.get("ok", False):
+        raise RuntimeError(f"worker error: {reply.get('error')}")
+    return reply
+
+
+@dataclasses.dataclass
+class WorkerHandle:
+    """One spawned worker: the OS process, its connected socket, and the
+    spec string it serves."""
+    proc: subprocess.Popen
+    sock: socket.socket
+    port: int
+    model_spec: str
+
+    @property
+    def pid(self) -> int:
+        return self.proc.pid
+
+    def alive(self) -> bool:
+        return self.proc.poll() is None
+
+
+class WorkerSupervisor:
+    """Spawns, health-checks, and reaps remote worker processes.
+
+    Workers run ``python -m repro.serve.remote`` with ``src`` on
+    ``PYTHONPATH`` (derived from the installed ``repro`` package, so the
+    child resolves the same code the parent runs).  The supervisor is the
+    single owner of process handles: ``reap()`` collects exit statuses of
+    anything that died — a graceful shutdown and a ``SIGKILL`` both leave
+    a zombie until someone ``wait``s on it — and ``close()`` shuts every
+    survivor down.  Usable as a context manager."""
+
+    def __init__(self, *, python: str = sys.executable,
+                 spawn_timeout: float = 120.0):
+        self.python = python
+        self.spawn_timeout = spawn_timeout
+        self.handles: list[WorkerHandle] = []
+
+    # ------------------------------------------------------------ spawning
+
+    def _env(self) -> dict:
+        env = os.environ.copy()
+        # repro is a namespace package (__file__ is None) — locate the
+        # source root from its __path__ so the child resolves the same code
+        src = os.path.dirname(os.path.abspath(list(repro.__path__)[0]))
+        env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+        return env
+
+    def _await_port(self, proc: subprocess.Popen) -> int:
+        """Read the ``REMOTE_WORKER_PORT=`` rendezvous off the worker's
+        stdout.  A dedicated reader thread scans lines (tolerating any
+        noise a model builder prints first — select() on the raw fd would
+        starve if the announce arrived in the same pipe chunk as an
+        earlier line and got swallowed into the reader's buffer) and then
+        keeps *draining* the pipe for the process's lifetime: an
+        unconsumed ~64KB pipe would otherwise block a chatty worker
+        mid-verb the day a model builder prints progress."""
+        found: dict = {}
+
+        def _scan() -> None:
+            for raw in proc.stdout:       # runs until EOF: drains stdout
+                line = raw.decode(errors="replace")
+                if "port" not in found and line.startswith(PORT_ANNOUNCE):
+                    found["port"] = int(line[len(PORT_ANNOUNCE):])
+
+        th = threading.Thread(target=_scan, daemon=True)
+        th.start()
+        deadline = time.monotonic() + self.spawn_timeout
+        while time.monotonic() < deadline:
+            th.join(timeout=0.2)
+            if "port" in found:
+                return found["port"]
+            # scanner at EOF + process gone: either it died before
+            # announcing, or it announced and exited inside this poll
+            # window — join the finished scanner and check once more
+            # before declaring a crash.  poll() (non-blocking) has
+            # already reaped the child either way.
+            if not th.is_alive() and proc.poll() is not None:
+                th.join()
+                if "port" in found:
+                    return found["port"]
+                raise WorkerCrashed(
+                    f"worker exited (rc={proc.returncode}) before "
+                    f"announcing its port")
+        proc.kill()
+        raise TimeoutError(f"worker pid {proc.pid} did not announce a port "
+                           f"within {self.spawn_timeout}s")
+
+    def _launch(self, model_spec: str, *, n_workers: int,
+                batch_size: int, max_bucket: int) -> subprocess.Popen:
+        cmd = [self.python, "-m", "repro.serve.remote",
+               "--model", model_spec, "--port", "0",
+               "--workers", str(n_workers),
+               "--batch-size", str(batch_size),
+               "--max-bucket", str(max_bucket)]
+        return subprocess.Popen(cmd, stdout=subprocess.PIPE,
+                                env=self._env())
+
+    def _rendezvous(self, proc: subprocess.Popen,
+                    model_spec: str) -> WorkerHandle:
+        port = self._await_port(proc)
+        sock = socket.create_connection(("127.0.0.1", port),
+                                        timeout=self.spawn_timeout)
+        sock.settimeout(None)
+        handle = WorkerHandle(proc, sock, port, model_spec)
+        self.handles.append(handle)
+        return handle
+
+    def spawn(self, model_spec: str, *, n_workers: int = 1,
+              batch_size: int = 32, max_bucket: int = 256) -> WorkerHandle:
+        proc = self._launch(model_spec, n_workers=n_workers,
+                            batch_size=batch_size, max_bucket=max_bucket)
+        return self._rendezvous(proc, model_spec)
+
+    def spawn_many(self, model_spec: str, n: int, *, n_workers: int = 1,
+                   batch_size: int = 32, max_bucket: int = 256
+                   ) -> list[WorkerHandle]:
+        """Spawn ``n`` workers with overlapping boots: every process is
+        launched before any rendezvous blocks, so the fleet pays roughly
+        one interpreter startup of wall time instead of ``n``."""
+        procs = [self._launch(model_spec, n_workers=n_workers,
+                              batch_size=batch_size, max_bucket=max_bucket)
+                 for _ in range(n)]
+        handles = []
+        try:
+            for proc in procs:
+                handles.append(self._rendezvous(proc, model_spec))
+        except Exception:
+            for proc in procs:
+                if proc.poll() is None:
+                    proc.kill()
+            raise
+        return handles
+
+    # ------------------------------------------------------------- health
+
+    def ping(self, handle: WorkerHandle, timeout: float = 5.0) -> dict:
+        return _check(_rpc(handle.sock, {"op": "ping"}, timeout=timeout))
+
+    def healthy(self, handle: WorkerHandle, timeout: float = 5.0) -> bool:
+        if not handle.alive():
+            return False
+        try:
+            return bool(self.ping(handle, timeout).get("ok"))
+        except (WorkerCrashed, RuntimeError):
+            return False
+
+    def reap(self) -> list[WorkerHandle]:
+        """Collect every worker whose process has exited — planned
+        shutdowns and kills alike.  ``Popen.poll`` waits on the child, so
+        after this call none of the dead are zombies; their handles leave
+        the supervisor's list and are returned for inspection."""
+        dead = [h for h in self.handles if not h.alive()]
+        for h in dead:
+            self.handles.remove(h)
+            try:
+                h.sock.close()
+            except OSError:
+                pass
+        return dead
+
+    # ------------------------------------------------------------ shutdown
+
+    def close(self) -> None:
+        """Gracefully shut every live worker down; kill the stubborn."""
+        for h in list(self.handles):
+            if h.alive():
+                try:
+                    _rpc(h.sock, {"op": "shutdown"}, timeout=5.0)
+                except (WorkerCrashed, RuntimeError):
+                    pass
+                try:
+                    h.proc.wait(timeout=5)
+                except subprocess.TimeoutExpired:
+                    h.proc.kill()
+                    h.proc.wait(timeout=5)
+            try:
+                h.sock.close()
+            except OSError:
+                pass
+        self.reap()
+
+    def __enter__(self) -> "WorkerSupervisor":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+# ------------------------------------------------------------------ backend
+
+
+class RemoteNodeBackend(NodeBackend):
+    """One worker process behind the ``NodeBackend`` contract (see module
+    docstring).  ``spec`` is the routing/estimation view of the node; the
+    execution is the remote process's."""
+
+    realtime = True
+
+    def __init__(self, handle: WorkerHandle, *, spec: NodeSpec,
+                 pool: str = "remote", index_in_pool: int = 0,
+                 weight: float = 1.0, clock: WallClock | None = None,
+                 rpc_timeout: float = 60.0):
+        self.handle = handle
+        self.spec = spec
+        self.pool = pool
+        self.index_in_pool = index_in_pool
+        self.weight = weight
+        self.clock = clock or WallClock()
+        self.rpc_timeout = rpc_timeout
+        # idx → (arrival, size, model_id): the orphan set of a kill is
+        # everything here minus the polled completion cache
+        self._meta: dict[int, tuple[float, int, int]] = {}
+        self._cache: list[CompletedQuery] = []
+        self._done_idx: set[int] = set()
+        self._cursor = 0
+        self._killed = False
+        self._closed = False
+        self._lock = threading.Lock()
+
+    def _rpc(self, msg: dict, *, timeout: float | None = None,
+             check: bool = True) -> dict:
+        if self._killed:
+            raise WorkerCrashed(f"node {self.key}: worker pid "
+                                f"{self.handle.pid} was killed")
+        with self._lock:
+            reply = _rpc(self.handle.sock, msg,
+                         timeout=self.rpc_timeout if timeout is None
+                         else timeout)
+        return _check(reply) if check else reply
+
+    # ------------------------------------------------------------ backend
+
+    def start(self, t0: float) -> None:
+        self.clock.start(t0)
+        self._rpc({"op": "start", "origin": self.clock.origin})
+
+    def submit(self, idx: np.ndarray, times: np.ndarray, sizes: np.ndarray,
+               model_ids: np.ndarray | None = None) -> None:
+        if self._killed:
+            raise RuntimeError(f"node {self.key} is dead (cancel_pending "
+                               f"was called) — it accepts no new queries")
+        if self.clock.origin is None and len(times):
+            self.start(float(times[0]))
+        rows = []
+        for j in range(len(idx)):
+            i, t = int(idx[j]), float(times[j])
+            m = int(model_ids[j]) if model_ids is not None else -1
+            self._meta[i] = (t, int(sizes[j]), m)
+            rows.append([i, t, int(sizes[j]), m])
+        self._rpc({"op": "submit", "q": rows})
+        return None
+
+    def advance_to(self, t: float) -> None:
+        self.clock.sleep_until(t)
+
+    def drain(self, timeout: float = 120.0) -> None:
+        reply = self._rpc({"op": "drain", "timeout": timeout},
+                          timeout=timeout + 30.0, check=False)
+        if not reply.get("ok", False):
+            raise TimeoutError(f"node {self.key}: {reply.get('error')}")
+
+    def _pull_new(self) -> list[CompletedQuery]:
+        reply = self._rpc({"op": "poll", "cursor": self._cursor})
+        fresh = []
+        for qid, t_arr, t_done, mid, err in reply["records"]:
+            fresh.append(CompletedQuery(index=int(qid),
+                                        t_arrival=float(t_arr),
+                                        t_done=float(t_done),
+                                        model_id=int(mid), error=err))
+        self._cursor += len(fresh)
+        self._cache += fresh
+        self._done_idx.update(r.index for r in fresh)
+        return fresh
+
+    def take_new_records(self) -> list[CompletedQuery]:
+        if self._killed:
+            return []
+        return self._pull_new()
+
+    def completed_records(self) -> list[CompletedQuery]:
+        # a killed/closed node serves its history from the local cache —
+        # the process (and its socket) no longer exists
+        if not self._killed and not self._closed:
+            self._pull_new()
+        return list(self._cache)
+
+    def cancel_pending(self, t: float) -> list[PendingQuery]:
+        """Kill the node for real: ``SIGKILL`` the worker process and
+        surrender every accepted query not in the polled completion
+        cache.  Completions the worker reached after the last poll die
+        with it — those queries re-execute on the survivors, the
+        at-least-once semantics of an actual node loss."""
+        self._killed = True
+        try:
+            self.handle.proc.kill()
+        except ProcessLookupError:
+            pass
+        try:
+            self.handle.proc.wait(timeout=10)
+        except subprocess.TimeoutExpired:
+            pass
+        try:
+            self.handle.sock.close()
+        except OSError:
+            pass
+        return [PendingQuery(index=i, t_arrival=meta[0], size=meta[1],
+                             model_id=meta[2])
+                for i, meta in sorted(self._meta.items())
+                if i not in self._done_idx]
+
+    def reset_run(self) -> None:
+        """Fresh worker-side runtime and local bookkeeping so the same
+        process can serve another trace (benchmark probe ladders reuse
+        workers across rungs; global trace indices restart per run)."""
+        self._rpc({"op": "reset"})
+        self._meta, self._cache = {}, []
+        self._done_idx, self._cursor = set(), 0
+
+    def close(self) -> None:
+        if self._closed:
+            return
+        self._closed = True
+        if not self._killed and self.handle.alive():
+            try:
+                self._rpc({"op": "shutdown"}, timeout=5.0, check=False)
+            except WorkerCrashed:
+                pass
+            try:
+                self.handle.proc.wait(timeout=5)
+            except subprocess.TimeoutExpired:
+                self.handle.proc.kill()
+        try:
+            self.handle.sock.close()
+        except OSError:
+            pass
+
+
+# ------------------------------------------------------------ construction
+
+
+def _calibrate_handle(handle: WorkerHandle, *, max_bucket: int,
+                      burst: int = 32, reps: int = 5,
+                      buckets: list[int] | None = None,
+                      timeout: float = 600.0) -> BucketedDeviceModel:
+    msg = {"op": "calibrate", "max_bucket": max_bucket,
+           "burst": burst, "reps": reps}
+    if buckets is not None:
+        msg["buckets"] = list(buckets)
+    reply = _check(_rpc(handle.sock, msg, timeout=timeout))
+    return BucketedDeviceModel(np.asarray(reply["buckets"], np.int64),
+                               np.asarray(reply["seconds"], float))
+
+
+def calibrate_lockstep(handles: list[WorkerHandle], *, max_bucket: int,
+                       burst: int = 32, reps: int = 5
+                       ) -> list[BucketedDeviceModel]:
+    """Per-worker device curves measured with the whole fleet busy.
+
+    Solo calibration answers "how fast is this process alone?" — the
+    wrong question for a fleet that oversubscribes the host's cores: at
+    the capacity cliff *every* worker is busy, and each one only gets its
+    contended share of the machine.  Stepping the bucket ladder in
+    lockstep — every worker measures the *same* bucket at the same
+    moment, one barrier per bucket — keeps the measurement loads aligned,
+    so each worker's curve carries the all-busy contention the cliff will
+    actually exhibit (a free-running concurrent calibration drifts out of
+    phase: a worker timing its burst while the others sit in a cheap
+    bucket reads near-solo speed).  This is the curve a ``SimNodeBackend``
+    twin needs for sim-vs-remote capacity parity on an oversubscribed
+    host."""
+    ladder = bucket_ladder(max_bucket)
+    secs = [[] for _ in handles]
+    for bucket in ladder:
+        vals: list[float | None] = [None] * len(handles)
+        errors: list[Exception] = []
+
+        def _one(k: int) -> None:
+            try:
+                dev = _calibrate_handle(handles[k], max_bucket=max_bucket,
+                                        burst=burst, reps=reps,
+                                        buckets=[bucket])
+                vals[k] = float(dev.seconds[0])
+            except Exception as e:
+                errors.append(e)
+
+        threads = [threading.Thread(target=_one, args=(k,))
+                   for k in range(len(handles))]
+        for th in threads:
+            th.start()
+        for th in threads:
+            th.join()
+        if errors:
+            raise errors[0]
+        for k, v in enumerate(vals):
+            secs[k].append(v)
+    arr = np.asarray(ladder, np.int64)
+    return [BucketedDeviceModel(arr, np.maximum.accumulate(np.asarray(s)))
+            for s in secs]
+
+
+def remote_node(model_spec: str, *, supervisor: WorkerSupervisor,
+                pool: str = "remote", index_in_pool: int = 0,
+                n_workers: int = 1, batch_size: int = 32,
+                max_bucket: int = 256,
+                device: BucketedDeviceModel | None = None,
+                weight: float = 1.0,
+                clock: WallClock | None = None) -> RemoteNodeBackend:
+    """Boot one remote node: spawn the worker process, calibrate its
+    device curve in-process (unless ``device`` is given), and build the
+    backend.  ``spec.boot_s`` is the *measured* spawn(+calibrate) wall
+    time of this node — the real number the lifecycle layer previously
+    modeled as a constant."""
+    t0 = time.monotonic()
+    handle = supervisor.spawn(model_spec, n_workers=n_workers,
+                              batch_size=batch_size, max_bucket=max_bucket)
+    if device is None:
+        device = _calibrate_handle(handle, max_bucket=max_bucket)
+    boot_s = time.monotonic() - t0
+    spec = NodeSpec(cpu=device, n_executors=n_workers,
+                    batch_size=min(batch_size, max_bucket),
+                    request_overhead_s=0.0, boot_s=boot_s)
+    return RemoteNodeBackend(handle, spec=spec, pool=pool,
+                             index_in_pool=index_in_pool, weight=weight,
+                             clock=clock)
+
+
+def boot_remote_fleet(model_spec: str, n_nodes: int, *,
+                      supervisor: WorkerSupervisor, pool: str = "remote",
+                      n_workers: int = 1, batch_size: int = 32,
+                      max_bucket: int = 256, burst: int = 32, reps: int = 5,
+                      clock: WallClock | None = None
+                      ) -> list[RemoteNodeBackend]:
+    """Boot ``n_nodes`` worker processes and calibrate them in
+    **lockstep** (see :func:`calibrate_lockstep`): each node's curve
+    carries the core contention of the whole fleet busy — on an
+    oversubscribed host that contended curve, not the solo one, is what a
+    simulated twin must use to predict the remote fleet's capacity."""
+    clock = clock or WallClock()
+    t0 = time.monotonic()
+    handles = supervisor.spawn_many(model_spec, n_nodes,
+                                    n_workers=n_workers,
+                                    batch_size=batch_size,
+                                    max_bucket=max_bucket)
+    devices = calibrate_lockstep(handles, max_bucket=max_bucket,
+                                 burst=burst, reps=reps)
+    boot_s = time.monotonic() - t0
+    out = []
+    for k, (handle, device) in enumerate(zip(handles, devices)):
+        spec = NodeSpec(cpu=device, n_executors=n_workers,
+                        batch_size=min(batch_size, max_bucket),
+                        request_overhead_s=0.0, boot_s=boot_s)
+        out.append(RemoteNodeBackend(handle, spec=spec, pool=pool,
+                                     index_in_pool=k, weight=1.0,
+                                     clock=clock))
+    return out
+
+
+class RemoteBackendFactory:
+    """``factory(view, t0)`` for ``drive_fleet``'s fleet mode: every
+    materialization — initial fleet, autoscaler growth, fault restart —
+    spawns a genuine worker process.  The spawn happens synchronously in
+    the driver loop, so the wall clock pays the node's true boot latency
+    as it happens; keep the ledger spec's ``boot_s`` at 0 (a modeled
+    delay on top would double-count it).  Measured boots are recorded in
+    ``boot_history`` as ``((pool, index), seconds)``."""
+
+    def __init__(self, model_spec: str, supervisor: WorkerSupervisor, *,
+                 device: BucketedDeviceModel | None = None,
+                 n_workers: int = 1, batch_size: int = 32,
+                 max_bucket: int = 256, clock: WallClock | None = None):
+        self.model_spec = model_spec
+        self.supervisor = supervisor
+        self.device = device
+        self.n_workers = n_workers
+        self.batch_size = batch_size
+        self.max_bucket = max_bucket
+        self.clock = clock or WallClock()
+        self.boot_history: list[tuple[tuple[str, int], float]] = []
+
+    def __call__(self, view, t0: float) -> RemoteNodeBackend:
+        t_spawn = time.monotonic()
+        b = remote_node(self.model_spec, supervisor=self.supervisor,
+                        pool=view.pool, index_in_pool=view.index_in_pool,
+                        n_workers=self.n_workers,
+                        batch_size=self.batch_size,
+                        max_bucket=self.max_bucket, device=self.device,
+                        weight=view.weight, clock=self.clock)
+        self.boot_history.append(((view.pool, view.index_in_pool),
+                                  time.monotonic() - t_spawn))
+        return b

@@ -27,7 +27,9 @@ is the numpy fast engine or a real ``ServingRuntime``.  They are also
 *lifecycle-blind*: the fleet driver hands ``assign`` only the nodes the
 ``cluster.lifecycle.FleetController`` reports as SERVING, so booting,
 draining, and dead nodes never appear in the candidate list (and the
-per-key state stores below survive nodes entering/leaving it).  Estimated
+per-key state stores below survive nodes entering/leaving it; a freshly
+promoted node joins at the fleet-median backlog — see ``_load_state`` —
+rather than flooding from zero).  Estimated
 per-query work is computed per node *class* (pools share specs) from the
 same service-time tables the fast simulator uses, so routing cost
 estimates and simulated reality agree.
@@ -104,9 +106,20 @@ def _est_work(nodes: Sequence[NodeHandle], sizes: np.ndarray
 def _load_state(store: dict, nodes: Sequence[NodeHandle]) -> np.ndarray:
     """Per-node state aligned with ``nodes``, keyed by stable node identity
     ``(pool, index_in_pool)`` — an autoscaling resize must not wipe the
-    surviving nodes' backlogs (new nodes start idle at 0)."""
-    return np.array([store.get((nv.pool, nv.index_in_pool), 0.0)
-                     for nv in nodes])
+    surviving nodes' backlogs.
+
+    Join-warmup: a node *not* in the store is freshly promoted
+    (autoscaled, restarted), and seeding its backlog at 0 would make a
+    greedy policy route the entire next window at it until its estimate
+    catches up — the join-flood transient.  New keys are seeded at the
+    *median* of the incumbents' backlogs instead: the joiner enters
+    mid-pack, picks up a fair share immediately, and drifts to its true
+    level as real assignments accrue.  A first window (no incumbents)
+    seeds everyone at 0, as before."""
+    vals = [store.get((nv.pool, nv.index_in_pool)) for nv in nodes]
+    known = [v for v in vals if v is not None]
+    fill = float(np.median(known)) if known else 0.0
+    return np.array([fill if v is None else v for v in vals])
 
 
 def _store_state(values: np.ndarray, nodes: Sequence[NodeHandle]) -> dict:

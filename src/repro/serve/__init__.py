@@ -1,1 +1,4 @@
+# remote is not imported here: it is the `python -m repro.serve.remote`
+# worker entry point, and a package __init__ importing the -m target makes
+# runpy warn about double execution
 from repro.serve import batching, runtime  # noqa: F401

@@ -14,6 +14,17 @@ def bucket_for(size: int, max_bucket: int = 1024) -> int:
     return b
 
 
+def bucket_ladder(max_bucket: int) -> list[int]:
+    """Every bucket a runtime capped at ``max_bucket`` pads to (powers of
+    two, ascending) — the single definition of the rung set calibrations
+    measure, so solo and lockstep curves can never drift apart."""
+    out, b = [], 1
+    while b <= max_bucket:
+        out.append(b)
+        b *= 2
+    return out
+
+
 def pad_batch(batch: dict, to: int) -> dict:
     """Pad every leaf's leading dim to ``to`` (repeating row 0 — cheap and
     numerically safe for inference; results past the true size are sliced).

@@ -174,6 +174,69 @@ class ServingRuntime:
                         self._done_log.append(rec)
 
 
+class PacedFeeder:
+    """Releases queries into a serving runtime at their trace arrival
+    instants — the pacing half of a live node, shared by the in-process
+    backend (``cluster.live.LiveNodeBackend``) and the remote worker
+    (``serve.remote``), so the release/close/drain race handling lives in
+    exactly one place.
+
+    ``wall_of(t_trace) -> wall_instant`` maps trace time onto the wall
+    clock (evaluated at release time, so a clock anchored after enqueue
+    still paces correctly); ``release(qid, size, model_id)`` performs the
+    submission; ``on_error`` (optional) observes a failed release — the
+    query is dropped and feeding continues either way.  ``stop`` wakes
+    the thread even mid-sleep: a close during the trace must not leave a
+    thread pacing queries into a shut-down runtime for the rest of the
+    trace's wall time; items still scheduled at stop are discarded."""
+
+    def __init__(self, wall_of: Callable[[float], float],
+                 release: Callable[[int, int, int], None],
+                 on_error: Callable[[int, Exception], None] | None = None):
+        self._wall_of = wall_of
+        self._release = release
+        self._on_error = on_error
+        self._q: queue.Queue = queue.Queue()
+        self._closing = threading.Event()
+        self._thread = threading.Thread(target=self._run, daemon=True)
+        self._thread.start()
+
+    def put(self, t_trace: float, qid: int, size: int,
+            model_id: int) -> None:
+        self._q.put((t_trace, qid, size, model_id))
+
+    @property
+    def unfinished(self) -> int:
+        """Items accepted but not yet released (or discarded) — the
+        bounded-drain loop's wait condition."""
+        return self._q.unfinished_tasks
+
+    def stop(self, timeout: float = 5.0) -> None:
+        self._closing.set()
+        self._q.put(None)
+        self._thread.join(timeout=timeout)
+
+    def _run(self) -> None:
+        while True:
+            item = self._q.get()
+            if item is None:
+                self._q.task_done()
+                return
+            t, qid, size, mid = item
+            try:
+                if self._closing.is_set():
+                    continue               # discard still-scheduled work
+                delay = self._wall_of(t) - time.monotonic()
+                if delay > 0 and self._closing.wait(delay):
+                    continue               # woken by stop(), not arrival
+                self._release(qid, size, mid)
+            except Exception as e:         # keep feeding; query → dropped
+                if self._on_error is not None:
+                    self._on_error(qid, e)
+            finally:
+                self._q.task_done()
+
+
 class OnlineController:
     """Online hill climbing on the runtime's batch-size knob.
 

@@ -191,7 +191,10 @@ def test_hetero_router_sends_big_queries_to_accel_nodes():
 
 def test_router_backlog_survives_fleet_resize():
     """Autoscaling changes the node list between windows; surviving nodes
-    must keep their backlog (state is keyed by node identity, not index)."""
+    must keep their backlog (state is keyed by node identity, not index),
+    and a node joining mid-run is seeded at the fleet-median backlog —
+    it takes a fair share of the next window, not the whole of it
+    (join-warmup, replacing the old start-at-zero flood)."""
     fleet = _fleet(sky=2, bdw=1)
     fleet.estimate_capacity(100.0, n_queries=200)
     r = make_router("least_outstanding")
@@ -199,13 +202,16 @@ def test_router_backlog_survives_fleet_resize():
     r.assign(t, s, fleet.node_views())
     before = dict(r._store)
     assert any(v > 0 for v in before.values())
-    fleet.scale("skylake", +1)               # resize: one new idle node
+    fleet.scale("skylake", +1)               # resize: one new node
     nodes = fleet.node_views()
-    a2 = r.assign(t[:1] + 0.5, s[:1], nodes)
-    # the new node is idle (0 backlog) while old ones still carry work, so
-    # the single query must land on the freshly added node
-    nv = nodes[int(a2[0])]
-    assert (nv.pool, nv.index_in_pool) not in before
+    t2, s2 = StationaryTraffic(3000.0).generate(np.random.default_rng(4), 0.2)
+    a2 = r.assign(t2 + 0.5 + 1e-3, s2, nodes)
+    # survivors kept their identity-keyed state across the resize
+    assert all(k in r._store for k in before)
+    new_key = ("skylake", 2)
+    share = np.mean([(nodes[i].pool, nodes[i].index_in_pool) == new_key
+                     for i in a2])
+    assert 0.0 < share < 0.6, share          # fair share, not a flood
 
 
 def test_size_aware_seeds_new_node_at_class_level():

@@ -313,6 +313,127 @@ def test_autoscaler_shrink_marks_nodes_draining():
     assert r.dropped == 0                    # drained work still completed
 
 
+# ------------------------------------------------ ledger-owned identity
+
+
+def test_kill_written_back_to_fleet_ledger():
+    """A kill removes its exact index from pool membership: survivors
+    keep their identities, capacity accounting sees the true pool."""
+    fleet = _fleet(n=4)
+    fleet.estimate_capacity(100.0, n_queries=200)
+    cap4 = fleet.total_capacity()
+    ctrl = FleetController(fleet=fleet, factory=SimNodeBackend,
+                           faults=FleetFaults(
+                               kills=(NodeKill(0.1, "sky", 1),)))
+    ctrl.start(0.0)
+    ctrl.begin_window(0.0)
+    serving, _ = ctrl.begin_window(0.1)
+    assert fleet.pool("sky").count == 3
+    assert fleet.pool("sky").member_ids() == [0, 2, 3]
+    assert [b.index_in_pool for b in serving] == [0, 2, 3]
+    np.testing.assert_allclose(fleet.total_capacity(), 0.75 * cap4)
+
+
+def test_regrowth_reuses_dead_index():
+    """Scaling up after a kill refills the vacated slot (lowest free
+    index) with a fresh cold node rather than minting ever-higher ids."""
+    fleet = _fleet(n=3, boot_s=0.3, max_count=4)
+    ctrl = FleetController(fleet=fleet, factory=SimNodeBackend,
+                           faults=FleetFaults(
+                               kills=(NodeKill(0.1, "sky", 1),)))
+    ctrl.start(0.0)
+    ctrl.begin_window(0.1)                   # kill lands: members [0, 2]
+    assert fleet.pool("sky").member_ids() == [0, 2]
+    assert fleet.scale("sky", +1) == 1
+    assert fleet.pool("sky").member_ids() == [0, 1, 2]
+    serving, _ = ctrl.begin_window(0.2)
+    assert ctrl.states()[("sky", 1)] is NodeState.BOOTING   # fresh, cold
+    assert len(serving) == 2
+    serving, _ = ctrl.begin_window(0.5)      # 0.2 + 0.3 boot elapsed
+    assert [b.index_in_pool for b in serving] == [0, 1, 2]
+
+
+def test_restart_restores_ledger_membership():
+    fleet = _fleet(n=3, boot_s=0.2)
+    t, s = _trace(n=500, qps=1000.0)
+    faults = FleetFaults(kills=(NodeKill(0.15, "sky", 0,
+                                         restart_after_s=0.1),))
+    r = simulate_fleet(t, s, fleet, make_router("least_outstanding"),
+                       window_s=0.05, fleet_faults=faults)
+    assert r.dropped == 0
+    # the caller's ledger is untouched (kill runs mutate a copy) …
+    assert fleet.pool("sky").count == 3
+    # … and the run's own per-pool count reflects the restored membership
+    assert r.per_pool["sky"].n_nodes == 3
+
+
+def test_simulate_fleet_kills_do_not_mutate_caller_fleet():
+    fleet = _fleet(n=4)
+    t, s = _trace(n=200, qps=800.0)
+    r = simulate_fleet(t, s, fleet, make_router("round_robin"),
+                       window_s=0.05,
+                       fleet_faults=FleetFaults(
+                           kills=(NodeKill(0.1, "sky", 0),)))
+    assert fleet.pool("sky").count == 4      # back-to-back runs stay fair
+    assert fleet.pool("sky").member_ids() == [0, 1, 2, 3]
+    assert r.per_pool["sky"].n_nodes == 3    # the run itself saw the kill
+
+
+def test_kill_plan_naming_unknown_node_is_inert():
+    """A typo'd kill — bogus index or unknown pool — even with a restart
+    schedule must neither crash the run nor restore/materialize a
+    phantom node the fleet never had."""
+    fleet = _fleet(n=2)
+    t, s = _trace(n=100, qps=400.0)
+    faults = FleetFaults(kills=(
+        NodeKill(0.05, "sky", 99, restart_after_s=0.05),
+        NodeKill(0.05, "nope", 0, restart_after_s=0.05)))
+    r = simulate_fleet(t, s, fleet, make_router("round_robin"),
+                       window_s=0.02, fleet_faults=faults)
+    assert r.dropped == 0 and r.rerouted == 0
+    assert r.n_nodes == 2
+    assert fleet.pool("sky").member_ids() == [0, 1]
+    assert all(e.pool == "sky" and e.index_in_pool in (0, 1)
+               for e in r.lifecycle)
+
+
+def test_drive_fleet_kills_do_not_mutate_caller_fleet_directly():
+    """The copy guard lives in drive_fleet itself, not only the
+    simulate_fleet wrapper — direct fleet-mode callers (e.g. a remote
+    backend factory) reuse their ledger across runs too."""
+    fleet = _fleet(n=3)
+    t, s = _trace(n=100, qps=400.0)
+    r = drive_fleet(t, s, None, make_router("round_robin"), window_s=0.05,
+                    fleet=fleet, factory=SimNodeBackend,
+                    fleet_faults=FleetFaults(
+                        kills=(NodeKill(0.05, "sky", 0),)))
+    assert r.per_pool["sky"].n_nodes == 2    # the run saw the kill
+    assert fleet.pool("sky").count == 3      # the caller's ledger did not
+    assert fleet.pool("sky").member_ids() == [0, 1, 2]
+
+
+def test_autoscaler_utilization_trigger_sees_post_kill_pool():
+    """Killing half the pool under moderate load pushes offered/capacity
+    over the utilization bar *because the ledger shrank* — the autoscaler
+    reacts to the kill without waiting for the p95 backstop."""
+    fleet = _fleet(n=4, max_count=8)
+    fleet.estimate_capacity(100.0, n_queries=200)
+    rate = 0.55 * fleet.total_capacity()     # calm before the kill
+    t, s = StationaryTraffic(rate).generate(np.random.default_rng(5), 3.0)
+    faults = FleetFaults(kills=(NodeKill(1.0, "sky", 0),
+                                NodeKill(1.0, "sky", 1)))
+    # up_at=10 parks the p95 backstop out of reach: the post-kill queueing
+    # would fire it in the same window, and this test is specifically
+    # about the *capacity* signal (pre-writeback, util read 0.55 forever)
+    r = simulate_fleet(t, s, fleet, make_router("round_robin"),
+                       window_s=0.25, fleet_faults=faults,
+                       autoscaler=Autoscaler(sla_ms=100.0, up_at=10.0,
+                                             cooldown_windows=0))
+    grow = [e for e in r.events if e.delta > 0]
+    assert grow and all(e.t_s >= 1.0 for e in grow)
+    assert grow[0].reason == "util"          # capacity, not the backstop
+
+
 # ------------------------------------------------- take_new_records cursor
 
 

@@ -1,0 +1,237 @@
+"""Remote tier: wire-protocol edge cases, worker process lifecycle, real
+SIGKILL re-route, supervisor reaping — tiny ``pybusy`` models and canned
+device curves keep each worker's useful work small, but every spawn still
+pays ~1s of real process boot (tier-1 budget: a handful of spawns)."""
+import os
+import signal
+import socket
+import struct
+import time
+
+import numpy as np
+import pytest
+
+from repro.cluster import (FleetFaults, NodeKill, WallClock, drive_fleet,
+                           make_router)
+from repro.cluster.fleet import NodeSpec, NodeView, Pool, Fleet
+from repro.cluster.live import BucketedDeviceModel
+from repro.cluster.remote import (RemoteBackendFactory, WorkerCrashed,
+                                  WorkerSupervisor, remote_node)
+from repro.serve.remote import (ProtocolError, build_model, recv_frame,
+                                send_frame)
+
+pytestmark = pytest.mark.cluster
+
+
+def _canned_device(service_s: float = 1e-4) -> BucketedDeviceModel:
+    return BucketedDeviceModel(np.array([1, 2, 4, 8, 16, 32, 64]),
+                               np.full(7, service_s))
+
+
+def _node(sup, *, index=0, iters=50, service_s=1e-4, clock=None):
+    return remote_node(f"pybusy:{iters}", supervisor=sup, pool="remote",
+                       index_in_pool=index, device=_canned_device(service_s),
+                       batch_size=16, max_bucket=64, clock=clock)
+
+
+# ------------------------------------------------------------ wire protocol
+
+
+def test_frame_roundtrip():
+    a, b = socket.socketpair()
+    try:
+        msg = {"op": "submit", "q": [[0, 0.25, 8, -1]]}
+        send_frame(a, msg)
+        assert recv_frame(b) == msg
+    finally:
+        a.close()
+        b.close()
+
+
+def test_oversized_frame_rejected_on_send_and_recv():
+    a, b = socket.socketpair()
+    try:
+        with pytest.raises(ProtocolError, match="exceeds"):
+            send_frame(a, {"blob": "x" * 1024}, max_frame=64)
+        # a peer *announcing* a runaway frame is rejected before the body
+        # is read — the declared length alone condemns it
+        a.sendall(struct.pack("!I", 2 ** 31))
+        with pytest.raises(ProtocolError, match="cap"):
+            recv_frame(b, max_frame=1024)
+    finally:
+        a.close()
+        b.close()
+
+
+def test_partial_frame_raises_not_truncates():
+    a, b = socket.socketpair()
+    try:
+        a.sendall(struct.pack("!I", 100) + b'{"op":')   # die mid-frame
+        a.close()
+        with pytest.raises(ProtocolError, match="mid-frame"):
+            recv_frame(b)
+    finally:
+        b.close()
+
+
+def test_clean_eof_returns_none():
+    a, b = socket.socketpair()
+    a.close()
+    try:
+        assert recv_frame(b) is None
+    finally:
+        b.close()
+
+
+def test_build_model_rejects_unknown_spec():
+    with pytest.raises(ValueError, match="unknown model"):
+        build_model("nosuchmodel:3")
+    apply_fn, make_batch = build_model("pybusy:10")
+    out = apply_fn(make_batch(4, -1))
+    assert out.shape == (1,)
+
+
+# ------------------------------------------------------- worker lifecycle
+
+
+def test_worker_roundtrip_and_idempotent_shutdown():
+    with WorkerSupervisor() as sup:
+        b = _node(sup)
+        assert b.spec.boot_s > 0                  # measured, not modeled
+        assert sup.healthy(b.handle)
+        b.start(0.0)
+        b.submit(np.arange(5), np.linspace(0.0, 0.05, 5), np.full(5, 8))
+        b.drain(30)
+        recs = b.completed_records()
+        assert sorted(r.index for r in recs) == list(range(5))
+        for r in recs:                            # trace-time coordinates
+            assert 0.0 <= r.t_arrival <= r.t_done < 10.0
+            assert r.error is None
+        # reset gives the same process a fresh run: old records are gone
+        b.reset_run()
+        assert b.completed_records() == []
+        b.close()
+        b.close()                                 # double shutdown: no-op
+        assert sup.reap() and not sup.handles
+
+
+def test_live_worker_rejects_oversized_frame_cleanly():
+    """An oversized frame poisons the stream: the worker replies with an
+    error, closes the connection, and exits — it does not crash in a way
+    the supervisor can't observe, and it does not hang."""
+    with WorkerSupervisor() as sup:
+        b = _node(sup)
+        sock = b.handle.sock
+        sock.sendall(struct.pack("!I", 64 * 1024 * 1024))
+        reply = recv_frame(sock)
+        assert reply["ok"] is False and "cap" in reply["error"]
+        assert recv_frame(sock) is None           # worker hung up
+        b.handle.proc.wait(timeout=10)            # ... and exited
+        assert not b.handle.alive()
+        sup.reap()
+
+
+def test_worker_error_reply_keeps_connection_alive():
+    with WorkerSupervisor() as sup:
+        b = _node(sup)
+        reply = b._rpc({"op": "frobnicate"}, check=False)
+        assert reply["ok"] is False and "unknown op" in reply["error"]
+        assert sup.healthy(b.handle)              # still serving verbs
+        b.close()
+
+
+def test_await_port_tolerates_stdout_noise():
+    """A worker (or a library it imports) printing to stdout before the
+    announce must not starve the rendezvous: a block-buffered pipe ships
+    the noise and the announce in one chunk, which a select()-based
+    reader would lose into its line buffer."""
+    import subprocess
+    import sys
+
+    sup = WorkerSupervisor(spawn_timeout=10.0)
+    proc = subprocess.Popen(
+        [sys.executable, "-c",
+         "print('import-time noise'); print('REMOTE_WORKER_PORT=7')"],
+        stdout=subprocess.PIPE)
+    try:
+        assert sup._await_port(proc) == 7
+    finally:
+        proc.wait(timeout=10)
+
+
+def test_supervisor_reaps_sigkilled_zombie():
+    with WorkerSupervisor() as sup:
+        b = _node(sup)
+        pid = b.handle.pid
+        os.kill(pid, signal.SIGKILL)
+        deadline = time.monotonic() + 10
+        while b.handle.proc.poll() is None and time.monotonic() < deadline:
+            time.sleep(0.02)
+        dead = sup.reap()
+        assert [h.pid for h in dead] == [pid]
+        assert dead[0].proc.returncode == -signal.SIGKILL   # no zombie left
+        assert not sup.handles
+        assert not sup.healthy(dead[0])
+
+
+# --------------------------------------------------- kill/re-route, fleet
+
+
+def test_worker_crash_mid_query_orphans_rerouted_via_lifecycle():
+    """A mid-run SIGKILL (the FleetFaults path: cancel_pending kills the
+    real process) surrenders the victim's unfinished queries and the
+    driver re-routes them to the survivor — none lost."""
+    clock = WallClock()
+    with WorkerSupervisor() as sup:
+        # ~50ms/query of GIL-held python work against 20ms arrivals → the
+        # victim is over capacity and has a queue when the kill lands
+        backends = [_node(sup, index=i, iters=60000, service_s=5e-2,
+                          clock=clock) for i in range(2)]
+        times = np.linspace(0.0, 0.4, 40)
+        sizes = np.full(40, 8, np.int64)
+        faults = FleetFaults(kills=(NodeKill(0.2, "remote", 0),))
+        try:
+            r = drive_fleet(times, sizes, backends,
+                            make_router("round_robin"), window_s=0.1,
+                            fleet_faults=faults, drain_timeout=60)
+            assert r.rerouted > 0
+            assert r.dropped == 0 and r.n_queries == 40
+            assert backends[0].handle.proc.returncode == -signal.SIGKILL
+            with pytest.raises(RuntimeError, match="dead"):
+                backends[0].submit(np.array([99]), np.array([0.9]),
+                                   np.array([4]))
+            with pytest.raises(WorkerCrashed):
+                backends[0]._rpc({"op": "ping"})
+            # the dead node's polled history + the survivor's records
+            # partition the trace
+            done = {rec.index for b in backends
+                    for rec in b.completed_records()}
+            assert done == set(range(40))
+            assert [h.pid for h in sup.reap()] == [backends[0].handle.pid]
+        finally:
+            for b in backends:
+                b.close()
+
+
+def test_remote_backend_factory_boots_real_process():
+    """The fleet-mode factory contract: factory(view, t0) spawns a genuine
+    worker process and records its measured boot time."""
+    with WorkerSupervisor() as sup:
+        factory = RemoteBackendFactory("pybusy:50", sup,
+                                       device=_canned_device(),
+                                       batch_size=16, max_bucket=64)
+        spec = NodeSpec(cpu=_canned_device(), n_executors=1, batch_size=16,
+                        request_overhead_s=0.0)
+        fleet = Fleet([Pool("remote", spec, count=1)])
+        view = fleet.node_views()[0]
+        b = factory(view, 0.0)
+        try:
+            assert b.handle.alive()
+            assert factory.boot_history[0][0] == ("remote", 0)
+            assert factory.boot_history[0][1] > 0
+            b.start(0.0)
+            b.submit(np.array([0]), np.array([0.0]), np.array([4]))
+            b.drain(30)
+            assert len(b.completed_records()) == 1
+        finally:
+            b.close()
