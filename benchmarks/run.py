@@ -32,6 +32,7 @@ SUITES = [
     ("sched_speed", "benchmarks.sched_speed"),
     ("live_parity", "benchmarks.live_parity"),
     ("remote_scaling", "benchmarks.remote_scaling"),
+    ("chaos", "benchmarks.chaos"),
     ("roofline_report", "benchmarks.roofline_report"),
 ]
 
@@ -58,9 +59,16 @@ def main() -> None:
     from benchmarks.common import rows
     failures = []
     report: dict[str, dict] = {}
-    for name, module in SUITES:
-        if args.only and not any(tok in name for tok in args.only.split(",")):
-            continue
+    selected = [(name, module) for name, module in SUITES
+                if not args.only
+                or any(tok in name for tok in args.only.split(","))]
+    if args.only and not selected:
+        # a typo'd --only silently running zero suites would exit 0 and
+        # green-light a CI gate that measured nothing
+        print(f"# no suite matches --only {args.only!r} "
+              f"(see --list)", file=sys.stderr)
+        sys.exit(2)
+    for name, module in selected:
         print(f"# ==== {name} ====", flush=True)
         t0 = time.time()
         seen = len(rows())

@@ -20,9 +20,15 @@ hundreds of machines", validated against real execution).
   heterogeneity-aware with per-tenant affinity).
 * ``traffic`` — diurnal / bursty / multi-tenant arrival scenarios.
 * ``lifecycle`` — the node lifecycle layer: ``NodeState``
-  (BOOTING → SERVING → DRAINING → DEAD) owned by a ``FleetController``
-  that materializes, boots, drains, retires, and kills backends on the
-  shared timeline; ``FleetFaults`` kill plans with re-route.
+  (BOOTING → SERVING → DRAINING → DEAD, with a transient SUSPECT) owned
+  by a ``FleetController`` that materializes, boots, drains, retires, and
+  kills backends on the shared timeline; ``FleetFaults`` kill plans with
+  re-route, and ``SelfHealPolicy`` auto-restart under a crash-loop
+  budget plus terminate-after-idle for draining nodes.
+* ``chaos`` — deterministic fault injection: ``ChaosPlan`` extends
+  ``FleetFaults`` with hung RPCs, garbled/dropped frames, and slow-start
+  spawns, all scheduled at trace times (``crash_storm`` builds the kill
+  bursts the chaos benchmark gates on).
 * ``autoscaler`` — reactive p95-vs-SLA pool scaling plus the predictive
   boot-latency-ahead ``PredictiveAutoscaler`` over traffic forecasts,
   with node-hour accounting, against the ``CapacityLedger`` protocol.
@@ -33,12 +39,14 @@ hundreds of machines", validated against real execution).
 from repro.cluster.autoscaler import (Autoscaler,  # noqa: F401
                                       CapacityLedger, PredictiveAutoscaler,
                                       ScalingEvent)
-from repro.cluster.backend import (CompletedQuery, NodeBackend,  # noqa: F401
-                                   NodeHandle, PendingQuery, SimNodeBackend,
-                                   sim_backends)
+from repro.cluster.backend import (BackendDied,  # noqa: F401
+                                   CompletedQuery, NodeBackend, NodeHandle,
+                                   PendingQuery, SimNodeBackend, sim_backends)
+from repro.cluster.chaos import (ChaosPlan, FrameGarble,  # noqa: F401
+                                 RpcHang, SlowStart, crash_storm)
 from repro.cluster.lifecycle import (FleetController,  # noqa: F401
                                      FleetFaults, LifecycleEvent, NodeKill,
-                                     NodeState)
+                                     NodeState, SelfHealPolicy)
 from repro.cluster.cluster_sim import (ClusterResult,  # noqa: F401
                                        cluster_max_qps, drive_fleet,
                                        simulate_fleet)
@@ -47,8 +55,9 @@ from repro.cluster.fleet import (Fleet, NodeSpec, Pool,  # noqa: F401
 from repro.cluster.live import (BucketedDeviceModel,  # noqa: F401
                                 LiveNodeBackend, WallClock, calibrate_device,
                                 live_node)
-from repro.cluster.remote import (RemoteBackendFactory,  # noqa: F401
-                                  RemoteNodeBackend, WorkerCrashed,
+from repro.cluster.remote import (BootingRemoteBackend,  # noqa: F401
+                                  RemoteBackendFactory, RemoteNodeBackend,
+                                  RestartPolicy, WorkerCrashed,
                                   WorkerSupervisor, boot_remote_fleet,
                                   remote_node)
 from repro.cluster.router import (HeterogeneityAwareRouter,  # noqa: F401

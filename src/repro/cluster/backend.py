@@ -48,6 +48,15 @@ class NodeHandle(Protocol):
     weight: float
 
 
+class BackendDied(RuntimeError):
+    """The execution engine behind a node is gone mid-run — the process
+    crashed, the transport failed past its retry budget, or the runtime
+    shut down underneath the driver.  The windowed driver catches this
+    (never a bare ``RuntimeError``, which still means a caller bug),
+    re-routes the victim's work, and lets the lifecycle controller's
+    health pass decide whether to heal the node."""
+
+
 @dataclasses.dataclass
 class PendingQuery:
     """One query a backend accepted but had not completed when it was
@@ -91,6 +100,10 @@ class NodeBackend:
     index_in_pool: int = 0
     spec: NodeSpec
     weight: float = 1.0
+    # transport degraded but the node may still be alive (an RPC ran past
+    # its deadline): the health pass verifies SUSPECT nodes instead of
+    # declaring them dead on one bad exchange
+    suspect: bool = False
 
     @property
     def key(self) -> tuple[str, int]:
@@ -157,6 +170,21 @@ class NodeBackend:
         pending list — nothing is double-counted or lost."""
         raise NotImplementedError
 
+    def dead(self) -> bool:
+        """Has the execution engine behind this node gone away unplanned?
+        The lifecycle controller's health pass polls this every window;
+        a dead node is retired (orphans re-routed) and — under a
+        ``SelfHealPolicy`` — restarted through BOOTING.  Sim nodes never
+        die on their own; real backends override."""
+        return False
+
+    def idle(self, t: float) -> bool:
+        """Is every accepted query complete at trace time ``t``?  Drives
+        terminate-after-idle for DRAINING nodes.  The base answer is
+        ``False`` — a backend that cannot tell must never be terminated
+        early (closing it would strand in-flight work)."""
+        return False
+
     def close(self) -> None:
         """Release node resources (worker threads, devices)."""
 
@@ -205,6 +233,11 @@ class SimNodeBackend(NodeBackend):
                     t_done=float(done[j]),
                     model_id=int(mids[j]) if mids is not None else -1))
         return out
+
+    def idle(self, t: float) -> bool:
+        """All analytic completions at or before ``t`` (NaN drops never
+        complete and never will — they don't hold the node open)."""
+        return all(not np.any(done > t) for _, _, done, _, _ in self._chunks)
 
     def cancel_pending(self, t: float) -> list[PendingQuery]:
         """A simulated kill at trace time ``t``: the analytically computed

@@ -41,14 +41,16 @@ Entry points:
 from __future__ import annotations
 
 import dataclasses
+import time
 
 import numpy as np
 
 from repro.cluster.autoscaler import Autoscaler, ScalingEvent
-from repro.cluster.backend import NodeBackend, SimNodeBackend
+from repro.cluster.backend import BackendDied, NodeBackend, SimNodeBackend
 from repro.cluster.fleet import Fleet
 from repro.cluster.lifecycle import (FleetController, FleetFaults,
-                                     LifecycleEvent)
+                                     LifecycleEvent, NodeState,
+                                     SelfHealPolicy)
 from repro.cluster.router import Router
 from repro.core.latency_model import ContentionModel
 from repro.core.query_gen import (PRODUCTION, SizeDist, queries_from_arrays,
@@ -87,9 +89,12 @@ class ClusterResult:
     per_pool: dict[str, PoolStats]
     events: list[ScalingEvent] = dataclasses.field(default_factory=list)
     # fast path: one row per window, (t_start_s, offered_qps, n_nodes,
-    # p95_ms, width_s) — the last window's width is the truncated
-    # remainder, not window_s; empty in events mode (faults/contention),
-    # which is unwindowed
+    # p95_ms, width_s, ctl_s) — the last window's width is the truncated
+    # remainder, not window_s; ctl_s is the *wall* seconds the driver
+    # spent in control work (lifecycle + routing + submits) before
+    # releasing the window, the driver-stall metric a synchronous node
+    # spawn or an unbounded RPC would inflate; empty in events mode
+    # (faults/contention), which is unwindowed
     timeline: list[tuple] = dataclasses.field(default_factory=list)
     # per-model-id latency breakdown when the trace carries tenant labels
     per_model: dict[int, ModelStats] = dataclasses.field(default_factory=dict)
@@ -113,6 +118,12 @@ class ClusterResult:
         scaling (a run-wide p95 hides *when* the fleet was late)."""
         return sum(row[4] for row in self.timeline
                    if row[3] > sla_ms) / 60.0
+
+    def driver_stall_s(self) -> list[float]:
+        """Per-window wall-clock seconds of driver control work (the
+        ``ctl_s`` timeline column) — the chaos benchmark's zero-stall
+        gate reads its max/p95 against the window width."""
+        return [row[5] for row in self.timeline if len(row) > 5]
 
 
 def _result(times: np.ndarray, done: np.ndarray, pool_of: np.ndarray,
@@ -180,6 +191,7 @@ def drive_fleet(times: np.ndarray, sizes: np.ndarray,
                 factory=None,
                 model_ids: np.ndarray | None = None,
                 fleet_faults: FleetFaults | None = None,
+                self_heal: SelfHealPolicy | None = None,
                 drain_timeout: float = 120.0) -> ClusterResult:
     """Run one trace through a fleet of node backends.  ``times`` must be
     sorted; ``model_ids`` (optional) labels each query with its tenant and
@@ -194,7 +206,12 @@ def drive_fleet(times: np.ndarray, sizes: np.ndarray,
     ``cancel_pending`` hook surrenders its unfinished queries and the
     driver re-routes them to the survivors at the detection boundary
     (latency still measured from the original arrival); with
-    ``reroute=False`` they are dropped instead.
+    ``reroute=False`` they are dropped instead.  A backend that dies
+    *unplanned* — ``submit``/poll raising :class:`BackendDied`, or the
+    controller's per-window health probe — is retired the same way, and
+    a :class:`SelfHealPolicy` (``self_heal=``) additionally restarts it
+    through BOOTING under a crash-loop budget and terminates DRAINING
+    nodes once idle.
 
     Two ways to name the fleet:
 
@@ -244,7 +261,8 @@ def drive_fleet(times: np.ndarray, sizes: np.ndarray,
         # long-standing contract — the caller sees the final ledger.
         fleet = fleet.copy()
     controller = FleetController(fleet=fleet, factory=factory,
-                                 backends=backends, faults=fleet_faults)
+                                 backends=backends, faults=fleet_faults,
+                                 heal=self_heal)
     router.reset()
     n = len(times)
     done = np.full(n, np.nan)
@@ -256,20 +274,30 @@ def drive_fleet(times: np.ndarray, sizes: np.ndarray,
     timeline: list[tuple] = []
 
     def _submit(active, assign, gidx, wt, ws, wm):
+        """Submit a routed window; a node dying *inside* submit is not a
+        driver crash — its share is returned as ``{key: lost global
+        indices}`` for the heal/re-route loop."""
+        lost: dict[tuple, np.ndarray] = {}
         for i, b in enumerate(active):
             sel = assign == i
             if not sel.any():
                 continue
-            ret = b.submit(gidx[sel], wt[sel], ws[sel],
-                           wm[sel] if wm is not None else None)
+            try:
+                ret = b.submit(gidx[sel], wt[sel], ws[sel],
+                               wm[sel] if wm is not None else None)
+            except BackendDied:
+                lost[b.key] = gidx[sel]
+                continue
             if ret is not None:
                 done[gidx[sel]] = ret
                 pool_of[gidx[sel]] = b.pool
+        return lost
 
     for w in range(n_windows):
         w0, w1 = t_start + w * window_s, t_start + (w + 1) * window_s
         idx = np.flatnonzero((times >= w0) & (times < w1 if w < n_windows - 1
                                               else times <= horizon))
+        ctl0 = time.perf_counter()
         active, orphans = controller.begin_window(w0)
         if orphans:
             # a killed node's unfinished queries: void their (analytic)
@@ -284,18 +312,47 @@ def drive_fleet(times: np.ndarray, sizes: np.ndarray,
                 osz = np.array([q.size for q in orphans], np.int64)
                 om = np.array([q.model_id for q in orphans], np.int64) \
                     if model_ids is not None else None
-                _submit(active, router.assign(ot, osz, active,
-                                              model_ids=om),
-                        oidx, ot, osz, om)
+                lost = _submit(active, router.assign(ot, osz, active,
+                                                     model_ids=om),
+                               oidx, ot, osz, om)
                 rerouted += len(orphans)
+            else:
+                lost = {}
+        else:
+            lost = {}
         width = min(w1, horizon) - w0     # last window may be truncated
         node_hours += controller.billable_n * width / 3600.0
         wt, ws = times[idx], sizes[idx]
         wm = model_ids[idx] if model_ids is not None else None
         if len(active):
             assign = router.assign(wt, ws, active, model_ids=wm)
-            _submit(active, assign, idx, wt, ws, wm)
+            lost.update(_submit(active, assign, idx, wt, ws, wm))
         # else: no SERVING node this window — queries stay NaN (dropped)
+        while lost:
+            # mid-submit deaths: retire each victim through the
+            # controller (the heal policy decides whether it restarts),
+            # then re-route its failed batch plus whatever work it had
+            # already accepted to the remaining actives — repeatedly, in
+            # case a survivor dies absorbing the re-route
+            dead_keys = set(lost)
+            resub = {int(g) for sel in lost.values() for g in sel}
+            for key in dead_keys:
+                for q in controller.node_died(key, w0):
+                    done[q.index] = np.nan
+                    pool_of[q.index] = None
+                    resub.add(q.index)
+            active = [b for b in active if b.key not in dead_keys]
+            if not controller.faults.reroute or not active or not resub:
+                break
+            ridx = np.array(sorted(resub), np.int64)
+            rt_ = np.maximum(times[ridx], w0)   # orphans re-arrive at w0
+            rs_ = sizes[ridx]
+            rm_ = model_ids[ridx] if model_ids is not None else None
+            rerouted += len(ridx)
+            lost = _submit(active, router.assign(rt_, rs_, active,
+                                                 model_ids=rm_),
+                           ridx, rt_, rs_, rm_)
+        ctl_s = time.perf_counter() - ctl0
         if controller.realtime:
             advancing = controller.advance_targets()
             for b in advancing:
@@ -305,16 +362,22 @@ def drive_fleet(times: np.ndarray, sizes: np.ndarray,
             # semantics; the final result uses the full drained records).
             # take_new_records is O(new completions) per node — a cursor
             # into the runtime's completion log, not a rescan of every
-            # record the node ever finished.
-            lats = [r.latency_ms for b in advancing
-                    for r in b.take_new_records() if r.error is None]
+            # record the node ever finished.  A node dying mid-poll is
+            # the next boundary's health-pass problem, not this one's.
+            lats = []
+            for b in advancing:
+                try:
+                    lats += [r.latency_ms for r in b.take_new_records()
+                             if r.error is None]
+                except BackendDied:
+                    continue
             p95 = float(np.percentile(lats, 95)) if lats else 0.0
         else:
             wl = done[idx] - times[idx]
             ok = ~np.isnan(wl)
             p95 = float(np.percentile(wl[ok], 95) * 1e3) if ok.any() else 0.0
         offered = len(idx) / max(width, 1e-9)
-        timeline.append((w0, offered, len(active), p95, width))
+        timeline.append((w0, offered, len(active), p95, width, ctl_s))
         if autoscaler is not None:
             autoscaler.observe(w1, p95, offered, fleet)
             controller.reconcile(w1)
@@ -328,7 +391,14 @@ def drive_fleet(times: np.ndarray, sizes: np.ndarray,
     errors = 0
     if controller.realtime:
         for b in controller.advance_targets():
-            b.drain(drain_timeout)
+            try:
+                b.drain(drain_timeout)
+            except (TimeoutError, BackendDied):
+                # a node that can't finish its drain (hung, or died after
+                # the last boundary) is recorded, not fatal: whatever it
+                # completed before failing still counts below
+                controller.events.append(LifecycleEvent(
+                    horizon, b.pool, b.index_in_pool, NodeState.SUSPECT))
         for b in controller.all_created():
             for r in b.completed_records():
                 if r.error is not None:
@@ -360,6 +430,7 @@ def simulate_fleet(times: np.ndarray, sizes: np.ndarray, fleet: Fleet,
                    autoscaler: Autoscaler | None = None,
                    faults: FaultConfig | None = None,
                    fleet_faults: FleetFaults | None = None,
+                   self_heal: SelfHealPolicy | None = None,
                    contention: ContentionModel | None = None,
                    model_ids: np.ndarray | None = None,
                    seed: int = 0) -> ClusterResult:
@@ -425,7 +496,7 @@ def simulate_fleet(times: np.ndarray, sizes: np.ndarray, fleet: Fleet,
     return drive_fleet(times, sizes, None, router, window_s=window_s,
                        autoscaler=autoscaler, fleet=work_fleet,
                        factory=SimNodeBackend, model_ids=model_ids,
-                       fleet_faults=fleet_faults)
+                       fleet_faults=fleet_faults, self_heal=self_heal)
 
 
 def cluster_max_qps(fleet: Fleet, router: Router, sla_ms: float, *,

@@ -20,20 +20,34 @@ pool-dict bookkeeping in the driver — as an explicit state machine:
     advancing on the wall clock until the final drain).  A draining node
     lingers unbilled until the run ends; if the ledger names its key
     again (the pool regrows) the drain is *cancelled* and it resumes
-    warm — scale-in-protection semantics rather than instance
-    termination (terminate-after-idle is a roadmap item).
-  * **DEAD** — killed by a :class:`FleetFaults` plan: the backend's
-    ``cancel_pending`` hook surrenders its unfinished queries, and the
-    controller hands them back to the driver for *re-routing* to the
-    surviving SERVING nodes (or drops them when ``reroute=False`` — the
-    ablation baseline).  A ``restart_after_s`` schedule re-materializes
-    the node later, through BOOTING like any cold node.
+    warm — scale-in-protection semantics.  Under a :class:`SelfHealPolicy`
+    with ``terminate_idle`` the controller instead *terminates* a
+    DRAINING node once its accepted work completes: the backend is
+    closed mid-run (a remote node's OS process actually exits) rather
+    than lingering to the end of the run.
+  * **SUSPECT** — transport degraded (an RPC deadline expired and the
+    socket was scrapped) but the process may be alive: the health pass
+    verifies (ping over a fresh connection) and either reinstates the
+    node or declares it DEAD.  A transient state — it appears in the
+    event log, never across windows.
+  * **DEAD** — killed by a :class:`FleetFaults` plan, or detected dead
+    by the per-window health pass / a failed submit (``BackendDied``):
+    the backend's ``cancel_pending`` hook surrenders its unfinished
+    queries, and the controller hands them back to the driver for
+    *re-routing* to the surviving SERVING nodes (or drops them when
+    ``reroute=False`` — the ablation baseline).  A ``restart_after_s``
+    schedule — or, for unplanned deaths, the :class:`SelfHealPolicy`'s
+    crash-loop budget — re-materializes the node later, through BOOTING
+    like any cold node.
 
 Both engines run the same controller: ``SimNodeBackend.cancel_pending``
 rolls analytic completions past the kill instant back out of its history;
 ``LiveNodeBackend.cancel_pending`` shuts its ``ServingRuntime`` down
 mid-run.  Kills land at the first window boundary at or after their
-trace time (detection is windowed, like any health check).
+trace time (detection is windowed, like any health check), and a
+``cluster.chaos.ChaosPlan`` extends the fault plan with transport chaos
+(hung RPCs, garbled frames) delivered to backends at the same
+boundaries.
 """
 from __future__ import annotations
 
@@ -48,6 +62,11 @@ class NodeState(enum.Enum):
     BOOTING = "booting"
     SERVING = "serving"
     DRAINING = "draining"
+    # transport degraded (an RPC deadline expired) but the process may be
+    # alive: the health pass verifies and either clears the node back to
+    # its previous state or declares it DEAD — SUSPECT appears in the
+    # event log as the verdict's paper trail, never as a rest state
+    SUSPECT = "suspect"
     DEAD = "dead"
 
 
@@ -87,6 +106,38 @@ class FleetFaults:
 
 
 @dataclasses.dataclass(frozen=True)
+class SelfHealPolicy:
+    """Self-healing discipline for the lifecycle controller.
+
+    *Auto-restart*: a node that dies **unplanned** (the health pass's
+    ``backend.dead()`` probe, or a driver-detected mid-submit death) —
+    or is killed by a fault plan with no explicit ``restart_after_s`` —
+    is re-materialized through the normal BOOTING → SERVING path, at
+    most ``max_restarts`` times per node key, with exponential backoff
+    in *trace seconds* between attempts (crash-loop protection: a node
+    that dies every window must not consume the run respawning).
+
+    *Terminate-after-idle* (``terminate_idle``): a DRAINING node whose
+    accepted work has all completed is closed and retired at the next
+    window boundary — its real resources (an OS process, for remote
+    nodes) are released mid-run instead of lingering until the run ends.
+    Restarts need the fleet+factory mode; with explicit backends the
+    policy still buys health detection, orphan re-route, and
+    terminate-after-idle."""
+    max_restarts: int = 3
+    backoff_s: float = 0.0
+    backoff_factor: float = 2.0
+    backoff_cap_s: float = 30.0
+    terminate_idle: bool = True
+
+    def delay_s(self, used: int) -> float:
+        if self.backoff_s <= 0:
+            return 0.0
+        return min(self.backoff_s * self.backoff_factor ** used,
+                   self.backoff_cap_s)
+
+
+@dataclasses.dataclass(frozen=True)
 class LifecycleEvent:
     """One state transition, for ``ClusterResult.lifecycle`` reports."""
     t_s: float
@@ -118,7 +169,8 @@ class FleetController:
 
     def __init__(self, *, fleet: Fleet | None = None, factory=None,
                  backends: list[NodeBackend] | None = None,
-                 faults: FleetFaults | None = None):
+                 faults: FleetFaults | None = None,
+                 heal: SelfHealPolicy | None = None):
         if (backends is None) == (fleet is None):
             raise ValueError("pass exactly one of backends= or fleet=+factory=")
         if fleet is not None and factory is None:
@@ -126,6 +178,7 @@ class FleetController:
         self.fleet = fleet
         self.factory = factory
         self.faults = faults or FleetFaults()
+        self.heal = heal
         if backends is not None and any(
                 k.restart_after_s is not None for k in self.faults.kills):
             raise ValueError("restart_after_s needs the fleet=+factory= "
@@ -139,6 +192,13 @@ class FleetController:
         self._graveyard: list[NodeBackend] = []      # killed backends
         self._kills = sorted(self.faults.kills, key=lambda k: k.t_s)
         self._next_kill = 0
+        # transport/boot chaos injections (a ChaosPlan's hangs + garbles),
+        # delivered to backends' inject_chaos hooks at window boundaries;
+        # plain FleetFaults has none
+        inj = getattr(self.faults, "injections", None)
+        self._injections = list(inj()) if callable(inj) else []
+        self._next_inject = 0
+        self._restarts: dict[tuple, int] = {}  # key → heal budget used
         self._owned = fleet is not None
         self._explicit = list(backends or [])
 
@@ -165,9 +225,18 @@ class FleetController:
         key = (view.pool, view.index_in_pool)
         boot = 0.0 if warm else float(view.spec.boot_s)
         state = NodeState.SERVING if boot <= 0 else NodeState.BOOTING
+        if state is NodeState.SERVING and not self._ready(b):
+            # an async boot-ahead backend: the order returned instantly
+            # but the process isn't serving yet — BOOTING until ready()
+            state = NodeState.BOOTING
         self._nodes[key] = _Node(b, state, t + boot)
         self._order.append(key)
         self._transition(t, key, state)
+
+    @staticmethod
+    def _ready(b: NodeBackend) -> bool:
+        ready = getattr(b, "ready", None)
+        return ready() if callable(ready) else True
 
     def _view_keys(self) -> list[tuple]:
         if self.fleet is not None:
@@ -197,6 +266,16 @@ class FleetController:
         else:
             for v in self.fleet.node_views():
                 self._materialize(v, t0, warm=True)
+            # async-booted initial nodes: the run cannot begin before the
+            # starting fleet exists, so block here (the factory's pool
+            # overlaps the spawns) and promote each node that came up —
+            # boot-ahead pays off on *mid-run* orders, not the first fleet
+            for key, node in self._nodes.items():
+                wait = getattr(node.backend, "wait_ready", None)
+                if callable(wait) and node.state is NodeState.BOOTING \
+                        and node.serve_at <= t0 + 1e-9 and wait():
+                    node.state = NodeState.SERVING
+                    self._transition(t0, key, NodeState.SERVING)
 
     def begin_window(self, t: float
                      ) -> tuple[list[NodeBackend], list[PendingQuery]]:
@@ -209,8 +288,10 @@ class FleetController:
         # fault restarts that came due (fleet mode only): re-provisioning
         # a dead machine puts its index back in the ledger first — kills
         # were written out of it — then boots a fresh backend cold
+        # (ulp tolerance, like boot promotion below: the due instant is a
+        # different float-add chain than the window grid)
         for key, due in list(self._dead.items()):
-            if due is not None and due <= t:
+            if due is not None and due <= t + 1e-9:
                 del self._dead[key]
                 if key in self._nodes:
                     continue      # the pool regrew into this slot meanwhile
@@ -245,10 +326,13 @@ class FleetController:
                 self._materialize(v, t, warm=False)
         # boot promotions (ulp tolerance: serve_at is built by a different
         # float-add chain than the window grid, and a last-bit excess must
-        # not defer the promotion by a whole window)
+        # not defer the promotion by a whole window).  An async-booting
+        # node additionally needs its spawn future resolved (ready) —
+        # until then it stays BOOTING, billed but invisible to routers.
         for key, node in self._nodes.items():
             if node.state is NodeState.BOOTING \
-                    and node.serve_at <= t + 1e-9:
+                    and node.serve_at <= t + 1e-9 \
+                    and self._ready(node.backend):
                 node.state = NodeState.SERVING
                 self._transition(t, key, NodeState.SERVING)
         # kills whose trace time arrived (cancel at the kill instant —
@@ -259,6 +343,9 @@ class FleetController:
             kill = self._kills[self._next_kill]
             self._next_kill += 1
             orphans += self._kill(kill)
+        orphans += self._health_pass(t)
+        self._dispatch_chaos(t)
+        self._terminate_idle(t)
         return self.serving(), orphans
 
     def _kill(self, kill: NodeKill) -> list[PendingQuery]:
@@ -276,9 +363,16 @@ class FleetController:
             # pool): nothing died, and scheduling a restart would later
             # materialize a phantom node the fleet never had
             return []
-        restart = (None if kill.restart_after_s is None
-                   else kill.t_s + kill.restart_after_s)
-        self._dead[kill.key] = restart
+        if kill.restart_after_s is not None:
+            self._dead[kill.key] = kill.t_s + kill.restart_after_s
+        elif node is not None and node.state is not NodeState.DRAINING:
+            # no explicit restart schedule: the heal policy (if any)
+            # decides — this is what the auto-restart-off ablation turns
+            # off.  A DRAINING victim is never healed: the autoscaler
+            # removed it deliberately.
+            self._schedule_restart(kill.key, kill.t_s)
+        else:
+            self._dead[kill.key] = None
         if kill.key in self._order:
             self._order.remove(kill.key)
         if node is None:
@@ -287,6 +381,122 @@ class FleetController:
         orphans = node.backend.cancel_pending(kill.t_s)
         self._graveyard.append(node.backend)
         return orphans
+
+    def _schedule_restart(self, key: tuple, t: float) -> None:
+        """Dead-node disposition under the heal policy: schedule a
+        re-materialization ``backoff`` trace-seconds out while the node's
+        crash-loop budget lasts; past it (or without a policy/factory)
+        the node stays dead."""
+        heal = self.heal
+        if heal is None or self.factory is None:
+            self._dead[key] = None
+            return
+        used = self._restarts.get(key, 0)
+        if used >= heal.max_restarts:
+            self._dead[key] = None       # crash-loop budget exhausted
+            return
+        self._restarts[key] = used + 1
+        self._dead[key] = t + heal.delay_s(used)
+
+    def _node_died(self, key: tuple, t: float) -> list[PendingQuery]:
+        """Retire a node that died *unplanned* (health probe or a failed
+        submit): write the death back to the ledger, surrender its
+        unfinished queries for re-routing, and let the heal policy decide
+        whether it restarts."""
+        node = self._nodes.pop(key, None)
+        if node is None:
+            return []
+        if key in self._order:
+            self._order.remove(key)
+        if self.fleet is not None:
+            try:
+                self.fleet.kill(key[0], key[1])
+            except KeyError:
+                pass
+        self._transition(t, key, NodeState.DEAD)
+        try:
+            orphans = node.backend.cancel_pending(t)
+        except Exception:
+            orphans = []                 # already gone past recovery
+        self._graveyard.append(node.backend)
+        if node.state is NodeState.DRAINING:
+            self._dead[key] = None       # retired anyway; don't revive
+        else:
+            self._schedule_restart(key, t)
+        return orphans
+
+    def node_died(self, key: tuple, t: float) -> list[PendingQuery]:
+        """Public form of the unplanned-death path, for the driver: a
+        ``submit``/poll raised ``BackendDied`` mid-window, before the
+        next health pass would have noticed."""
+        return self._node_died(key, t)
+
+    def _health_pass(self, t: float) -> list[PendingQuery]:
+        """Poll every node's health: dead backends are retired (their
+        orphans re-routed, heal policy deciding on a restart); SUSPECT
+        backends — transport degraded but the process may live — are
+        verified and either cleared back or declared dead."""
+        orphans: list[PendingQuery] = []
+        for key, node in list(self._nodes.items()):
+            b = node.backend
+            try:
+                is_dead = b.dead()
+            except Exception:
+                is_dead = True
+            if is_dead:
+                orphans += self._node_died(key, t)
+                continue
+            if getattr(b, "suspect", False) and node.state in (
+                    NodeState.SERVING, NodeState.DRAINING):
+                prev = node.state
+                node.state = NodeState.SUSPECT
+                self._transition(t, key, NodeState.SUSPECT)
+                verify = getattr(b, "verify", None)
+                if verify is None or verify():
+                    node.state = prev    # false alarm: reinstated
+                    self._transition(t, key, prev)
+                else:
+                    orphans += self._node_died(key, t)
+        return orphans
+
+    def _dispatch_chaos(self, t: float) -> None:
+        """Deliver due chaos injections (a ``ChaosPlan``'s hangs and
+        garbles) to their targets' ``inject_chaos`` hooks.  Backends
+        without the hook (sim, live) have no transport to fault — the
+        injection is a no-op on them."""
+        while (self._next_inject < len(self._injections)
+               and self._injections[self._next_inject].t_s <= t):
+            ev = self._injections[self._next_inject]
+            self._next_inject += 1
+            node = self._nodes.get(ev.key)
+            if node is None:
+                continue                 # target already dead/retired
+            hook = getattr(node.backend, "inject_chaos", None)
+            if callable(hook):
+                hook(ev)
+
+    def _terminate_idle(self, t: float) -> None:
+        """Terminate-after-idle (heal policy): a DRAINING node whose
+        accepted work has all completed is closed *now* — its process /
+        runtime is released mid-run — and recorded DEAD, instead of
+        lingering until the run ends."""
+        if self.heal is None or not self.heal.terminate_idle:
+            return
+        for key, node in list(self._nodes.items()):
+            if node.state is not NodeState.DRAINING:
+                continue
+            try:
+                if not node.backend.idle(t):
+                    continue
+            except Exception:
+                pass                     # unreachable counts as idle
+            self._nodes.pop(key)
+            if key in self._order:
+                self._order.remove(key)
+            node.backend.close()
+            self._graveyard.append(node.backend)
+            self._dead[key] = None
+            self._transition(t, key, NodeState.DEAD)
 
     def finish(self, horizon: float) -> list[PendingQuery]:
         """Apply kills that landed after the last window boundary (their

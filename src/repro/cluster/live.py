@@ -242,6 +242,12 @@ class LiveNodeBackend(NodeBackend):
         self._log_cursor += len(fresh)
         return [self._to_trace(r) for r in fresh]
 
+    def idle(self, t: float) -> bool:
+        """True once the feeder has released everything it accepted and
+        the runtime holds no outstanding query — what terminate-after-idle
+        polls on a DRAINING node before closing it mid-run."""
+        return not self._feeder.unfinished and self.rt.n_pending == 0
+
     def cancel_pending(self, t: float) -> list[PendingQuery]:
         """Kill the node mid-run: stop the feeder pacing queries in, shut
         the ``ServingRuntime`` down (workers abandon their queue), and

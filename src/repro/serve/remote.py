@@ -17,10 +17,15 @@ Wire protocol
     Every message is one *frame*: a 4-byte big-endian length followed by
     that many bytes of JSON.  Frames above ``max_frame`` are rejected
     before the body is read (the stream is then unsyncable, so the worker
-    replies with an error and closes); a connection that dies mid-frame
+    replies with an error and hangs up); a connection that dies mid-frame
     raises ``ProtocolError`` rather than returning a truncated message.
-    The conversation is strict request/reply from a single client — the
-    supervisor process that spawned the worker.
+    The conversation is strict request/reply from a single client at a
+    time — but the worker keeps its listening socket open and *re-accepts*
+    after a connection dies, so a supervisor whose socket desynced (a
+    deadline expired mid-frame) reconnects to the same process and all of
+    its state instead of declaring the node lost.  Submits carry a
+    client-assigned ``seq``: a resubmit after a lost reply is deduplicated
+    on both the sequence number and the query ids, making retry safe.
 
 Verbs (the ``op`` field of each request):
     ``ping``       liveness + pid + completed-count, for health checks;
@@ -35,6 +40,11 @@ Verbs (the ``op`` field of each request):
                    runtime's append-only completion log (O(new));
     ``drain``      block until all accepted work completed;
     ``reset``      fresh runtime + clock for the next benchmark run;
+    ``chaos``      arm a fault-injection behavior for the *next* verb
+                   (``hang``: sleep before replying; ``garble``: junk
+                   bytes before the reply, poisoning the stream;
+                   ``drop``: close the connection without replying) —
+                   the test surface ``cluster.chaos`` drives;
     ``shutdown``   graceful exit (idempotent from the caller's side —
                    after the reply the socket closes and the process ends).
 
@@ -160,9 +170,32 @@ def _pybusy_model(args: list[str]):
     return apply_fn, make_batch
 
 
+def _iosleep_model(args: list[str]):
+    """``iosleep[:us_per_row]`` — per-row sleep with the GIL *released*:
+    an I/O- or accelerator-offload-bound service whose per-node capacity
+    is a property of the node, not of the host's core count.  The chaos
+    benchmark serves this model so that killing half the fleet really
+    removes half the throughput — with a CPU-bound model on a one-core
+    host the survivors inherit the victims' cycles and a node loss
+    costs nothing measurable."""
+    us = float(args[0]) if args else 500.0
+
+    def apply_fn(batch):
+        time.sleep(int(batch["x"].shape[0]) * us * 1e-6)
+        return np.zeros(1, np.float32)
+
+    template = np.zeros((4096, 1), np.float32)
+
+    def make_batch(size: int, model_id: int) -> dict:
+        return {"x": template[:size]}
+
+    return apply_fn, make_batch
+
+
 MODEL_BUILDERS: dict[str, Callable] = {
     "mlp": _mlp_model,
     "pybusy": _pybusy_model,
+    "iosleep": _iosleep_model,
 }
 
 
@@ -199,6 +232,7 @@ class _Worker:
                                  batch_size=self.batch_size,
                                  max_bucket=self.max_bucket)
         self._meta: dict[int, tuple[float, int, int]] = {}
+        self._seen_seqs: set[int] = set()
         # the same pacing machinery LiveNodeBackend runs in-process:
         # release each query into the runtime at its trace arrival
         # instant (errors drop the query; the run continues)
@@ -240,12 +274,23 @@ class _Worker:
             return {"ok": True}
         if op == "submit":
             rows = msg["q"]
+            seq = msg.get("seq")
+            if seq is not None and seq in self._seen_seqs:
+                # a resubmit after a lost reply — the whole window was
+                # already accepted, acknowledge without re-feeding it
+                return {"ok": True, "accepted": 0, "dup": True}
             if self.origin is None and rows:
                 self.origin = time.monotonic() - float(rows[0][1])
+            accepted = 0
             for i, t, size, mid in rows:
+                if int(i) in self._meta:
+                    continue      # qid-level idempotency for seq-less rows
                 self._meta[int(i)] = (float(t), int(size), int(mid))
                 self._feeder.put(float(t), int(i), int(size), int(mid))
-            return {"ok": True, "accepted": len(rows)}
+                accepted += 1
+            if seq is not None:
+                self._seen_seqs.add(seq)
+            return {"ok": True, "accepted": accepted}
         if op == "poll":
             recs = self.rt.completed_log(int(msg.get("cursor", 0)))
             origin = self.origin or 0.0
@@ -270,47 +315,112 @@ class _Worker:
         return {"ok": False, "error": f"unknown op {op!r}"}
 
 
-def serve_worker(model_spec: str, *, host: str = "127.0.0.1", port: int = 0,
-                 n_workers: int = 1, batch_size: int = 32,
-                 max_bucket: int = 256, max_frame: int = MAX_FRAME,
-                 announce=None) -> None:
-    """Host one ``ServingRuntime`` behind the wire protocol: bind, print
-    ``REMOTE_WORKER_PORT=<n>`` (the supervisor's rendezvous), accept the
-    one supervisor connection, serve verbs until shutdown/EOF."""
-    apply_fn, make_batch = build_model(model_spec)
-    srv = socket.create_server((host, port))
-    bound = srv.getsockname()[1]
-    print(f"{PORT_ANNOUNCE}{bound}", file=announce or sys.stdout, flush=True)
-    conn, _ = srv.accept()
-    srv.close()
-    worker = _Worker(apply_fn, make_batch, n_workers=n_workers,
-                     batch_size=batch_size, max_bucket=max_bucket)
+class _ChaosArm:
+    """Armed fault-injection for the next verb on this worker — the
+    server half of the ``chaos`` verb.  One-shot: each armed behavior
+    fires once and disarms."""
+
+    def __init__(self):
+        self.hang_s = 0.0       # sleep this long before the next reply
+        self.garble = False     # junk bytes before the next reply
+        self.drop = False       # close without replying to the next verb
+
+
+def _serve_conn(conn: socket.socket, worker: _Worker, chaos: _ChaosArm,
+                max_frame: int) -> bool:
+    """Serve one client connection to completion.  Returns ``False`` on a
+    graceful ``shutdown`` (the worker process should exit) and ``True``
+    when the connection merely died — EOF, poisoned stream, or an armed
+    ``drop`` — so the caller re-accepts and the same worker state serves
+    the supervisor's reconnect."""
     try:
         while True:
             try:
                 msg = recv_frame(conn, max_frame)
             except ProtocolError as e:
                 # poisoned stream: report (best effort) and hang up —
-                # there is no way to find the next frame boundary
+                # there is no way to find the next frame boundary; the
+                # supervisor reconnects on a fresh stream
                 try:
                     send_frame(conn, {"ok": False, "error": str(e)})
                 except OSError:
                     pass
-                return
-            if msg is None:                 # supervisor hung up
-                return
-            if msg.get("op") == "shutdown":
-                send_frame(conn, {"ok": True})
-                return
+                return True
+            if msg is None:                 # client hung up
+                return True
+            op = msg.get("op")
+            if op == "shutdown":
+                try:
+                    send_frame(conn, {"ok": True})
+                except OSError:
+                    pass
+                return False
+            if op == "chaos":
+                mode = msg.get("mode")
+                if mode == "hang":
+                    chaos.hang_s = float(msg.get("seconds", 1.0))
+                elif mode == "garble":
+                    chaos.garble = True
+                elif mode == "drop":
+                    chaos.drop = True
+                else:
+                    send_frame(conn, {"ok": False,
+                                      "error": f"unknown chaos mode "
+                                               f"{mode!r}"})
+                    continue
+                send_frame(conn, {"ok": True, "armed": mode})
+                continue
+            if chaos.drop:
+                chaos.drop = False
+                return True                 # vanish mid-conversation
             try:
                 reply = worker.handle(msg)
             except Exception as e:          # a failed verb is a reply,
                 reply = {"ok": False,       # not a dead worker
                          "error": f"{type(e).__name__}: {e}"}
+            if chaos.hang_s > 0:
+                hang, chaos.hang_s = chaos.hang_s, 0.0
+                time.sleep(hang)            # client's deadline expires here
+            if chaos.garble:
+                chaos.garble = False
+                conn.sendall(b"\xde\xad\xbe\xef" * 3)   # poison the framing
             send_frame(conn, reply)
+    except OSError:
+        return True                         # connection died under us
+    finally:
+        conn.close()
+
+
+def serve_worker(model_spec: str, *, host: str = "127.0.0.1", port: int = 0,
+                 n_workers: int = 1, batch_size: int = 32,
+                 max_bucket: int = 256, max_frame: int = MAX_FRAME,
+                 slow_start_s: float = 0.0, announce=None) -> None:
+    """Host one ``ServingRuntime`` behind the wire protocol: bind, print
+    ``REMOTE_WORKER_PORT=<n>`` (the supervisor's rendezvous), then accept
+    and serve supervisor connections until a ``shutdown`` verb.  The
+    listening socket stays open between connections: a client whose
+    stream desynced reconnects to the same process — runtime, completion
+    log, and submit-dedup state all survive the transport.
+    ``slow_start_s`` delays the port announce (after the model is built),
+    standing in for a node whose model load is pathologically slow — the
+    chaos harness's slow-start injection."""
+    apply_fn, make_batch = build_model(model_spec)
+    if slow_start_s > 0:
+        time.sleep(slow_start_s)
+    srv = socket.create_server((host, port))
+    bound = srv.getsockname()[1]
+    print(f"{PORT_ANNOUNCE}{bound}", file=announce or sys.stdout, flush=True)
+    worker = _Worker(apply_fn, make_batch, n_workers=n_workers,
+                     batch_size=batch_size, max_bucket=max_bucket)
+    chaos = _ChaosArm()
+    try:
+        while True:
+            conn, _ = srv.accept()
+            if not _serve_conn(conn, worker, chaos, max_frame):
+                return
     finally:
         worker.close()
-        conn.close()
+        srv.close()
 
 
 def main(argv=None) -> None:
@@ -327,10 +437,15 @@ def main(argv=None) -> None:
     ap.add_argument("--batch-size", type=int, default=32)
     ap.add_argument("--max-bucket", type=int, default=256)
     ap.add_argument("--max-frame", type=int, default=MAX_FRAME)
+    ap.add_argument("--slow-start", type=float, default=0.0,
+                    help="sleep this many seconds before announcing the "
+                         "port (chaos harness: a pathologically slow "
+                         "model load)")
     args = ap.parse_args(argv)
     serve_worker(args.model, host=args.host, port=args.port,
                  n_workers=args.workers, batch_size=args.batch_size,
-                 max_bucket=args.max_bucket, max_frame=args.max_frame)
+                 max_bucket=args.max_bucket, max_frame=args.max_frame,
+                 slow_start_s=args.slow_start)
 
 
 if __name__ == "__main__":

@@ -116,6 +116,13 @@ class ServingRuntime:
         """Completed-query count — an O(1) read (plain int, GIL-atomic)."""
         return self._n_done
 
+    @property
+    def n_pending(self) -> int:
+        """Queries accepted but not yet fully completed — the idleness
+        probe terminate-after-idle reads on a draining node."""
+        with self._lock:
+            return len(self._outstanding)
+
     def take_completed(self) -> list[QueryRecord]:
         """Atomically drain the completed-since-last-call buffer, in
         completion order.  This is the control loop's feed: per-query

@@ -4,9 +4,10 @@ canned device curves (tier-1 budget)."""
 import numpy as np
 import pytest
 
-from repro.cluster import (Autoscaler, DiurnalTraffic, Fleet, FleetController,
-                           FleetFaults, MultiTenantTraffic, NodeKill,
-                           NodeSpec, NodeState, Pool, PredictiveAutoscaler,
+from repro.cluster import (Autoscaler, BackendDied, DiurnalTraffic, Fleet,
+                           FleetController, FleetFaults, MultiTenantTraffic,
+                           NodeKill, NodeSpec, NodeState, Pool,
+                           PredictiveAutoscaler, SelfHealPolicy,
                            SimNodeBackend, StationaryTraffic, cluster_max_qps,
                            drive_fleet, make_router, simulate_fleet)
 from repro.cluster.fleet import NodeView
@@ -531,3 +532,210 @@ def test_cluster_max_qps_explicit_hi_is_bracket_not_ceiling():
     low_hi = cluster_max_qps(fleet, make_router("round_robin"), 100.0,
                              n_queries=300, iters=7, hi=cold * 0.3)
     assert low_hi >= 0.9 * cold, (low_hi, cold)
+
+
+# ----------------------------------------------------------- self-healing
+
+
+def test_self_heal_restarts_killed_node_through_boot():
+    """A kill with no restart schedule, under a SelfHealPolicy: the node
+    auto-restarts through BOOTING and serves again; without the policy
+    (the ablation) it stays dead."""
+    t, s = _trace(n=300, qps=800.0)
+    kills = FleetFaults(kills=(NodeKill(0.1, "sky", 0),))
+    healed = simulate_fleet(t, s, _fleet(n=2, boot_s=0.1),
+                            make_router("round_robin"), window_s=0.05,
+                            fleet_faults=kills,
+                            self_heal=SelfHealPolicy(backoff_s=0.0))
+    seq = [e.state for e in healed.lifecycle
+           if (e.pool, e.index_in_pool) == ("sky", 0)]
+    i = seq.index(NodeState.DEAD)
+    assert seq[i + 1:i + 3] == [NodeState.BOOTING, NodeState.SERVING]
+    assert healed.dropped == 0
+    ablation = simulate_fleet(t, s, _fleet(n=2, boot_s=0.1),
+                              make_router("round_robin"), window_s=0.05,
+                              fleet_faults=kills)
+    seq = [e.state for e in ablation.lifecycle
+           if (e.pool, e.index_in_pool) == ("sky", 0)]
+    assert seq[-1] is NodeState.DEAD         # no policy: stays dead
+    assert ablation.n_nodes == 1
+
+
+def test_self_heal_budget_exhausted_stays_dead():
+    """Crash-loop protection: a node that keeps dying is restarted at
+    most max_restarts times, then left dead."""
+    t, s = _trace(n=300, qps=800.0)
+    kills = FleetFaults(kills=(NodeKill(0.05, "sky", 0),
+                               NodeKill(0.15, "sky", 0),
+                               NodeKill(0.25, "sky", 0)))
+    r = simulate_fleet(t, s, _fleet(n=2), make_router("round_robin"),
+                       window_s=0.05, fleet_faults=kills,
+                       self_heal=SelfHealPolicy(max_restarts=1,
+                                                backoff_s=0.0))
+    seq = [e.state for e in r.lifecycle
+           if (e.pool, e.index_in_pool) == ("sky", 0)]
+    assert seq.count(NodeState.DEAD) == 2    # original + one revival died
+    assert seq[-1] is NodeState.DEAD
+    assert r.n_nodes == 1
+
+
+def test_self_heal_backoff_delays_restart():
+    fleet = _fleet(n=2)
+    ctrl = FleetController(
+        fleet=fleet, factory=SimNodeBackend,
+        faults=FleetFaults(kills=(NodeKill(0.1, "sky", 0),)),
+        heal=SelfHealPolicy(backoff_s=0.2))
+    ctrl.start(0.0)
+    serving, _ = ctrl.begin_window(0.1)      # kill lands; due at 0.1+0.2
+    assert len(serving) == 1
+    serving, _ = ctrl.begin_window(0.2)
+    assert len(serving) == 1                 # still backing off
+    serving, _ = ctrl.begin_window(0.3)
+    assert len(serving) == 2                 # revived
+
+
+class _DiesOnSubmit(SimNodeBackend):
+    """A sim node whose submit starts raising BackendDied at ``die_at`` —
+    the driver's mid-window unplanned-death path."""
+
+    def __init__(self, view, die_at=np.inf):
+        super().__init__(view)
+        self.die_at = die_at
+        self._dead_flag = False
+
+    def submit(self, idx, times, sizes, model_ids=None):
+        if len(times) and float(times[-1]) >= self.die_at:
+            self._dead_flag = True
+            raise BackendDied(f"node {self.key}: died mid-submit")
+        return super().submit(idx, times, sizes, model_ids)
+
+    def dead(self) -> bool:
+        return self._dead_flag
+
+
+def test_mid_submit_death_rerouted_to_survivor():
+    """A backend raising BackendDied inside submit is retired through the
+    controller and its queries — the failed batch plus everything it had
+    accepted — land on the survivor, not the floor."""
+    times, sizes = _trace(n=300, qps=1500.0)
+    views = _views(2)
+    backends = [_DiesOnSubmit(views[0], die_at=0.1), SimNodeBackend(views[1])]
+    r = drive_fleet(times, sizes, backends, make_router("round_robin"),
+                    window_s=0.05)
+    assert r.dropped == 0 and r.rerouted > 0
+    assert any(e.state is NodeState.DEAD and e.index_in_pool == 0
+               for e in r.lifecycle)
+    surv = {rec.index for rec in backends[1].completed_records()}
+    dead_idx = {rec.index for rec in backends[0].completed_records()}
+    assert surv | dead_idx == set(range(300))
+
+
+class _Flaky(SimNodeBackend):
+    """Transport-degraded stand-in: suspect flag + a controllable verify
+    verdict (the SUSPECT → verify → reinstate/retire path)."""
+
+    def __init__(self, view):
+        super().__init__(view)
+        self.suspect = False
+        self.verify_ok = True
+
+    def verify(self, timeout: float = 5.0) -> bool:
+        return self.verify_ok
+
+
+def test_suspect_node_verified_and_reinstated():
+    views = _views(2)
+    backends = [_Flaky(views[0]), SimNodeBackend(views[1])]
+    ctrl = FleetController(backends=backends)
+    ctrl.start(0.0)
+    backends[0].suspect = True               # transport hiccup, false alarm
+    serving, orphans = ctrl.begin_window(0.1)
+    assert len(serving) == 2 and not orphans
+    states = [e.state for e in ctrl.events if e.index_in_pool == 0]
+    assert states[-2:] == [NodeState.SUSPECT, NodeState.SERVING]
+    backends[0].suspect = True
+    backends[0].verify_ok = False            # verify fails: really gone
+    serving, _ = ctrl.begin_window(0.2)
+    assert len(serving) == 1
+    states = [e.state for e in ctrl.events if e.index_in_pool == 0]
+    assert states[-2:] == [NodeState.SUSPECT, NodeState.DEAD]
+
+
+def test_terminate_idle_closes_draining_node():
+    """Under terminate_idle, a DRAINING node whose work is done is closed
+    mid-run (DEAD) instead of lingering to the end; without the policy it
+    lingers (the shrink-then-regrow revival contract depends on that)."""
+    fleet = _fleet(n=2, max_count=4)
+    ctrl = FleetController(fleet=fleet, factory=SimNodeBackend,
+                           heal=SelfHealPolicy(terminate_idle=True))
+    ctrl.start(0.0)
+    fleet.scale("sky", -1)
+    ctrl.reconcile(0.5)
+    assert ctrl.states()[("sky", 1)] is NodeState.DRAINING
+    ctrl.begin_window(1.0)                   # no accepted work: idle now
+    assert ctrl.states()[("sky", 1)] is NodeState.DEAD
+    assert ("sky", 1) not in ctrl._nodes     # actually retired, not lingering
+    # regrowth after termination materializes a *fresh* node (cold boot),
+    # not a revived ghost
+    fleet.scale("sky", +1)
+    serving, _ = ctrl.begin_window(2.0)
+    assert len(serving) == 2
+
+
+def test_draining_node_with_pending_work_not_terminated():
+    times, sizes = _trace(n=200, qps=500.0)
+    fleet = _fleet(n=2, max_count=4)
+    ctrl = FleetController(fleet=fleet, factory=SimNodeBackend,
+                           heal=SelfHealPolicy(terminate_idle=True))
+    ctrl.start(0.0)
+    serving, _ = ctrl.begin_window(0.0)
+    # load node 1 with work completing well past the drain point
+    serving[1].submit(np.arange(100), times[:100], np.full(100, 256))
+    fleet.scale("sky", -1)
+    ctrl.reconcile(0.1)
+    ctrl.begin_window(0.15)                  # still finishing: not closed
+    assert ctrl.states()[("sky", 1)] is NodeState.DRAINING
+    ctrl.begin_window(1e9)                   # all work long done
+    assert ctrl.states()[("sky", 1)] is NodeState.DEAD
+
+
+def test_timeline_carries_driver_stall_column():
+    """Fast-path timeline rows grow a ctl_s column (wall seconds of
+    driver control work per window) read via driver_stall_s()."""
+    times, sizes = _trace(n=200, qps=800.0)
+    r = drive_fleet(times, sizes, [SimNodeBackend(v) for v in _views(2)],
+                    make_router("round_robin"), window_s=0.05)
+    stalls = r.driver_stall_s()
+    assert len(stalls) == len(r.timeline) > 1
+    assert all(x >= 0.0 for x in stalls)
+    for row in r.timeline:                   # existing columns unmoved
+        assert len(row) == 6 and row[4] > 0
+
+
+def test_chaos_plan_schedule_and_kill_compat():
+    """ChaosPlan is a FleetFaults superset: kills flow through the same
+    controller path; hangs+garbles come out of injections() in trace
+    order; slow starts answer by node key."""
+    from repro.cluster import ChaosPlan, FrameGarble, RpcHang, SlowStart
+    from repro.cluster.chaos import crash_storm
+
+    plan = ChaosPlan(
+        kills=crash_storm(0.3, "sky", [0, 2]),
+        hangs=(RpcHang(0.4, "sky", 1, hang_s=2.0),),
+        garbles=(FrameGarble(0.2, "sky", 1),
+                 FrameGarble(0.5, "sky", 0, drop=True)),
+        slow_starts=(SlowStart("sky", 2, extra_s=1.5),))
+    assert isinstance(plan, FleetFaults)
+    assert [k.key for k in plan.kills] == [("sky", 0), ("sky", 2)]
+    inj = plan.injections()
+    assert [e.t_s for e in inj] == [0.2, 0.4, 0.5]
+    assert [e.mode for e in inj] == ["garble", "hang", "drop"]
+    assert plan.slow_start_s("sky", 2) == 1.5
+    assert plan.slow_start_s("sky", 0) == 0.0
+    # a ChaosPlan drives the sim engine too: kills work, injections are
+    # silently ignored by backends without a transport to fault
+    t, s = _trace(n=200, qps=800.0)
+    r = simulate_fleet(t, s, _fleet(n=3), make_router("round_robin"),
+                      window_s=0.05, fleet_faults=plan,
+                      self_heal=SelfHealPolicy(backoff_s=0.0))
+    assert r.dropped == 0
