@@ -272,6 +272,15 @@ def main() -> None:
          f"p95={ablation.p95_ms:.1f}v{healed.p95_ms:.1f}ms;"
          f"target>1.25x;{'PASS' if ok else 'FAIL'}")
 
+    # informational: the storm's error surface, per run — worker errors
+    # are first-class on ClusterResult, so a release artifact records
+    # which nodes took the damage, not just the aggregate
+    for name, r in (("healed", healed), ("ablation", ablation)):
+        by_node = ";".join(f"{k}={v}"
+                           for k, v in sorted(r.errors_by_node.items()))
+        emit(f"chaos/{name}/error_rate", r.error_rate,
+             f"errors={r.errors};by_node[{by_node}]")
+
 
 if __name__ == "__main__":
     main()

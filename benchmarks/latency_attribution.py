@@ -1,0 +1,239 @@
+"""Latency attribution: the telemetry acceptance gate across all three
+engines (paper §IV — understanding *where* tail latency comes from is
+what makes the scheduler's batching/offload decisions explainable).
+
+Four gates on one canned two-pool scenario:
+
+  * **sim reconcile** — drive the sim engine with ``telemetry=True`` and
+    check the per-percentile decomposition closes against measured
+    end-to-end latency within 5% at p50/p95/p99 (the sim fills spans
+    analytically from the Lindley recursion, so this is near-exact);
+  * **live reconcile** — same trace through real ``ServingRuntime``
+    threads with wall-clock stamps; same 5% closure bar;
+  * **overhead** — the telemetry-on sim run must cost ≤5% wall-clock
+    over ``telemetry=off`` (repeated-min timing), enforcing the
+    "observability is free enough to leave on" claim;
+  * **chaos attribution** — a remote mini-fleet (real worker processes)
+    under a scripted hang + crash storm must show measurably nonzero
+    ``retry`` and ``reroute`` span time where the calm run of the same
+    trace shows none — the decomposition attributes fault-handling
+    time, not just queueing/service.
+
+The chaos run's full telemetry artifact (JSON-lines: run summary,
+windows, attribution, per-node errors) is written to
+``$REPRO_ARTIFACTS/latency_attribution.jsonl`` — what the CI smoke step
+uploads and ``python -m repro.obs.dump`` pretty-prints.
+
+``LAT_ATTR_WORKERS`` / ``LAT_ATTR_QUERIES`` / ``LAT_ATTR_REPEATS`` scale
+the suite down for CI smoke runs (bars unchanged).
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+
+from benchmarks.common import ART, emit
+from repro.cluster import (BucketedDeviceModel, ChaosPlan, Fleet, NodeSpec,
+                           Pool, RpcHang, WallClock, crash_storm, drive_fleet,
+                           live_node, make_router, sim_backends)
+from repro.cluster.remote import RemoteBackendFactory, WorkerSupervisor
+from repro.obs import write_jsonl
+
+SEED = 0
+TOL = 0.05                                   # closure + overhead bar
+N_QUERIES = int(os.environ.get("LAT_ATTR_QUERIES", "4000"))
+N_WORKERS = int(os.environ.get("LAT_ATTR_WORKERS", "2"))
+N_REPEATS = int(os.environ.get("LAT_ATTR_REPEATS", "3"))
+RPC_TIMEOUT, RPC_RETRIES, HANG_S = 0.4, 3, 1.0
+
+
+def _canned(service_s: float) -> BucketedDeviceModel:
+    return BucketedDeviceModel(np.array([1, 2, 4, 8, 16, 32, 64]),
+                               np.full(7, service_s))
+
+
+def _trace(n: int, horizon: float, rng) -> tuple[np.ndarray, np.ndarray]:
+    times = np.sort(rng.uniform(0.0, horizon, n))
+    sizes = rng.integers(1, 17, n).astype(np.int64)
+    return times, sizes
+
+
+def _sim_fleet(count: int) -> Fleet:
+    spec = NodeSpec(cpu=_canned(2e-4), n_executors=2, batch_size=16,
+                    request_overhead_s=0.0)
+    return Fleet([Pool("cpu", spec, count=count)])
+
+
+def _sim_run(times, sizes, *, telemetry: bool):
+    fleet = _sim_fleet(4)
+    return drive_fleet(times, sizes, sim_backends(fleet.node_views()),
+                       make_router("least_outstanding"), window_s=0.5,
+                       telemetry=telemetry)
+
+
+def _reconcile_row(name: str, report) -> None:
+    ok = report.reconciles(TOL)
+    worst = max(abs(r.component_sum_s - r.band_latency_s)
+                / max(abs(r.band_latency_s), 1e-12)
+                for r in report.percentiles)
+    p95 = report.at(95.0)
+    shares = ";".join(f"{k}={v * 1e3:.2f}ms"
+                      for k, v in p95.components_s.items() if v > 1e-6)
+    emit(f"lat_attr/{name}/reconcile", worst * 100.0,
+         f"tol={TOL * 100:.0f}%;n={report.n_completed};p95[{shares}];"
+         f"{'PASS' if ok else 'FAIL'}")
+
+
+def _gate_sim(rng) -> None:
+    times, sizes = _trace(N_QUERIES, max(N_QUERIES / 2000.0, 1.0), rng)
+    r = _sim_run(times, sizes, telemetry=True)
+    _reconcile_row("sim", r.telemetry.attribution())
+
+    # overhead: telemetry on vs off on the same trace.  Floored at 50k
+    # queries regardless of the smoke-scale knob and offered at an
+    # at-scale 12k QPS (the claim is amortized per-query cost — the
+    # fixed per-window registry cost must wash out against a loaded
+    # fleet, not against near-idle windows).  Each round times one off
+    # and one on run back-to-back in process CPU time (the driver is
+    # single-threaded and CPU-bound) with the order alternating to
+    # cancel drift, and the gate ratio is the *median* of the per-round
+    # ratios: on a shared host single runs swing ±10-20%, but the
+    # adjacent pair shares the same scheduler weather and the median
+    # discards the rounds an interrupt landed in (off-vs-off nulls
+    # measure ~1.00 under this protocol)
+    n_ovh = max(N_QUERIES, 50_000)
+    ot, osz = _trace(n_ovh, n_ovh / 12_000.0, rng)
+    _sim_run(ot, osz, telemetry=True)       # warm both paths
+    _sim_run(ot, osz, telemetry=False)
+
+    def timed(tel_on: bool) -> float:
+        t0 = time.process_time()
+        _sim_run(ot, osz, telemetry=tel_on)
+        return time.process_time() - t0
+
+    ratios, secs = [], {False: [], True: []}
+    for i in range(max(8 * N_REPEATS, 16)):
+        order = (False, True) if i % 2 == 0 else (True, False)
+        t_by = {}
+        for tel_on in order:
+            t_by[tel_on] = timed(tel_on)
+            secs[tel_on].append(t_by[tel_on])
+        ratios.append(t_by[True] / max(t_by[False], 1e-12))
+    ratio = float(np.median(ratios))
+    ok = ratio <= 1.0 + TOL
+    emit("lat_attr/sim/overhead_ratio", ratio,
+         f"on={min(secs[True]) * 1e3:.1f}ms;"
+         f"off={min(secs[False]) * 1e3:.1f}ms;rounds={len(ratios)};"
+         f"n={n_ovh};target<={1.0 + TOL:.2f};{'PASS' if ok else 'FAIL'}")
+
+
+def _gate_live(rng) -> None:
+    """Real runtime threads: a sleepy apply_fn with a matching canned
+    curve skips calibration and keeps the suite's live slice ~2s."""
+    service_s = 2e-3
+    n = max(N_QUERIES // 20, 120)
+    times, sizes = _trace(n, max(n / 120.0, 1.0), rng)
+
+    def apply_fn(batch):
+        time.sleep(service_s)
+        return batch["x"].sum()
+
+    def make_batch(size: int, model_id: int) -> dict:
+        return {"x": np.ones(size, np.float32)}
+
+    clock = WallClock()
+    backends = [live_node(apply_fn, make_batch, pool="live", index_in_pool=i,
+                          device=_canned(service_s), batch_size=16,
+                          max_bucket=64, clock=clock) for i in range(2)]
+    try:
+        r = drive_fleet(times, sizes, backends, make_router("round_robin"),
+                        window_s=0.25, telemetry=True)
+    finally:
+        for b in backends:
+            b.close()
+    _reconcile_row("live", r.telemetry.attribution())
+
+
+def _remote_run(times, sizes, plan):
+    # ~100ms of GIL-held work per query against per-node arrivals of the
+    # same order: the kill lands on a node that still has a queue, so
+    # the storm orphans real work (same sizing as the remote tier tests)
+    clock = WallClock()
+    with WorkerSupervisor() as sup:
+        factory = RemoteBackendFactory(
+            "pybusy:200000", sup, device=_canned(1e-1), batch_size=16,
+            max_bucket=64, clock=clock, chaos=plan,
+            rpc_timeout=RPC_TIMEOUT, rpc_retries=RPC_RETRIES)
+        spec = NodeSpec(cpu=_canned(1e-1), n_executors=1, batch_size=16,
+                        request_overhead_s=0.0)
+        fleet = Fleet([Pool("remote", spec, count=N_WORKERS)])
+        try:
+            return drive_fleet(times, sizes, None,
+                               make_router("round_robin"), window_s=0.25,
+                               fleet=fleet, factory=factory,
+                               fleet_faults=plan, telemetry=True,
+                               drain_timeout=60)
+        finally:
+            factory.close()
+
+
+def _gate_chaos(rng) -> None:
+    """Chaos vs calm on the same trace: the storm's fault-handling time
+    must land in the retry/reroute components, and only there."""
+    horizon = 2.0
+    n = 30
+    times, sizes = _trace(n, horizon, rng)
+    # a burst just before the kill so the victim dies with a queue —
+    # real orphans to re-route (same discipline as the chaos suite)
+    t_kill = 0.5 * horizon
+    burst_t = rng.uniform(t_kill - 0.25, t_kill - 1e-3, 10)
+    burst_s = rng.integers(1, 17, len(burst_t)).astype(np.int64)
+    order = np.argsort(np.concatenate([times, burst_t]), kind="stable")
+    times = np.concatenate([times, burst_t])[order]
+    sizes = np.concatenate([sizes, burst_s])[order]
+
+    plan = ChaosPlan(
+        kills=crash_storm(t_kill, "remote", [0]),
+        hangs=(RpcHang(0.25 * horizon, "remote",
+                       min(1, N_WORKERS - 1), hang_s=HANG_S),))
+    chaos = _remote_run(times, sizes, plan)
+    calm = _remote_run(times, sizes, None)
+
+    def fault_s(r) -> tuple[float, float]:
+        st = r.telemetry.spans
+        comps = st.components()
+        ok = st.completed
+        return (float(comps["retry"][ok].sum()),
+                float(comps["reroute"][ok].sum()))
+
+    retry_c, reroute_c = fault_s(chaos)
+    retry_0, reroute_0 = fault_s(calm)
+    ok = (retry_c > 0.0 and reroute_c > 0.0
+          and retry_0 == 0.0 and reroute_0 == 0.0)
+    plan_s = ";".join(f"{k}={v}" for k, v in plan.summary().items() if v)
+    emit("lat_attr/chaos/retry_s", retry_c,
+         f"calm={retry_0:.3f};plan[{plan_s}];{'PASS' if ok else 'FAIL'}")
+    emit("lat_attr/chaos/reroute_s", reroute_c,
+         f"calm={reroute_0:.3f};rerouted={chaos.rerouted};"
+         f"dropped={chaos.dropped};{'PASS' if ok else 'FAIL'}")
+    emit("lat_attr/chaos/error_rate", chaos.error_rate,
+         f"errors={chaos.errors};nodes_with_errors="
+         f"{len(chaos.errors_by_node)}")
+
+    os.makedirs(ART, exist_ok=True)
+    path = os.path.join(ART, "latency_attribution.jsonl")
+    n_lines = write_jsonl(chaos, path)
+    emit("lat_attr/artifact_lines", n_lines, path)
+
+
+def main() -> None:
+    rng = np.random.default_rng(SEED)
+    _gate_sim(rng)
+    _gate_live(rng)
+    _gate_chaos(rng)
+
+
+if __name__ == "__main__":
+    main()

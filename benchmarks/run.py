@@ -33,8 +33,19 @@ SUITES = [
     ("live_parity", "benchmarks.live_parity"),
     ("remote_scaling", "benchmarks.remote_scaling"),
     ("chaos", "benchmarks.chaos"),
+    ("latency_attribution", "benchmarks.latency_attribution"),
     ("roofline_report", "benchmarks.roofline_report"),
 ]
+
+
+def _git_sha() -> str | None:
+    import subprocess
+    try:
+        out = subprocess.run(["git", "rev-parse", "HEAD"],
+                             capture_output=True, text=True, timeout=10)
+        return out.stdout.strip() or None if out.returncode == 0 else None
+    except OSError:
+        return None
 
 
 def main() -> None:
@@ -73,8 +84,10 @@ def main() -> None:
         t0 = time.time()
         seen = len(rows())
         ok = True
+        mod = None
         try:
-            importlib.import_module(module).main()
+            mod = importlib.import_module(module)
+            mod.main()
             print(f"# {name} done in {time.time()-t0:.1f}s", flush=True)
         except Exception:
             traceback.print_exc()
@@ -83,12 +96,19 @@ def main() -> None:
         report[name] = {
             "ok": ok,
             "seconds": round(time.time() - t0, 3),
+            # suites pin their rng seed in a module-level SEED so a JSON
+            # artifact identifies the exact run it reports
+            "seed": getattr(mod, "SEED", None),
             "rows": [{"name": r[0], "us_per_call": r[1], "derived": r[2]}
                      for r in rows()[seen:]],
         }
     if args.json:
+        meta = {"git_sha": _git_sha(),
+                "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S%z"),
+                "argv": sys.argv[1:]}
         with open(args.json, "w") as f:
-            json.dump({"suites": report, "failures": failures}, f, indent=1)
+            json.dump({"meta": meta, "suites": report,
+                       "failures": failures}, f, indent=1)
         print(f"# wrote {args.json}")
     soft_fails = [r["name"] for s in report.values() for r in s["rows"]
                   if "FAIL" in r["derived"]] if args.strict else []

@@ -75,7 +75,7 @@ def main() -> None:
                             autoscaler=scaler)
 
     print(f"\n{'t(s)':>5s} {'offered':>8s} {'nodes':>6s} {'p95(ms)':>8s}")
-    for t0, offered, n_nodes, p95, _ in r_auto.timeline[::3]:
+    for t0, offered, n_nodes, p95, *_ in r_auto.timeline[::3]:
         bar = "#" * int(p95 / SLA_MS * 20)
         print(f"{t0:5.0f} {offered:8.0f} {n_nodes:6d} {p95:8.1f} {bar}")
 

@@ -78,6 +78,12 @@ class CompletedQuery:
     t_done: float               # NaN = dropped / never completed
     model_id: int = -1          # tenant label; -1 = unlabeled traffic
     error: str | None = None    # live only: the apply_fn failure, if any
+    # span stamps (trace time; NaN = engine did not stamp): when the
+    # query was released into the node's executor queue, and when an
+    # executor first picked it up — what the obs layer's queueing/service
+    # decomposition is built from
+    t_released: float = float("nan")
+    t_exec_start: float = float("nan")
 
     @property
     def latency_ms(self) -> float:
@@ -119,6 +125,14 @@ class NodeBackend:
         """Anchor the backend's timeline at trace time ``t0`` (live
         backends pin the shared wall clock here; sim backends need
         nothing — their free times were seeded at construction)."""
+
+    def enable_spans(self) -> None:
+        """Ask the backend to produce span stamps (``t_released``/
+        ``t_exec_start`` on its ``CompletedQuery`` records) from here on.
+        Idempotent; the default is a no-op — live/remote backends always
+        stamp (the wall clock is already being read), while
+        ``SimNodeBackend`` computes exec-starts only when asked so the
+        telemetry-off driver costs exactly what it did before."""
 
     def submit(self, idx: np.ndarray, times: np.ndarray, sizes: np.ndarray,
                model_ids: np.ndarray | None = None) -> np.ndarray | None:
@@ -208,36 +222,72 @@ class SimNodeBackend(NodeBackend):
         self.cfg = view.spec.scheduler_config()
         self.cpu_free = np.full(self.spec.n_executors, float(t0))
         self.acc_free = np.full(self.spec.n_accelerators, float(t0))
+        # (idx, times, done, sizes, model_ids, exec_start-or-None)
         self._chunks: list[tuple[np.ndarray, np.ndarray, np.ndarray,
-                                 np.ndarray, np.ndarray | None]] = []
+                                 np.ndarray, np.ndarray | None,
+                                 np.ndarray | None]] = []
         self._killed = False
+        self._spans = False
+
+    def enable_spans(self) -> None:
+        self._spans = True
 
     def submit(self, idx: np.ndarray, times: np.ndarray, sizes: np.ndarray,
                model_ids: np.ndarray | None = None) -> np.ndarray:
         if self._killed:
             raise RuntimeError(f"node {self.key} is dead (cancel_pending "
                                f"was called) — it accepts no new queries")
-        done, _, _, self.cpu_free, self.acc_free = node_pass(
-            times, sizes, self.spec.cpu, self.cfg, accel=self.spec.accel,
-            cpu_free=self.cpu_free, acc_free=self.acc_free)
+        if self._spans:
+            done, _, _, self.cpu_free, self.acc_free, starts = node_pass(
+                times, sizes, self.spec.cpu, self.cfg,
+                accel=self.spec.accel, cpu_free=self.cpu_free,
+                acc_free=self.acc_free, want_starts=True)
+        else:
+            done, _, _, self.cpu_free, self.acc_free = node_pass(
+                times, sizes, self.spec.cpu, self.cfg, accel=self.spec.accel,
+                cpu_free=self.cpu_free, acc_free=self.acc_free)
+            starts = None
         self._chunks.append((np.asarray(idx), np.asarray(times, float),
-                             done, np.asarray(sizes, np.int64), model_ids))
+                             done, np.asarray(sizes, np.int64), model_ids,
+                             starts))
         return done
 
     def completed_records(self) -> list[CompletedQuery]:
         out = []
-        for idx, times, done, _, mids in self._chunks:
+        for idx, times, done, _, mids, starts in self._chunks:
             for j in range(len(idx)):
                 out.append(CompletedQuery(
                     index=int(idx[j]), t_arrival=float(times[j]),
                     t_done=float(done[j]),
-                    model_id=int(mids[j]) if mids is not None else -1))
+                    model_id=int(mids[j]) if mids is not None else -1,
+                    t_released=float(times[j]),
+                    t_exec_start=float(starts[j]) if starts is not None
+                    else float("nan")))
         return out
+
+    def span_arrays(self) -> tuple[np.ndarray, np.ndarray, np.ndarray,
+                                   np.ndarray]:
+        """Vectorized span stamps for every query this node served:
+        ``(global_idx, t_released, t_exec_start, t_done)``.  A simulated
+        query is released the instant it arrives (the analytic pipeline
+        has no batching delay), so ``t_released`` is the submit-time
+        arrival; ``t_exec_start`` is NaN for chunks served before
+        ``enable_spans``."""
+        if not self._chunks:
+            z = np.empty(0)
+            return z.astype(np.int64), z, z, z
+        idx = np.concatenate([c[0] for c in self._chunks]).astype(np.int64)
+        rel = np.concatenate([c[1] for c in self._chunks])
+        done = np.concatenate([c[2] for c in self._chunks])
+        start = np.concatenate([
+            c[5] if c[5] is not None else np.full(len(c[0]), np.nan)
+            for c in self._chunks])
+        return idx, rel, start, done
 
     def idle(self, t: float) -> bool:
         """All analytic completions at or before ``t`` (NaN drops never
         complete and never will — they don't hold the node open)."""
-        return all(not np.any(done > t) for _, _, done, _, _ in self._chunks)
+        return all(not np.any(c[2] > t) for c in self._chunks)
 
     def cancel_pending(self, t: float) -> list[PendingQuery]:
         """A simulated kill at trace time ``t``: the analytically computed
@@ -247,7 +297,7 @@ class SimNodeBackend(NodeBackend):
         self._killed = True
         orphans: list[PendingQuery] = []
         kept = []
-        for idx, times, done, sizes, mids in self._chunks:
+        for idx, times, done, sizes, mids, starts in self._chunks:
             alive = done <= t            # NaN compares False → orphaned
             for j in np.flatnonzero(~alive):
                 orphans.append(PendingQuery(
@@ -257,7 +307,8 @@ class SimNodeBackend(NodeBackend):
             if alive.any():
                 kept.append((idx[alive], times[alive], done[alive],
                              sizes[alive],
-                             mids[alive] if mids is not None else None))
+                             mids[alive] if mids is not None else None,
+                             starts[alive] if starts is not None else None))
         self._chunks = kept
         return orphans
 

@@ -109,6 +109,14 @@ class ChaosPlan(FleetFaults):
                 return float(s.extra_s)
         return 0.0
 
+    def summary(self) -> dict[str, int]:
+        """Fault counts by kind — stamped into telemetry artifacts so a
+        run's observed retry/re-route attribution can be read against
+        the storm that produced it."""
+        return {"kills": len(self.kills), "hangs": len(self.hangs),
+                "garbles": len(self.garbles),
+                "slow_starts": len(self.slow_starts)}
+
 
 def crash_storm(t_s: float, pool: str, indices, *,
                 restart_after_s: float | None = None

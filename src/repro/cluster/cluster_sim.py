@@ -59,6 +59,8 @@ from repro.core.simulator import (SUSTAIN_FRACTION, FaultConfig,
                                   _fast_eligible, bracket_bisect,
                                   event_done_times, latency_percentiles_ms,
                                   warm_bracket)
+from repro.obs import (FleetTimeline, MetricsRegistry, RunTelemetry,
+                       SpanTable, observe_fanout)
 
 
 @dataclasses.dataclass
@@ -107,6 +109,19 @@ class ClusterResult:
     # node state transitions (BOOTING/SERVING/DRAINING/DEAD) on the trace
     # timeline, from the lifecycle controller
     lifecycle: list[LifecycleEvent] = dataclasses.field(default_factory=list)
+    # per-node apply_fn failure counts ("pool[idx]" → count), first-class
+    # regardless of the telemetry switch — `errors` is their sum
+    errors_by_node: dict[str, int] = dataclasses.field(default_factory=dict)
+    # drive_fleet(telemetry=True): spans + metrics registry + per-window
+    # timeline (repro.obs.RunTelemetry); None with the kill switch off
+    telemetry: RunTelemetry | None = None
+
+    @property
+    def error_rate(self) -> float:
+        """Errored fraction of the offered trace (errors also count as
+        dropped — an errored query was never actually served)."""
+        total = self.n_queries + self.dropped
+        return self.errors / total if total else 0.0
 
     def meets(self, sla_ms: float) -> bool:
         return self.p95_ms <= sla_ms and self.dropped == 0
@@ -131,7 +146,9 @@ def _result(times: np.ndarray, done: np.ndarray, pool_of: np.ndarray,
             events: list, timeline: list,
             model_ids: np.ndarray | None = None,
             errors: int = 0, rerouted: int = 0,
-            lifecycle: list | None = None) -> ClusterResult:
+            lifecycle: list | None = None,
+            errors_by_node: dict[str, int] | None = None,
+            telemetry: RunTelemetry | None = None) -> ClusterResult:
     completed = ~np.isnan(done)
     n_done = int(completed.sum())
     per_pool = {}
@@ -152,7 +169,8 @@ def _result(times: np.ndarray, done: np.ndarray, pool_of: np.ndarray,
     if n_done == 0:
         return ClusterResult(0, 0, 0, 0, 0, 0, len(times), n_nodes,
                              node_hours, per_pool, events, timeline,
-                             per_model, errors, rerouted, lifecycle or [])
+                             per_model, errors, rerouted, lifecycle or [],
+                             errors_by_node or {}, telemetry)
     lats = done[completed] - times[completed]
     dur = float(done[completed].max()) - float(times[0])
     p50, p95, p99, mean = latency_percentiles_ms(lats)
@@ -163,7 +181,8 @@ def _result(times: np.ndarray, done: np.ndarray, pool_of: np.ndarray,
         n_nodes=n_nodes, node_hours=node_hours,
         per_pool=per_pool, events=events, timeline=timeline,
         per_model=per_model, errors=errors, rerouted=rerouted,
-        lifecycle=lifecycle or [])
+        lifecycle=lifecycle or [], errors_by_node=errors_by_node or {},
+        telemetry=telemetry)
 
 
 def _window_grid(times: np.ndarray, window_s: float | None
@@ -192,7 +211,8 @@ def drive_fleet(times: np.ndarray, sizes: np.ndarray,
                 model_ids: np.ndarray | None = None,
                 fleet_faults: FleetFaults | None = None,
                 self_heal: SelfHealPolicy | None = None,
-                drain_timeout: float = 120.0) -> ClusterResult:
+                drain_timeout: float = 120.0,
+                telemetry: bool = False) -> ClusterResult:
     """Run one trace through a fleet of node backends.  ``times`` must be
     sorted; ``model_ids`` (optional) labels each query with its tenant and
     is threaded through both the router and ``NodeBackend.submit``.
@@ -231,6 +251,14 @@ def drive_fleet(times: np.ndarray, sizes: np.ndarray,
     (``advance_to``) while the wall clock catches up, and completions are
     collected from ``completed_records`` after a final drain.  Mixed
     fleets are rejected — one timeline cannot be both virtual and real.
+
+    ``telemetry=True`` attaches a :class:`repro.obs.RunTelemetry` to the
+    result: per-query spans (stage stamps from whichever engine served
+    each query, re-route/RPC-retry annotations from the driver), a
+    metrics registry (per-node / per-model streaming-quantile latency,
+    error and re-route counters), and a per-window :class:`FleetTimeline`
+    of registry snapshots.  Off (the default) the driver does no span or
+    registry work at all — today's behavior, at today's cost.
     """
     times = np.asarray(times, float)
     sizes = np.asarray(sizes, np.int64)
@@ -272,6 +300,39 @@ def drive_fleet(times: np.ndarray, sizes: np.ndarray,
     node_hours = 0.0
     rerouted = 0
     timeline: list[tuple] = []
+    errors_by_node: dict[str, int] = {}
+
+    tel: RunTelemetry | None = None
+    if telemetry:
+        tel = RunTelemetry(spans=SpanTable(times),
+                           registry=MetricsRegistry(),
+                           timeline=FleetTimeline())
+        span_on: set[tuple] = set()       # backends told to produce spans
+        retry_seen: dict[tuple, int] = {}  # per-node retry_count cursor
+        node_hist: dict[tuple, object] = {}  # hot-path histogram cache
+        fleet_hist = tel.registry.histogram("fleet_latency_ms")
+
+    def _node_name(b) -> str:
+        return f"{b.pool}[{b.index_in_pool}]"
+
+    def _tel_retry(b, sel_idx):
+        """Drain a backend's accumulated RPC retry stall into the span
+        table (attributed to the queries whose exchange stalled) and the
+        fleet counters; ``sel_idx=None`` books fleet counters only (poll
+        retries delay monitoring, not a specific query's submit)."""
+        take = getattr(b, "take_retry_s", None)
+        if take is None:
+            return
+        s = take()
+        if s > 0.0:
+            if sel_idx is not None:
+                tel.spans.add_retry(sel_idx, s)
+            tel.registry.counter("rpc_retry_seconds").inc(s)
+        rc = getattr(b, "retry_count", 0)
+        d = rc - retry_seen.get(b.key, 0)
+        if d:
+            tel.registry.counter("rpc_retries").inc(d)
+            retry_seen[b.key] = rc
 
     def _submit(active, assign, gidx, wt, ws, wm):
         """Submit a routed window; a node dying *inside* submit is not a
@@ -282,15 +343,34 @@ def drive_fleet(times: np.ndarray, sizes: np.ndarray,
             sel = assign == i
             if not sel.any():
                 continue
+            st, ssz = wt[sel], ws[sel]
             try:
-                ret = b.submit(gidx[sel], wt[sel], ws[sel],
+                ret = b.submit(gidx[sel], st, ssz,
                                wm[sel] if wm is not None else None)
             except BackendDied:
                 lost[b.key] = gidx[sel]
+                if tel is not None:
+                    _tel_retry(b, gidx[sel])
                 continue
             if ret is not None:
                 done[gidx[sel]] = ret
                 pool_of[gidx[sel]] = b.pool
+            if tel is not None:
+                _tel_retry(b, gidx[sel])
+                if ret is not None:
+                    # the sketch digest drops NaN itself — no masks here
+                    # (per-model folds happen once per window, not per
+                    # node: the window monitor owns that dimension).  The
+                    # fleet rollup absorbs the *same* digest — fleet-wide
+                    # latency is the merge of what the nodes observed,
+                    # so the batch is bucketized exactly once
+                    h = node_hist.get(b.key)
+                    if h is None:
+                        h = node_hist[b.key] = tel.registry.histogram(
+                            "node_latency_ms", node=_node_name(b))
+                    v = np.subtract(ret, st)
+                    v *= 1e3
+                    observe_fanout(v, h, fleet_hist)
         return lost
 
     for w in range(n_windows):
@@ -299,6 +379,11 @@ def drive_fleet(times: np.ndarray, sizes: np.ndarray,
                                               else times <= horizon))
         ctl0 = time.perf_counter()
         active, orphans = controller.begin_window(w0)
+        if tel is not None:
+            for b in active:
+                if b.key not in span_on:
+                    b.enable_spans()
+                    span_on.add(b.key)
         if orphans:
             # a killed node's unfinished queries: void their (analytic)
             # completions, then re-submit to the survivors at the
@@ -312,11 +397,16 @@ def drive_fleet(times: np.ndarray, sizes: np.ndarray,
                 osz = np.array([q.size for q in orphans], np.int64)
                 om = np.array([q.model_id for q in orphans], np.int64) \
                     if model_ids is not None else None
+                if tel is not None:
+                    tel.spans.mark_reroute(oidx, w0)
+                    tel.registry.counter("queries_rerouted").inc(len(oidx))
                 lost = _submit(active, router.assign(ot, osz, active,
                                                      model_ids=om),
                                oidx, ot, osz, om)
                 rerouted += len(orphans)
             else:
+                if tel is not None:
+                    tel.spans.mark_shed(oidx)
                 lost = {}
         else:
             lost = {}
@@ -328,6 +418,8 @@ def drive_fleet(times: np.ndarray, sizes: np.ndarray,
             assign = router.assign(wt, ws, active, model_ids=wm)
             lost.update(_submit(active, assign, idx, wt, ws, wm))
         # else: no SERVING node this window — queries stay NaN (dropped)
+        elif tel is not None and len(idx):
+            tel.spans.mark_shed(idx)
         while lost:
             # mid-submit deaths: retire each victim through the
             # controller (the heal policy decides whether it restarts),
@@ -349,6 +441,9 @@ def drive_fleet(times: np.ndarray, sizes: np.ndarray,
             rs_ = sizes[ridx]
             rm_ = model_ids[ridx] if model_ids is not None else None
             rerouted += len(ridx)
+            if tel is not None:
+                tel.spans.mark_reroute(ridx, rt_)
+                tel.registry.counter("queries_rerouted").inc(len(ridx))
             lost = _submit(active, router.assign(rt_, rs_, active,
                                                  model_ids=rm_),
                            ridx, rt_, rs_, rm_)
@@ -367,17 +462,49 @@ def drive_fleet(times: np.ndarray, sizes: np.ndarray,
             lats = []
             for b in advancing:
                 try:
-                    lats += [r.latency_ms for r in b.take_new_records()
-                             if r.error is None]
+                    recs = b.take_new_records()
                 except BackendDied:
                     continue
+                node_lats = [r.latency_ms for r in recs if r.error is None]
+                lats += node_lats
+                if tel is not None:
+                    if node_lats:
+                        observe_fanout(
+                            node_lats,
+                            tel.registry.histogram(
+                                "node_latency_ms", node=_node_name(b)),
+                            fleet_hist)
+                    for r in recs:
+                        if r.error is not None:
+                            tel.registry.counter(
+                                "node_errors", node=_node_name(b)).inc()
+                        elif r.model_id >= 0:
+                            tel.registry.histogram(
+                                "model_latency_ms",
+                                model=str(r.model_id)).observe(r.latency_ms)
+                    _tel_retry(b, None)
             p95 = float(np.percentile(lats, 95)) if lats else 0.0
         else:
             wl = done[idx] - times[idx]
             ok = ~np.isnan(wl)
             p95 = float(np.percentile(wl[ok], 95) * 1e3) if ok.any() else 0.0
+            if tel is not None and wm is not None and ok.any():
+                # fleet_latency_ms already rolled up from the node
+                # digests at submit time — only the per-model dimension
+                # (e2e, dispatch included) is folded here
+                tel.registry.observe_grouped(
+                    "model_latency_ms", "model", wm[ok], wl[ok] * 1e3)
         offered = len(idx) / max(width, 1e-9)
         timeline.append((w0, offered, len(active), p95, width, ctl_s))
+        if tel is not None:
+            n_boot = controller.state_counts().get(NodeState.BOOTING.name, 0)
+            tel.registry.gauge("serving_nodes").set(len(active))
+            tel.registry.gauge("booting_nodes").set(n_boot)
+            tel.registry.counter("booting_node_seconds").inc(n_boot * width)
+            tel.timeline.snapshot(
+                tel.registry, w0, width,
+                extra={"offered_qps": offered, "n_active": len(active),
+                       "p95_ms": p95, "ctl_s": ctl_s})
         if autoscaler is not None:
             autoscaler.observe(w1, p95, offered, fleet)
             controller.reconcile(w1)
@@ -400,20 +527,47 @@ def drive_fleet(times: np.ndarray, sizes: np.ndarray,
                 controller.events.append(LifecycleEvent(
                     horizon, b.pool, b.index_in_pool, NodeState.SUSPECT))
         for b in controller.all_created():
+            name = _node_name(b)
             for r in b.completed_records():
                 if r.error is not None:
                     # a query whose apply_fn failed was not served: count
                     # it dropped (its near-instant "latency" would inflate
-                    # measured capacity), surfaced via `errors`
+                    # measured capacity), surfaced via `errors` and the
+                    # per-node breakdown
                     errors += 1
+                    errors_by_node[name] = errors_by_node.get(name, 0) + 1
                     continue
                 done[r.index] = r.t_done
                 pool_of[r.index] = b.pool
+                if tel is not None:
+                    tel.spans.record(r.index, r.t_released, r.t_exec_start,
+                                     r.t_done)
+    elif tel is not None:
+        # sim spans, vectorized per node: killed backends already rolled
+        # orphaned completions out of their history, and re-routed queries
+        # were re-recorded by whichever survivor actually served them
+        for b in controller.all_created():
+            sa = getattr(b, "span_arrays", None)
+            if sa is not None:
+                i_, rel, st, dn = sa()
+                if len(i_):
+                    tel.spans.record_many(i_, rel, st, dn)
     # factory-built backends are owned by the driver (the caller never
     # sees them) — release their resources; a no-op for sim nodes,
     # thread/runtime shutdown for live ones
     controller.close_all()
 
+    if tel is not None:
+        # the driver's done array is authoritative (kill rollbacks,
+        # errored-query drops): adopt it and book the run-level counters
+        tel.spans.finalize(done)
+        n_done = int((~np.isnan(done)).sum())
+        tel.registry.counter("queries_completed").inc(n_done)
+        tel.registry.counter("queries_dropped").inc(len(times) - n_done)
+        for name, cnt in errors_by_node.items():
+            c = tel.registry.counter("node_errors", node=name)
+            if c.value < cnt:        # drain-time errors the window
+                c.inc(cnt - c.value)  # monitor never saw
     if fleet is not None:
         pool_counts = {p.name: p.count for p in fleet.pools}
     else:
@@ -422,7 +576,8 @@ def drive_fleet(times: np.ndarray, sizes: np.ndarray,
                    node_hours,
                    list(autoscaler.events) if autoscaler else [], timeline,
                    model_ids=model_ids, errors=errors, rerouted=rerouted,
-                   lifecycle=list(controller.events))
+                   lifecycle=list(controller.events),
+                   errors_by_node=errors_by_node, telemetry=tel)
 
 
 def simulate_fleet(times: np.ndarray, sizes: np.ndarray, fleet: Fleet,
@@ -433,7 +588,8 @@ def simulate_fleet(times: np.ndarray, sizes: np.ndarray, fleet: Fleet,
                    self_heal: SelfHealPolicy | None = None,
                    contention: ContentionModel | None = None,
                    model_ids: np.ndarray | None = None,
-                   seed: int = 0) -> ClusterResult:
+                   seed: int = 0,
+                   telemetry: bool = False) -> ClusterResult:
     """Run one trace through a simulated fleet.  ``times`` must be sorted.
 
     Fast path (default): ``drive_fleet`` over per-node ``SimNodeBackend``s
@@ -463,6 +619,12 @@ def simulate_fleet(times: np.ndarray, sizes: np.ndarray, fleet: Fleet,
             raise ValueError("windowing/autoscaling need the fast path; "
                              "faults/contention force the (unwindowed) "
                              "event engine")
+        if telemetry:
+            raise ValueError("telemetry (spans/registry) needs the "
+                             "windowed fast path; per-node faults/"
+                             "contention force the unwindowed event "
+                             "engine, which has no window loop to stamp "
+                             "spans or snapshot metrics from")
         if fleet_faults is not None:
             raise ValueError("fleet_faults (whole-node kills) need the "
                              "windowed fast path; per-node faults/"
@@ -496,7 +658,8 @@ def simulate_fleet(times: np.ndarray, sizes: np.ndarray, fleet: Fleet,
     return drive_fleet(times, sizes, None, router, window_s=window_s,
                        autoscaler=autoscaler, fleet=work_fleet,
                        factory=SimNodeBackend, model_ids=model_ids,
-                       fleet_faults=fleet_faults, self_heal=self_heal)
+                       fleet_faults=fleet_faults, self_heal=self_heal,
+                       telemetry=telemetry)
 
 
 def cluster_max_qps(fleet: Fleet, router: Router, sla_ms: float, *,

@@ -557,6 +557,14 @@ class FleetController:
             out[k] = NodeState.DEAD
         return out
 
+    def state_counts(self) -> dict[str, int]:
+        """Node count per lifecycle state — the per-window fleet-shape
+        gauges the telemetry layer snapshots (``booting_nodes`` etc.)."""
+        out: dict[str, int] = {}
+        for s in self.states().values():
+            out[s.name] = out.get(s.name, 0) + 1
+        return out
+
     @property
     def billable_n(self) -> int:
         """Nodes billed for the current window: BOOTING (you pay for an

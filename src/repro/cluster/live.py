@@ -226,9 +226,15 @@ class LiveNodeBackend(NodeBackend):
     def _to_trace(self, r) -> CompletedQuery:
         origin = self.clock.origin or 0.0
         t_arr, _, m = self._meta.get(r.qid, (r.t_arrival - origin, 0, -1))
+        # span stamps: the runtime's wall arrival is the instant the
+        # feeder released the query into the executor queue, t_started
+        # the first worker pickup — both mapped back to trace time
         return CompletedQuery(index=r.qid, t_arrival=t_arr,
                               t_done=r.t_done - origin,
-                              model_id=m, error=r.error)
+                              model_id=m, error=r.error,
+                              t_released=r.t_arrival - origin,
+                              t_exec_start=r.t_started - origin
+                              if r.t_started > 0.0 else float("nan"))
 
     def completed_records(self) -> list[CompletedQuery]:
         return [self._to_trace(r) for r in self.rt.completed()]

@@ -439,6 +439,10 @@ class RemoteNodeBackend(NodeBackend):
         self._killed = False
         self._closed = False
         self._lock = threading.Lock()
+        # wall seconds lost to failed RPC attempts + retry backoff since
+        # the last take_retry_s() — the span layer's rpc_retry stall
+        self._retry_s_acc = 0.0
+        self.retry_count = 0
 
     def _rpc(self, msg: dict, *, timeout: float | None = None,
              check: bool = True, retries: int | None = None) -> dict:
@@ -461,6 +465,7 @@ class RemoteNodeBackend(NodeBackend):
         for attempt in range(tries):
             if attempt:
                 time.sleep(delay)
+                self._retry_s_acc += delay
                 delay = min(delay * 2, 2.0)
                 if not self.handle.alive():
                     break          # a corpse will not re-accept
@@ -472,10 +477,16 @@ class RemoteNodeBackend(NodeBackend):
                         f"node {self.key}: reconnect to port "
                         f"{self.handle.port} failed: {e}")
                     continue
+            a0 = time.perf_counter()
             try:
                 with self._lock:
                     reply = _rpc(self.handle.sock, msg, timeout=deadline)
             except WorkerCrashed as e:
+                # a failed attempt's wall time (a deadline expiry is the
+                # whole timeout wait) is retry-path stall, attributable
+                # to whatever window this exchange was carrying
+                self._retry_s_acc += time.perf_counter() - a0
+                self.retry_count += 1
                 self.suspect = True
                 last = e
                 continue
@@ -524,14 +535,30 @@ class RemoteNodeBackend(NodeBackend):
         if not reply.get("ok", False):
             raise TimeoutError(f"node {self.key}: {reply.get('error')}")
 
+    def take_retry_s(self) -> float:
+        """Drain the accumulated RPC retry stall (seconds) — the driver
+        reads this after each exchange batch and attributes it to the
+        queries the stalled exchanges were carrying."""
+        s, self._retry_s_acc = self._retry_s_acc, 0.0
+        return s
+
     def _pull_new(self) -> list[CompletedQuery]:
         reply = self._rpc({"op": "poll", "cursor": self._cursor})
         fresh = []
-        for qid, t_arr, t_done, mid, err in reply["records"]:
+        for row in reply["records"]:
+            qid, t_arr, t_done, mid, err = row[:5]
+            # trailing span columns are optional on the wire (older
+            # workers, garbled-then-retried replies keep their shape)
+            t_rel = float(row[5]) if len(row) > 5 and row[5] is not None \
+                else float("nan")
+            t_st = float(row[6]) if len(row) > 6 and row[6] is not None \
+                else float("nan")
             fresh.append(CompletedQuery(index=int(qid),
                                         t_arrival=float(t_arr),
                                         t_done=float(t_done),
-                                        model_id=int(mid), error=err))
+                                        model_id=int(mid), error=err,
+                                        t_released=t_rel,
+                                        t_exec_start=t_st))
         self._cursor += len(fresh)
         self._cache += fresh
         self._done_idx.update(r.index for r in fresh)
@@ -888,6 +915,9 @@ class BootingRemoteBackend(NodeBackend):
     def take_new_records(self) -> list[CompletedQuery]:
         return self._inner.take_new_records() if self._inner is not None \
             else []
+
+    def take_retry_s(self) -> float:
+        return self._inner.take_retry_s() if self._inner is not None else 0.0
 
     def completed_records(self) -> list[CompletedQuery]:
         return self._inner.completed_records() if self._inner is not None \

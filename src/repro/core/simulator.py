@@ -267,15 +267,20 @@ def _advance_pool(arrivals: np.ndarray, svc: np.ndarray, c: int) -> np.ndarray:
 def node_pass(arrivals: np.ndarray, sizes: np.ndarray, cpu: DeviceModel,
               cfg: SchedulerConfig, *, accel: DeviceModel | None = None,
               cpu_free: np.ndarray | None = None,
-              acc_free: np.ndarray | None = None
-              ) -> tuple[np.ndarray, float, float, np.ndarray, np.ndarray]:
+              acc_free: np.ndarray | None = None,
+              want_starts: bool = False):
     """One node's fast dispatch pipeline — offload split, request
     splitting, FCFS pool advance — optionally stateful via initial
     executor/accelerator free times (the cluster tier carries them across
     traffic windows; ``simulate_arrays`` starts idle).
 
     Returns ``(done_times, cpu_busy_s, accel_work, cpu_free, acc_free)``
-    with NaN marking never-completed queries (e.g. empty pool).
+    with NaN marking never-completed queries (e.g. empty pool).  With
+    ``want_starts=True`` a sixth element is appended: each query's first
+    executor dispatch time — derived from the Lindley departures (a
+    request starts at departure minus service; a query starts at the min
+    over its requests), which is how sim spans get an ``exec_start``
+    stamp with no event loop.
     """
     n = len(sizes)
     B = max(cfg.batch_size, 1)
@@ -288,6 +293,7 @@ def node_pass(arrivals: np.ndarray, sizes: np.ndarray, cpu: DeviceModel,
 
     off = sizes >= thr if thr is not None else np.zeros(n, bool)
     done = np.full(n, np.nan)
+    exec_start = np.full(n, np.nan) if want_starts else None
     cpu_busy = 0.0
     acc_work = 0.0
 
@@ -301,6 +307,9 @@ def node_pass(arrivals: np.ndarray, sizes: np.ndarray, cpu: DeviceModel,
         depart, cpu_free = advance_pool(carr[group], req_svc, cpu_free)
         starts = np.concatenate(([0], bounds[:-1]))
         done[cpu_idx] = np.maximum.reduceat(depart, starts)
+        if want_starts and len(depart):
+            exec_start[cpu_idx] = np.minimum.reduceat(depart - req_svc,
+                                                      starts)
         if cfg.n_executors > 0:
             cpu_busy = float(req_svc.sum())
 
@@ -308,9 +317,14 @@ def node_pass(arrivals: np.ndarray, sizes: np.ndarray, cpu: DeviceModel,
     if len(acc_idx):
         asz = sizes[acc_idx]
         acc_tab = service_time_table(accel, int(asz.max()))
+        svc = acc_tab[asz]
         done[acc_idx], acc_free = advance_pool(arrivals[acc_idx],
-                                               acc_tab[asz], acc_free)
+                                               svc, acc_free)
+        if want_starts:
+            exec_start[acc_idx] = done[acc_idx] - svc
         acc_work = float(asz.sum())
+    if want_starts:
+        return done, cpu_busy, acc_work, cpu_free, acc_free, exec_start
     return done, cpu_busy, acc_work, cpu_free, acc_free
 
 

@@ -1,0 +1,86 @@
+"""Summarize a telemetry run artifact: ``python -m repro.obs.dump FILE``.
+
+Reads the JSON-lines artifact ``repro.obs.export.write_jsonl`` produces
+(also written by ``benchmarks/latency_attribution.py``) and prints the
+run summary, the per-percentile stage attribution table, per-node error
+counts, and — with ``--windows`` — the per-window timeline.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def _f(v, scale=1.0):
+    return "-" if v is None else f"{v * scale:.3f}"
+
+
+def summarize(lines: list[dict], show_windows: bool = False) -> str:
+    out: list[str] = []
+    runs = [r for r in lines if r.get("kind") == "run"]
+    for r in runs:
+        out.append(f"run: qps={_f(r['qps'])} p50={_f(r['p50_ms'])}ms "
+                   f"p95={_f(r['p95_ms'])}ms p99={_f(r['p99_ms'])}ms "
+                   f"n={r['n_queries']} dropped={r['dropped']} "
+                   f"errors={r.get('errors', 0)} "
+                   f"rerouted={r.get('rerouted', 0)} "
+                   f"nodes={r['n_nodes']}")
+    attrib = [r for r in lines if r.get("kind") == "attribution"]
+    if attrib:
+        names = list(attrib[0]["components_s"])
+        out.append("attribution (ms):")
+        out.append("  pct      e2e     band  " +
+                   "  ".join(f"{n:>9}" for n in names) + "        sum")
+        for r in attrib:
+            comps = "  ".join(_f(r["components_s"][n], 1e3).rjust(9)
+                              for n in names)
+            out.append(f"  p{r['percentile']:<4g} "
+                       f"{_f(r['latency_s'], 1e3).rjust(8)} "
+                       f"{_f(r['band_latency_s'], 1e3).rjust(8)}  {comps}"
+                       f"  {_f(r['component_sum_s'], 1e3).rjust(9)}")
+    for r in lines:
+        if r.get("kind") == "stage_totals":
+            tot = ", ".join(f"{k}={_f(v, 1e3)}ms"
+                            for k, v in r["totals_s"].items())
+            out.append(f"stage totals: {tot}")
+    nodes = [r for r in lines if r.get("kind") == "node"]
+    if nodes:
+        out.append("node errors: " + ", ".join(
+            f"{r['node']}={r['errors']}" for r in nodes))
+    windows = [r for r in lines if r.get("kind") == "window"]
+    if windows:
+        out.append(f"windows: {len(windows)}")
+        if show_windows:
+            for w in windows:
+                ex = w.get("extra", {})
+                out.append(f"  t={w['t_s']:.2f}s width={w['width_s']:.2f}s "
+                           + " ".join(f"{k}={_f(v)}"
+                                      for k, v in sorted(ex.items())))
+    return "\n".join(out)
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.obs.dump",
+        description="Summarize a telemetry JSON-lines run artifact.")
+    ap.add_argument("file", help="artifact written by repro.obs.export"
+                                 ".write_jsonl")
+    ap.add_argument("--windows", action="store_true",
+                    help="also print the per-window timeline")
+    args = ap.parse_args(argv)
+    lines = []
+    with open(args.file) as f:
+        for ln in f:
+            ln = ln.strip()
+            if ln:
+                lines.append(json.loads(ln))
+    if not lines:
+        print("empty artifact", file=sys.stderr)
+        return 1
+    print(summarize(lines, show_windows=args.windows))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

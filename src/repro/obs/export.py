@@ -1,0 +1,117 @@
+"""Exporters: JSON-lines run artifacts and Prometheus text format.
+
+``write_jsonl(result, path)`` serializes a ``ClusterResult`` (duck-typed —
+obs stays importable without the cluster package) into a line-per-record
+artifact: one ``run`` summary line, one ``window`` line per
+``FleetTimeline`` snapshot, one ``attribution`` line per percentile,
+``stage_totals``, and per-node ``node`` lines (errors, query counts).
+``python -m repro.obs.dump`` pretty-prints the same artifact back.
+
+``to_prometheus(registry)`` renders a :class:`MetricsRegistry` in the
+Prometheus text exposition format (counters / gauges verbatim,
+histograms as summaries with ``quantile`` labels from the cumulative
+sketch) — what a scrape endpoint would serve.
+"""
+from __future__ import annotations
+
+import json
+import math
+from typing import Any, Iterator
+
+from repro.obs.attribution import AttributionReport
+from repro.obs.metrics import MetricsRegistry
+
+__all__ = ["to_prometheus", "run_lines", "write_jsonl"]
+
+
+def _prom_labels(labels: dict[str, str]) -> str:
+    if not labels:
+        return ""
+    return "{" + ",".join(f'{k}="{v}"' for k, v in sorted(labels.items())) \
+        + "}"
+
+
+def to_prometheus(registry: MetricsRegistry) -> str:
+    """Render the registry in Prometheus text exposition format."""
+    typed: set[str] = set()
+    lines: list[str] = []
+    for kind, name, labels, obj in registry.items():
+        lab = _prom_labels(labels)
+        if kind in ("counter", "gauge"):
+            if name not in typed:
+                typed.add(name)
+                lines.append(f"# TYPE {name} {kind}")
+            lines.append(f"{name}{lab} {obj.value:.9g}")
+        else:                                  # histogram -> summary
+            if name not in typed:
+                typed.add(name)
+                lines.append(f"# TYPE {name} summary")
+            sk = obj.total
+            for q in (0.5, 0.95, 0.99):
+                v = sk.quantile(q)
+                ql = dict(labels, quantile=f"{q:g}")
+                if not math.isnan(v):
+                    lines.append(f"{name}{_prom_labels(ql)} {v:.9g}")
+            lines.append(f"{name}_count{lab} {sk.n}")
+            lines.append(f"{name}_sum{lab} {sk.total:.9g}")
+    return "\n".join(lines) + ("\n" if lines else "")
+
+
+def _clean(v: Any) -> Any:
+    """NaN/inf -> None so the artifact is strict JSON."""
+    if isinstance(v, float) and not math.isfinite(v):
+        return None
+    return v
+
+
+def _attribution_lines(report: AttributionReport) -> Iterator[dict]:
+    for row in report.percentiles:
+        yield {"kind": "attribution", "percentile": row.percentile,
+               "latency_s": _clean(row.latency_s),
+               "sum_latency_s": _clean(row.sum_latency_s),
+               "band_latency_s": _clean(row.band_latency_s),
+               "band_n": row.band_n,
+               "components_s": {k: _clean(v)
+                                for k, v in row.components_s.items()},
+               "component_sum_s": _clean(row.component_sum_s)}
+    yield {"kind": "stage_totals",
+           "totals_s": {k: _clean(v) for k, v in report.totals_s.items()},
+           "n_completed": report.n_completed,
+           "n_dropped": report.n_dropped}
+
+
+def run_lines(result: Any) -> Iterator[dict]:
+    """Yield the JSON-ready records for one ``ClusterResult``-shaped run
+    (attribute access only — any object with the same surface works)."""
+    yield {"kind": "run",
+           "qps": _clean(float(result.qps)),
+           "p50_ms": _clean(float(result.p50_ms)),
+           "p95_ms": _clean(float(result.p95_ms)),
+           "p99_ms": _clean(float(result.p99_ms)),
+           "mean_ms": _clean(float(result.mean_ms)),
+           "n_queries": int(result.n_queries),
+           "dropped": int(result.dropped),
+           "errors": int(getattr(result, "errors", 0)),
+           "rerouted": int(getattr(result, "rerouted", 0)),
+           "n_nodes": int(result.n_nodes),
+           "node_hours": _clean(float(result.node_hours))}
+    for node, cnt in sorted(getattr(result, "errors_by_node", {}).items()):
+        yield {"kind": "node", "node": node, "errors": int(cnt)}
+    tel = getattr(result, "telemetry", None)
+    if tel is None:
+        return
+    for w in tel.timeline.windows:
+        yield {"kind": "window", "t_s": w.t_s, "width_s": w.width_s,
+               "extra": {k: _clean(v) for k, v in w.extra.items()},
+               "metrics": {k: _clean(v) for k, v in w.metrics.items()}}
+    yield from _attribution_lines(tel.attribution())
+
+
+def write_jsonl(result: Any, path: str) -> int:
+    """Write the run artifact; returns the number of lines written."""
+    n = 0
+    with open(path, "w") as f:
+        for rec in run_lines(result):
+            f.write(json.dumps(rec, sort_keys=True) + "\n")
+            n += 1
+    return n

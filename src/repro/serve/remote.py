@@ -298,7 +298,14 @@ class _Worker:
             for r in recs:
                 t_arr, _, mid = self._meta.get(
                     r.qid, (r.t_arrival - origin, 0, -1))
-                rows.append([r.qid, t_arr, r.t_done - origin, mid, r.error])
+                # trailing span columns (release into the executor queue,
+                # first worker pickup) so worker-side stage timings
+                # survive the socket hop; older clients parse rows by
+                # prefix and ignore them
+                rows.append([r.qid, t_arr, r.t_done - origin, mid, r.error,
+                             r.t_arrival - origin,
+                             r.t_started - origin
+                             if r.t_started > 0.0 else None])
             return {"ok": True, "records": rows}
         if op == "drain":
             deadline = time.monotonic() + float(msg.get("timeout", 60.0))

@@ -36,6 +36,9 @@ class QueryRecord:
     size: int
     t_arrival: float
     t_done: float = 0.0
+    # wall instant a worker first picked one of the query's requests up —
+    # the span layer's exec_start stamp; 0.0 until then
+    t_started: float = 0.0
     error: str | None = None   # first apply_fn failure among the requests
 
     @property
@@ -156,6 +159,12 @@ class ServingRuntime:
             req = self._q.get()
             if req is None:
                 return
+            # first-dispatch stamp, lockless: the record was inserted
+            # before the request was enqueued, and a two-worker race on
+            # the first two requests differs by a queue handoff at most
+            rec0 = self._records.get(req.qid)
+            if rec0 is not None and rec0.t_started == 0.0:
+                rec0.t_started = time.monotonic()
             err = None
             try:
                 bucket = bucket_for(req.size, self.max_bucket)

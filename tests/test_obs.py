@@ -1,0 +1,461 @@
+"""Observability tier: quantile sketch, metrics registry, per-query
+spans, tail-latency attribution, and exporters.
+
+Sketch/registry tests are pure numpy; engine tests drive small traces
+through the sim and live backends (canned device curves, no calibration)
+and one scripted remote fault, mirroring the chaos-suite sizing so the
+tier-1 wall-clock stays bounded.
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.cluster import (BucketedDeviceModel, ChaosPlan, Fleet, FleetFaults,
+                           NodeKill, NodeSpec, Pool, RpcHang, SimNodeBackend,
+                           WallClock, drive_fleet, live_node, make_router,
+                           sim_backends)
+from repro.cluster.fleet import NodeView
+from repro.obs import (COMPONENTS, STAGES, FleetTimeline, Histogram,
+                       MetricsRegistry, QuantileSketch, SpanTable,
+                       observe_fanout, run_lines, to_prometheus, write_jsonl)
+from repro.obs.dump import summarize
+
+pytestmark = pytest.mark.cluster
+
+REL_ERR = 0.02
+
+
+def _canned(service_s: float) -> BucketedDeviceModel:
+    return BucketedDeviceModel(np.array([1, 2, 4, 8, 16, 32, 64]),
+                               np.full(7, service_s))
+
+
+def _trace(n: int, horizon: float, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    times = np.sort(rng.uniform(0.0, horizon, n))
+    sizes = rng.integers(1, 17, n).astype(np.int64)
+    return times, sizes
+
+
+def _sim_result(n=600, horizon=1.0, count=3, telemetry=True, faults=None,
+                window_s=0.1, service_s=2e-4):
+    times, sizes = _trace(n, horizon)
+    spec = NodeSpec(cpu=_canned(service_s), n_executors=2, batch_size=16,
+                    request_overhead_s=0.0)
+    fleet = Fleet([Pool("cpu", spec, count=count)])
+    return drive_fleet(times, sizes, sim_backends(fleet.node_views()),
+                       make_router("round_robin"), window_s=window_s,
+                       telemetry=telemetry, fleet_faults=faults)
+
+
+# ------------------------------------------------------- quantile sketch
+
+
+@pytest.mark.parametrize("values", [
+    # 25/75 mix so the tested percentiles land inside a mode — rank-based
+    # sketches legitimately disagree with numpy's interpolation *between*
+    # modes, which is not an accuracy question
+    np.concatenate([np.random.default_rng(1).normal(10.0, 1.0, 5_000),
+                    np.random.default_rng(2).normal(100.0, 5.0, 15_000)]),
+    np.random.default_rng(3).lognormal(0.0, 1.5, 20_000),
+], ids=["bimodal", "heavy_tail"])
+def test_sketch_accuracy_vs_numpy(values):
+    values = np.abs(values)
+    s = QuantileSketch(REL_ERR)
+    s.observe_many(values)
+    for p in (50.0, 90.0, 95.0, 99.0):
+        exact = float(np.percentile(values, p))
+        got = s.percentile(p)
+        assert abs(got - exact) <= 0.05 * exact, (p, got, exact)
+    assert s.n == len(values)
+    assert np.isclose(s.mean, values.mean(), rtol=1e-9)
+    assert s.vmin == values.min() and s.vmax == values.max()
+
+
+def test_sketch_merge_associative_and_matches_single():
+    rng = np.random.default_rng(5)
+    parts = [rng.lognormal(0.0, 1.0, 4_000),
+             rng.uniform(50.0, 500.0, 3_000),
+             rng.normal(3.0, 0.5, 2_000)]
+    sketches = []
+    for p in parts:
+        s = QuantileSketch(REL_ERR)
+        s.observe_many(p)
+        sketches.append(s)
+    a, b, c = (s.copy() for s in sketches)
+    left = a.merge(b).merge(c)                       # (A + B) + C
+    a2, b2, c2 = (s.copy() for s in sketches)
+    right = a2.merge(b2.merge(c2))                   # A + (B + C)
+    single = QuantileSketch(REL_ERR)
+    single.observe_many(np.concatenate(parts))
+    qs = (0.01, 0.25, 0.5, 0.9, 0.99, 1.0)
+    assert left.quantiles(qs) == right.quantiles(qs)  # exactly — not approx
+    assert left.quantiles(qs) == single.quantiles(qs)
+    assert left.counts == right.counts == single.counts
+    assert left.n == right.n == single.n == sum(len(p) for p in parts)
+
+
+def test_sketch_merge_rejects_mismatched_rel_err():
+    with pytest.raises(ValueError, match="rel_err"):
+        QuantileSketch(0.02).merge(QuantileSketch(0.01))
+
+
+def test_sketch_edge_cases():
+    s = QuantileSketch(REL_ERR)
+    assert np.isnan(s.quantile(0.5)) and np.isnan(s.mean)   # empty
+
+    s.observe(3.7)                                   # one sample is exact
+    assert s.quantile(0.0) == s.quantile(0.5) == s.quantile(1.0) == 3.7
+
+    z = QuantileSketch(REL_ERR)
+    z.observe_many([0.0, -1.0, 2.0])                 # zero bucket
+    assert z.n == 3 and z.n_zero == 2
+    assert z.quantile(0.1) == 0.0                    # non-positive report 0
+    assert z.vmin == -1.0 and z.vmax == 2.0
+
+    nan = QuantileSketch(REL_ERR)
+    nan.observe(float("nan"))
+    nan.observe_many([np.nan, 5.0, np.nan])          # NaNs dropped, not kept
+    assert nan.n == 1 and nan.quantile(0.5) == 5.0
+
+    with pytest.raises(ValueError):
+        s.quantile(1.5)
+    with pytest.raises(ValueError):
+        QuantileSketch(1.5)
+
+
+def test_sketch_scalar_and_batch_paths_agree():
+    rng = np.random.default_rng(11)
+    vals = np.concatenate([rng.lognormal(1.0, 1.0, 500), [0.0, 7.5]])
+    one = QuantileSketch(REL_ERR)
+    for v in vals:
+        one.observe(v)
+    many = QuantileSketch(REL_ERR)
+    many.observe_many(vals)
+    assert one.counts == many.counts
+    assert (one.n, one.n_zero, one.vmin, one.vmax) == \
+        (many.n, many.n_zero, many.vmin, many.vmax)
+    assert np.isclose(one.total, many.total)
+
+
+def test_sketch_copy_and_reset_are_independent():
+    s = QuantileSketch(REL_ERR)
+    s.observe_many([1.0, 2.0, 4.0])
+    c = s.copy()
+    c.observe(1000.0)
+    assert s.n == 3 and c.n == 4 and s.vmax == 4.0
+    s.reset()
+    assert s.n == 0 and np.isnan(s.quantile(0.5))
+    s.observe(9.0)                                   # usable after reset
+    assert s.quantile(0.5) == 9.0 and c.n == 4
+
+
+# ------------------------------------------------------ metrics registry
+
+
+def test_registry_snapshot_window_semantics():
+    reg = MetricsRegistry()
+    reg.counter("served").inc(5)
+    reg.histogram("lat_ms", node="a").observe_many([1.0, 2.0, 3.0])
+    s1 = reg.snapshot()
+    assert s1["served"] == 5.0
+    assert s1['lat_ms{node="a"}.count'] == 3.0
+    assert 'lat_ms{node="a"}.p50' in s1 and 'lat_ms{node="a"}.mean' in s1
+    # window reset: a second snapshot with no new samples reports empty,
+    # while the counter stays cumulative and the total sketch keeps all
+    reg.counter("served").inc(2)
+    s2 = reg.snapshot()
+    assert s2["served"] == 7.0
+    assert s2['lat_ms{node="a"}.count'] == 0.0
+    assert 'lat_ms{node="a"}.p50' not in s2
+    assert reg.histogram("lat_ms", node="a").total.n == 3
+
+
+def test_timeline_capture_is_lazy_and_window_scoped():
+    reg = MetricsRegistry()
+    tl = FleetTimeline()
+    reg.histogram("x").observe_many([1.0] * 8)
+    tl.snapshot(reg, 0.0, 1.0, extra={"qps": 8.0})
+    reg.histogram("x").observe_many([100.0] * 8)
+    tl.snapshot(reg, 1.0, 1.0)
+    assert len(tl) == 2
+    # each window rendered only what it captured (the boundary stole the
+    # window sketch; later samples cannot leak backwards)
+    assert tl.windows[0].metrics["x.p50"] == pytest.approx(1.0, rel=0.05)
+    assert tl.windows[1].metrics["x.p50"] == pytest.approx(100.0, rel=0.05)
+    assert tl.windows[0].extra == {"qps": 8.0}
+    assert tl.series("x.count") == [(0.0, 8.0), (1.0, 8.0)]
+
+
+def test_observe_grouped_matches_per_group_observe():
+    rng = np.random.default_rng(7)
+    groups = rng.integers(0, 3, 400)
+    values = rng.lognormal(0.0, 1.0, 400)
+    values[10] = np.nan                              # dropped everywhere
+    values[20] = 0.0                                 # zero bucket
+    grouped = MetricsRegistry()
+    grouped.observe_grouped("m_ms", "model", groups, values)
+    direct = MetricsRegistry()
+    for g in np.unique(groups):
+        mask = (groups == g) & ~np.isnan(values)
+        direct.histogram("m_ms", model=str(g)).observe_many(values[mask])
+    for g in np.unique(groups):
+        hg = grouped.histogram("m_ms", model=str(g)).total
+        hd = direct.histogram("m_ms", model=str(g)).total
+        assert hg.counts == hd.counts
+        assert (hg.n, hg.n_zero, hg.vmin, hg.vmax) == \
+            (hd.n, hd.n_zero, hd.vmin, hd.vmax)
+        assert np.isclose(hg.total, hd.total)
+
+
+def test_observe_fanout_matches_separate_observes():
+    vals = np.random.default_rng(9).lognormal(0.0, 1.0, 300)
+    a, b = Histogram(), Histogram()
+    observe_fanout(vals, a, b)
+    ref = Histogram()
+    ref.observe_many(vals)
+    for h in (a, b):
+        assert h.total.counts == ref.total.counts
+        assert h.window.counts == ref.window.counts
+        assert h.total.n == len(vals)
+
+
+def test_merged_histogram_is_fleet_rollup():
+    reg = MetricsRegistry()
+    reg.histogram("lat", node="a").observe_many([1.0, 1.0])
+    reg.histogram("lat", node="b").observe_many([100.0, 100.0])
+    m = reg.merged_histogram("lat")
+    assert m.n == 4
+    assert m.quantile(0.25) == pytest.approx(1.0, rel=0.05)
+    assert m.quantile(1.0) == pytest.approx(100.0, rel=0.05)
+
+
+def test_prometheus_exposition_format():
+    reg = MetricsRegistry()
+    reg.counter("queries_completed").inc(41)
+    reg.gauge("serving_nodes").set(3)
+    reg.histogram("lat_ms", node="cpu[0]").observe_many([1.0, 2.0, 10.0])
+    text = to_prometheus(reg)
+    assert "# TYPE queries_completed counter" in text
+    assert "queries_completed 41" in text
+    assert "# TYPE serving_nodes gauge" in text
+    assert "# TYPE lat_ms summary" in text
+    assert 'lat_ms_count{node="cpu[0]"} 3' in text
+    assert 'quantile="0.95"' in text
+
+
+# ------------------------------------------------- spans + attribution
+
+
+def test_span_components_telescope_by_construction():
+    t = np.array([0.0, 1.0, 2.0])
+    st = SpanTable(t)
+    st.record_many(np.arange(3), t + 0.01, t + 0.02, t + 0.05)
+    st.mark_reroute(np.array([1]), 1.5)              # re-routed at 1.5s
+    st.record(1, 1.51, 1.52, 1.55)
+    st.add_retry(np.array([2]), 0.004)
+    st.finalize(np.array([0.05, 1.55, 2.05]))
+    comps = st.components()
+    assert set(comps) == set(COMPONENTS)
+    total = sum(comps.values())
+    np.testing.assert_allclose(total, st.latency(), atol=1e-12)
+    assert comps["reroute"][1] == pytest.approx(0.5)
+    assert comps["retry"][2] == pytest.approx(0.004)
+    span = st.span(1)
+    assert span.reroutes == 1 and set(span.stages) == set(STAGES)
+    assert span.latency_s == pytest.approx(0.55)
+
+
+def test_sim_engine_spans_close_against_measured_latency():
+    r = _sim_result(n=600)
+    tel = r.telemetry
+    assert tel is not None
+    ok = tel.spans.completed
+    assert int(ok.sum()) == r.n_queries - r.dropped
+    # the sim fills stamps analytically: components sum *exactly*
+    total = sum(tel.spans.components().values())[ok]
+    np.testing.assert_allclose(total, tel.spans.latency()[ok], atol=1e-9)
+    report = tel.attribution()
+    assert report.reconciles(0.05)
+    assert report.n_completed == int(ok.sum())
+    assert "service" in report.at(95.0).components_s
+    assert report.table()                             # renders
+
+
+def test_telemetry_kill_switch_returns_none():
+    r = _sim_result(n=200, telemetry=False)
+    assert r.telemetry is None
+
+
+def test_sim_and_live_engines_agree_on_attribution():
+    """Engine consistency: the same trace through the analytic sim and
+    real runtime threads must tell the same story — both decompositions
+    close, and the dominant component (service) matches the canned
+    device curve on both engines."""
+    service_s = 2e-3
+    n = 120
+    times, sizes = _trace(n, 1.2, seed=4)
+
+    sim = drive_fleet(
+        times, sizes,
+        sim_backends(Fleet([Pool("cpu", NodeSpec(
+            cpu=_canned(service_s), n_executors=1, batch_size=16,
+            request_overhead_s=0.0), count=2)]).node_views()),
+        make_router("round_robin"), window_s=0.25, telemetry=True)
+
+    def apply_fn(batch):
+        import time as _t
+        _t.sleep(service_s)
+        return batch["x"].sum()
+
+    backends = [live_node(apply_fn, lambda size, model_id:
+                          {"x": np.ones(size, np.float32)},
+                          pool="live", index_in_pool=i,
+                          device=_canned(service_s), batch_size=16,
+                          max_bucket=64, clock=WallClock())
+                for i in range(2)]
+    try:
+        live = drive_fleet(times, sizes, backends,
+                           make_router("round_robin"), window_s=0.25,
+                           telemetry=True)
+    finally:
+        for b in backends:
+            b.close()
+
+    rs, rl = sim.telemetry.attribution(), live.telemetry.attribution()
+    assert rs.reconciles(0.05) and rl.reconciles(0.05)
+    p50s = rs.at(50.0).components_s["service"]
+    p50l = rl.at(50.0).components_s["service"]
+    assert p50s == pytest.approx(service_s, rel=0.2)
+    # live stamps real threads: service = sleep + runtime overhead
+    assert service_s * 0.8 <= p50l <= service_s * 3.0
+    # both engines' spans cover the completed population
+    assert rs.n_completed == n and rl.n_completed == n
+
+
+def test_sim_kill_shows_reroute_component_calm_shows_none():
+    # dense trace + slow service so node 0 has a deep pending queue when
+    # the kill lands — those orphans re-route and carry reroute span time
+    kw = dict(n=600, horizon=0.3, count=2, window_s=0.05, service_s=4e-2)
+    faults = FleetFaults(kills=(NodeKill(0.1, "cpu", 0),))
+    chaos = _sim_result(faults=faults, **kw)
+    calm = _sim_result(**kw)
+    for r in (chaos, calm):
+        assert r.telemetry.attribution().reconciles(0.05)
+    ck = chaos.telemetry.spans.components()
+    ok = chaos.telemetry.spans.completed
+    assert chaos.rerouted > 0
+    assert float(ck["reroute"][ok].sum()) > 0.0
+    assert (chaos.telemetry.spans.reroutes > 0).sum() == chaos.rerouted
+    calm_comps = calm.telemetry.spans.components()
+    assert float(calm_comps["reroute"].sum()) == 0.0
+    assert calm.telemetry.registry.counter("queries_rerouted").value == 0.0
+
+
+@pytest.mark.slow
+def test_remote_retry_stall_lands_in_retry_component():
+    """A scripted RPC hang on a real worker process: the client's
+    deadline/retry machinery recovers, and the stall is attributed to
+    the in-flight queries' retry component (zero on a calm run)."""
+    from repro.cluster.remote import RemoteBackendFactory, WorkerSupervisor
+
+    times, sizes = _trace(16, 1.0, seed=2)
+
+    def run(plan):
+        clock = WallClock()
+        with WorkerSupervisor() as sup:
+            factory = RemoteBackendFactory(
+                "pybusy:50000", sup, device=_canned(2.5e-2), batch_size=16,
+                max_bucket=64, clock=clock, chaos=plan,
+                rpc_timeout=0.3, rpc_retries=3)
+            spec = NodeSpec(cpu=_canned(2.5e-2), n_executors=1,
+                            batch_size=16, request_overhead_s=0.0)
+            fleet = Fleet([Pool("remote", spec, count=1)])
+            try:
+                return drive_fleet(times, sizes, None,
+                                   make_router("round_robin"),
+                                   window_s=0.25, fleet=fleet,
+                                   factory=factory, fleet_faults=plan,
+                                   telemetry=True, drain_timeout=60)
+            finally:
+                factory.close()
+
+    plan = ChaosPlan(hangs=(RpcHang(0.3, "remote", 0, hang_s=0.8),))
+    chaos = run(plan)
+    calm = run(None)
+    ok = chaos.telemetry.spans.completed
+    retry = float(chaos.telemetry.spans.components()["retry"][ok].sum())
+    assert retry > 0.0
+    assert chaos.telemetry.registry.counter("rpc_retry_seconds").value > 0.0
+    assert chaos.telemetry.registry.counter("rpc_retries").value >= 1.0
+    assert float(calm.telemetry.spans.components()["retry"].sum()) == 0.0
+    assert chaos.telemetry.attribution().reconciles(0.05)
+
+
+def test_live_errors_are_first_class_on_result():
+    times, sizes = _trace(60, 0.6, seed=6)
+
+    def apply_fn(batch):
+        if len(batch["x"]) > 8:                       # big buckets blow up
+            raise RuntimeError("boom")
+        return batch["x"].sum()
+
+    backends = [live_node(apply_fn, lambda size, model_id:
+                          {"x": np.ones(size, np.float32)},
+                          pool="live", index_in_pool=0,
+                          device=_canned(1e-3), batch_size=16,
+                          max_bucket=64, clock=WallClock())]
+    try:
+        r = drive_fleet(times, sizes, backends, make_router("round_robin"),
+                        window_s=0.2, telemetry=True)
+    finally:
+        for b in backends:
+            b.close()
+    assert r.errors > 0
+    assert r.errors == sum(r.errors_by_node.values())
+    assert set(r.errors_by_node) == {"live[0]"}
+    # errored queries also count as dropped (never actually served)
+    assert r.error_rate == pytest.approx(
+        r.errors / (r.n_queries + r.dropped))
+    assert r.telemetry.registry.counter(
+        "node_errors", node="live[0]").value == r.errors
+
+
+# ----------------------------------------------------------- exporters
+
+
+def test_jsonl_artifact_roundtrip_and_dump(tmp_path):
+    r = _sim_result(n=300)
+    path = os.path.join(tmp_path, "run.jsonl")
+    n_lines = write_jsonl(r, path)
+    with open(path) as f:
+        lines = [json.loads(ln) for ln in f if ln.strip()]
+    assert len(lines) == n_lines
+    kinds = {ln["kind"] for ln in lines}
+    assert {"run", "window", "attribution", "stage_totals"} <= kinds
+    run = next(ln for ln in lines if ln["kind"] == "run")
+    assert run["n_queries"] == 300 and run["p95_ms"] is not None
+    att = [ln for ln in lines if ln["kind"] == "attribution"]
+    assert {a["percentile"] for a in att} == {50.0, 95.0, 99.0}
+    for a in att:
+        assert abs(a["component_sum_s"] - a["band_latency_s"]) \
+            <= 0.05 * a["band_latency_s"]
+    # strict JSON: no NaN survived serialization
+    assert "NaN" not in open(path).read()
+    text = summarize(lines, show_windows=True)
+    assert "attribution (ms):" in text and "windows:" in text
+
+    # the same records stream from run_lines without touching disk
+    assert sum(1 for _ in run_lines(r)) == n_lines
+
+
+def test_dump_cli_main(tmp_path, capsys):
+    from repro.obs.dump import main as dump_main
+    r = _sim_result(n=120)
+    path = os.path.join(tmp_path, "run.jsonl")
+    write_jsonl(r, path)
+    assert dump_main([path]) == 0
+    out = capsys.readouterr().out
+    assert "run:" in out and "stage totals:" in out
