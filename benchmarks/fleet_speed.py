@@ -1,0 +1,177 @@
+"""Fleet-vectorized simulation engine gate: driver wall-clock on a
+1k-node heterogeneous mix, batched vs per-node.
+
+The windowed fleet driver used to advance simulated nodes one Python
+``submit`` call at a time — ~N small-numpy calls per window, which is
+what made 1k-node mixes and ``cluster_max_qps`` searches crawl.  The
+grouped path (``cluster.backend.submit_grouped`` over
+``core.simulator.node_pass_many``) advances every SERVING node in ONE
+numpy pass per window.  This gate times the same trace through the same
+fleet both ways and asserts
+
+  * **speedup**: grouped driver wall-clock ≥ ``FLEET_SPEED_MIN_X`` ×
+    faster (default 10×) on a ``FLEET_SPEED_NODES``-node (default 1000)
+    three-pool heterogeneous mix under diurnal traffic;
+  * **parity**: bit-identical aggregates (qps, p50/p95/p99, per-pool
+    stats, node-hours) at full scale, and bit-identical *per-query*
+    completion times (telemetry span ``t_done`` arrays) on a reduced
+    copy of the same mix — the grouped path is an optimization, not a
+    model change.
+
+Writes ``BENCH_fleet_speed.json`` (wall clocks, speedup, scale) into the
+artifact dir so the perf trajectory has a tracked data point.
+
+Env knobs for CI smoke: ``FLEET_SPEED_NODES`` (node count),
+``FLEET_SPEED_QPN`` (queries per node, default 60), ``FLEET_SPEED_MIN_X``
+(speedup bar — shared runners time noisily, CI smoke lowers it).
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from benchmarks.common import ART, cpu_curves, emit, gpu_model, sla
+from repro.cluster import (DiurnalTraffic, Fleet, NodeSpec, Pool,
+                           make_router, simulate_fleet)
+from repro.core.latency_model import TableDeviceModel
+
+ARCH = "dlrm-rmc1"
+SEED = 0
+N_NODES = int(os.environ.get("FLEET_SPEED_NODES", "1000"))
+Q_PER_NODE = float(os.environ.get("FLEET_SPEED_QPN", "60"))
+MIN_X = float(os.environ.get("FLEET_SPEED_MIN_X", "10"))
+N_WINDOWS = 100
+REPEATS = 2                   # wall clocks are min-of-N (noise-robust)
+PARITY_NODES = 128            # exact per-query check runs the mix reduced
+# the speedup gate routes round-robin (vectorized assign) so it measures
+# the *driver*; least_outstanding adds an O(queries) python heap that is
+# identical in both paths and is reported as an informational row
+ROUTER_GATE = "round_robin"
+ROUTER_INFO = "least_outstanding"
+
+
+def build_fleet(cpu, n_nodes: int) -> Fleet:
+    """Three-pool heterogeneous mix: fast CPUs, slow CPUs (a 1.6× scaled
+    copy of the measured curve — a previous-generation part), and
+    accelerator nodes."""
+    slow = TableDeviceModel(cpu.batches, cpu.seconds * 1.6)
+    n_sky = max(n_nodes // 2, 1)
+    n_bdw = max((n_nodes * 3) // 10, 1)
+    n_gpu = max(n_nodes - n_sky - n_bdw, 1)
+    return Fleet([
+        Pool("sky", NodeSpec(cpu=cpu, n_executors=8), n_sky),
+        Pool("bdw", NodeSpec(cpu=slow, n_executors=8), n_bdw),
+        Pool("gpu", NodeSpec(cpu=cpu, accel=gpu_model(ARCH), n_executors=8),
+             n_gpu),
+    ])
+
+
+def make_trace(fleet: Fleet, n_nodes: int, rng) -> tuple:
+    rate = 0.55 * fleet.total_capacity()
+    horizon = max(n_nodes * Q_PER_NODE / rate, 1e-3)
+    scenario = DiurnalTraffic(base_qps=rate, amplitude=0.4,
+                              period_s=horizon / 2.0)
+    times, sizes = scenario.generate(rng, horizon)
+    return times, sizes, horizon / N_WINDOWS
+
+
+def run(times, sizes, fleet, window_s, *, grouped, router=ROUTER_GATE,
+        telemetry=False):
+    t0 = time.perf_counter()
+    r = simulate_fleet(times, sizes, fleet, make_router(router),
+                       window_s=window_s, grouped=grouped,
+                       telemetry=telemetry)
+    return r, time.perf_counter() - t0
+
+
+def main() -> None:
+    cpu = cpu_curves()[ARCH]
+    sla_ms = sla(ARCH, "medium")
+    fleet = build_fleet(cpu, N_NODES)
+    fleet.tune(sla_ms, n_queries=600)
+    rng = np.random.default_rng(SEED)
+    times, sizes, window_s = make_trace(fleet, N_NODES, rng)
+
+    # warm the service-time tables and code paths off the clock
+    run(times[:512], sizes[:512], fleet, window_s, grouped=False)
+    run(times[:512], sizes[:512], fleet, window_s, grouped=None)
+
+    wall_ref = wall_vec = wall_ref_lo = wall_vec_lo = np.inf
+    r_ref = r_vec = None
+    for _ in range(REPEATS):
+        r_ref_i, w = run(times, sizes, fleet, window_s, grouped=False)
+        if w < wall_ref:
+            r_ref, wall_ref = r_ref_i, w
+        r_vec_i, w = run(times, sizes, fleet, window_s, grouped=None)
+        if w < wall_vec:
+            r_vec, wall_vec = r_vec_i, w
+        _, w = run(times, sizes, fleet, window_s, grouped=False,
+                   router=ROUTER_INFO)
+        wall_ref_lo = min(wall_ref_lo, w)
+        _, w = run(times, sizes, fleet, window_s, grouped=None,
+                   router=ROUTER_INFO)
+        wall_vec_lo = min(wall_vec_lo, w)
+    speedup = wall_ref / max(wall_vec, 1e-12)
+
+    agg_ok = (
+        r_ref.qps == r_vec.qps and r_ref.p50_ms == r_vec.p50_ms
+        and r_ref.p95_ms == r_vec.p95_ms and r_ref.p99_ms == r_vec.p99_ms
+        and r_ref.n_queries == r_vec.n_queries
+        and r_ref.dropped == r_vec.dropped
+        and r_ref.node_hours == r_vec.node_hours
+        and r_ref.per_pool == r_vec.per_pool)
+
+    # exact per-query completion parity, reduced scale, spans on: the
+    # span table's t_done column is the driver's authoritative done array
+    pf = build_fleet(cpu, PARITY_NODES)
+    pf.tune(sla_ms, n_queries=600)
+    prng = np.random.default_rng(SEED + 1)
+    pt, psz, pw = make_trace(pf, PARITY_NODES, prng)
+    p_ref, _ = run(pt, psz, pf, pw, grouped=False, router=ROUTER_INFO,
+                   telemetry=True)
+    p_vec, _ = run(pt, psz, pf, pw, grouped=None, router=ROUTER_INFO,
+                   telemetry=True)
+    query_ok = bool(
+        np.array_equal(p_ref.telemetry.spans.t_done,
+                       p_vec.telemetry.spans.t_done, equal_nan=True)
+        and np.array_equal(p_ref.telemetry.spans.t_exec_start,
+                           p_vec.telemetry.spans.t_exec_start,
+                           equal_nan=True))
+
+    n_q = len(times)
+    emit("fleet_speed/per_node_wall_s", wall_ref * 1e6,
+         f"nodes={N_NODES};queries={n_q};windows={N_WINDOWS}")
+    emit("fleet_speed/grouped_wall_s", wall_vec * 1e6,
+         f"nodes={N_NODES};queries={n_q};windows={N_WINDOWS}")
+    ok_speed = speedup >= MIN_X
+    emit("fleet_speed/speedup_x", speedup,
+         f"target>={MIN_X:g};router={ROUTER_GATE};"
+         f"{'PASS' if ok_speed else 'FAIL'}")
+    emit("fleet_speed/speedup_x_least_outstanding",
+         wall_ref_lo / max(wall_vec_lo, 1e-12),
+         f"router={ROUTER_INFO};informational")
+    parity_ok = agg_ok and query_ok
+    emit("fleet_speed/parity", float(parity_ok),
+         f"aggregates={'ok' if agg_ok else 'MISMATCH'};"
+         f"per_query={'ok' if query_ok else 'MISMATCH'};"
+         f"{'PASS' if parity_ok else 'FAIL'}")
+
+    os.makedirs(ART, exist_ok=True)
+    with open(os.path.join(ART, "BENCH_fleet_speed.json"), "w") as f:
+        json.dump({
+            "arch": ARCH, "router": ROUTER_GATE, "seed": SEED,
+            "n_nodes": N_NODES, "n_queries": n_q, "n_windows": N_WINDOWS,
+            "per_node_wall_s": wall_ref, "grouped_wall_s": wall_vec,
+            "speedup_x": speedup, "min_x": MIN_X,
+            "speedup_x_least_outstanding":
+                wall_ref_lo / max(wall_vec_lo, 1e-12),
+            "parity_aggregates": agg_ok, "parity_per_query": query_ok,
+            "p95_ms": r_vec.p95_ms, "qps": r_vec.qps,
+        }, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -34,6 +34,7 @@ SUITES = [
     ("remote_scaling", "benchmarks.remote_scaling"),
     ("chaos", "benchmarks.chaos"),
     ("latency_attribution", "benchmarks.latency_attribution"),
+    ("fleet_speed", "benchmarks.fleet_speed"),
     ("roofline_report", "benchmarks.roofline_report"),
 ]
 

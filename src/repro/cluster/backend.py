@@ -19,6 +19,10 @@ the node is simulated or real:
 ``SimNodeBackend`` wraps the stateful numpy fast-engine entry points in
 ``core.simulator`` (``node_pass`` carrying executor/accelerator free times
 across traffic windows — exactly the pipeline ``simulate_arrays`` runs).
+An all-sim window can skip the per-node loop entirely: ``submit_grouped``
+advances every node of a routed window in one ``node_pass_many`` pass
+(``grouped_eligible`` gates it), writing the same per-node histories the
+per-node path would — the fleet driver's fast path at 1k+ nodes.
 ``cluster.live.LiveNodeBackend`` wraps a real ``serve.runtime
 .ServingRuntime`` executing jitted models on this host.  Routers are
 engine-blind: they read only the ``NodeHandle`` surface (identity, spec,
@@ -34,7 +38,7 @@ from typing import Protocol, runtime_checkable
 import numpy as np
 
 from repro.cluster.fleet import NodeSpec, NodeView
-from repro.core.simulator import node_pass
+from repro.core.simulator import NodeEngine, node_pass, node_pass_many
 
 
 @runtime_checkable
@@ -220,8 +224,12 @@ class SimNodeBackend(NodeBackend):
         self.spec = view.spec
         self.weight = view.weight
         self.cfg = view.spec.scheduler_config()
-        self.cpu_free = np.full(self.spec.n_executors, float(t0))
-        self.acc_free = np.full(self.spec.n_accelerators, float(t0))
+        # executor/accelerator free times live in a NodeEngine so the
+        # grouped fleet advance (submit_grouped) and the per-node path
+        # below share one state representation — a window served by one
+        # path leaves exactly the state the other resumes from
+        self.engine = NodeEngine.make(self.spec.cpu, self.cfg,
+                                      self.spec.accel, t0)
         # (idx, times, done, sizes, model_ids, exec_start-or-None)
         self._chunks: list[tuple[np.ndarray, np.ndarray, np.ndarray,
                                  np.ndarray, np.ndarray | None,
@@ -237,16 +245,21 @@ class SimNodeBackend(NodeBackend):
         if self._killed:
             raise RuntimeError(f"node {self.key} is dead (cancel_pending "
                                f"was called) — it accepts no new queries")
+        eng = self.engine
         if self._spans:
-            done, _, _, self.cpu_free, self.acc_free, starts = node_pass(
+            done, _, _, cpu_free, acc_free, starts = node_pass(
                 times, sizes, self.spec.cpu, self.cfg,
-                accel=self.spec.accel, cpu_free=self.cpu_free,
-                acc_free=self.acc_free, want_starts=True)
+                accel=self.spec.accel,
+                cpu_free=eng.cpu_state.materialize(),
+                acc_free=eng.acc_state.materialize(), want_starts=True)
         else:
-            done, _, _, self.cpu_free, self.acc_free = node_pass(
+            done, _, _, cpu_free, acc_free = node_pass(
                 times, sizes, self.spec.cpu, self.cfg, accel=self.spec.accel,
-                cpu_free=self.cpu_free, acc_free=self.acc_free)
+                cpu_free=eng.cpu_state.materialize(),
+                acc_free=eng.acc_state.materialize())
             starts = None
+        eng.cpu_state.set_free(cpu_free)
+        eng.acc_state.set_free(acc_free)
         self._chunks.append((np.asarray(idx), np.asarray(times, float),
                              done, np.asarray(sizes, np.int64), model_ids,
                              starts))
@@ -317,3 +330,101 @@ def sim_backends(views: list[NodeView], t0: float = 0.0
                  ) -> list[SimNodeBackend]:
     """One ``SimNodeBackend`` per node of a fleet, booted idle at ``t0``."""
     return [SimNodeBackend(v, t0=t0) for v in views]
+
+
+# ---------------------------------------------------- grouped fleet path
+
+
+def grouped_eligible(backends) -> bool:
+    """Can this node list be advanced by ``submit_grouped``?  Exactly the
+    plain simulated engine — a live/remote node (wall-clock timeline), a
+    ``SimNodeBackend`` subclass with its own ``submit``, or an
+    already-killed node all defer to the per-node loop."""
+    return all(type(b) is SimNodeBackend and not b._killed
+               for b in backends)
+
+
+def submit_grouped(backends: list[SimNodeBackend], assign: np.ndarray,
+                   idx: np.ndarray, times: np.ndarray, sizes: np.ndarray,
+                   model_ids: np.ndarray | None = None,
+                   engines: list | None = None,
+                   keep_records: bool = True
+                   ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """One batched numpy advance for a whole routed window of simulated
+    nodes — the fleet-scale replacement for N per-node ``submit`` calls.
+
+    ``assign`` maps each query to its node index in ``backends`` (the
+    router's window assignment); the window is permuted node-segmented
+    (stable sort, preserving FIFO arrival order within each node — the
+    same order per-node ``submit`` would have seen), advanced in one
+    ``node_pass_many`` pass, and each node's slice is appended to its own
+    ``_chunks`` history — so ``completed_records`` / ``cancel_pending`` /
+    ``idle`` / ``span_arrays`` behave exactly as if the node had served
+    the window itself.  Span stamps are computed iff any node has them
+    enabled (the driver enables all-or-none).
+
+    Returns ``(done, order, seg_bounds, exec_starts)``: per-query
+    completion times aligned with the *input* window order, the
+    node-segmented permutation and its per-node end offsets (so the
+    caller's telemetry fold can reuse the segmentation instead of
+    re-sorting), and — when spans are enabled — each query's first
+    executor dispatch time in input order (else ``None``), letting the
+    driver stamp the span table inline per window instead of re-walking
+    chunk histories at end of run.
+
+    ``engines`` is an optional precomputed ``[b.engine for b in
+    backends]`` — a steady-state driver caches it per serving list so
+    the per-window work touches only nodes that actually received
+    queries.  When omitted (or on any doubt) it is rebuilt here, with a
+    dead-node check.
+
+    ``keep_records=False`` skips the per-node ``_chunks`` scatter — the
+    largest per-window cost of the grouped layout (hundreds of array
+    slices a window).  Only a driver that has proven the history has no
+    reader may pass it: no telemetry spans, no scheduled kills or chaos
+    (``cancel_pending`` rolls chunks back), no autoscaler/heal
+    (``idle`` reads them), no caller-owned backends
+    (``completed_records`` is public surface).  The completion times
+    themselves are unaffected — chunks are bookkeeping, not state.
+    """
+    assign = np.asarray(assign, np.int64)
+    order = np.argsort(assign, kind="stable")
+    seg_bounds = np.cumsum(np.bincount(assign, minlength=len(backends)))
+    p_times = np.asarray(times, float)[order]
+    p_sizes = np.asarray(sizes, np.int64)[order]
+    p_idx = np.asarray(idx)[order]
+    p_mids = model_ids[order] if model_ids is not None else None
+
+    spans = False
+    if engines is None:
+        engines = []
+        for b in backends:
+            if b._killed:
+                raise RuntimeError(f"node {b.key} is dead (cancel_pending "
+                                   f"was called) — it accepts no new "
+                                   f"queries")
+            engines.append(b.engine)
+            spans = spans or b._spans
+    else:
+        spans = backends[0]._spans if backends else False
+    done_p, starts_p = node_pass_many(p_times, p_sizes, seg_bounds, engines,
+                                      want_starts=spans)
+    done = np.empty(len(p_times))
+    done[order] = done_p
+    starts = None
+    if starts_p is not None:
+        starts = np.empty(len(p_times))
+        starts[order] = starts_p
+
+    if keep_records:
+        seg_starts = np.concatenate(([0], seg_bounds[:-1]))
+        for i in np.flatnonzero(seg_bounds - seg_starts).tolist():
+            b = backends[i]
+            s, e = int(seg_starts[i]), int(seg_bounds[i])
+            st = starts_p[s:e] if (starts_p is not None and b._spans) \
+                else None
+            b._chunks.append((p_idx[s:e], p_times[s:e], done_p[s:e],
+                              p_sizes[s:e],
+                              p_mids[s:e] if p_mids is not None else None,
+                              st))
+    return done, order, seg_bounds, starts

@@ -7,9 +7,11 @@ queries with ``submit``, and the driver folds completions into fleet-wide
 latencies.  The driver is engine-agnostic — the same loop runs
 
   * ``SimNodeBackend``s (the numpy fast engine: ``core.simulator
-    .node_pass`` carrying executor free-times across windows, so a 64-node
-    fleet over a 1500-query trace costs tens of per-node vectorized
-    advances instead of a global event heap), and
+    .node_pass`` carrying executor free-times across windows — and, when
+    every active node is simulated, the fleet-vectorized grouped path:
+    ONE ``submit_grouped``/``node_pass_many`` advance per window instead
+    of N per-node calls, which is what keeps 1k-node fleets and
+    ``cluster_max_qps`` searches interactive), and
   * ``LiveNodeBackend``s (``cluster.live``: real ``ServingRuntime``
     instances executing jitted models, paced on the wall clock) —
 
@@ -46,7 +48,8 @@ import time
 import numpy as np
 
 from repro.cluster.autoscaler import Autoscaler, ScalingEvent
-from repro.cluster.backend import BackendDied, NodeBackend, SimNodeBackend
+from repro.cluster.backend import (BackendDied, NodeBackend, SimNodeBackend,
+                                   grouped_eligible, submit_grouped)
 from repro.cluster.fleet import Fleet
 from repro.cluster.lifecycle import (FleetController, FleetFaults,
                                      LifecycleEvent, NodeState,
@@ -212,7 +215,8 @@ def drive_fleet(times: np.ndarray, sizes: np.ndarray,
                 fleet_faults: FleetFaults | None = None,
                 self_heal: SelfHealPolicy | None = None,
                 drain_timeout: float = 120.0,
-                telemetry: bool = False) -> ClusterResult:
+                telemetry: bool = False,
+                grouped: bool | None = None) -> ClusterResult:
     """Run one trace through a fleet of node backends.  ``times`` must be
     sorted; ``model_ids`` (optional) labels each query with its tenant and
     is threaded through both the router and ``NodeBackend.submit``.
@@ -259,6 +263,19 @@ def drive_fleet(times: np.ndarray, sizes: np.ndarray,
     error and re-route counters), and a per-window :class:`FleetTimeline`
     of registry snapshots.  Off (the default) the driver does no span or
     registry work at all — today's behavior, at today's cost.
+
+    ``grouped`` controls the fleet-vectorized window submit: when every
+    active node is a plain ``SimNodeBackend``, a window is advanced in
+    ONE batched numpy pass (``cluster.backend.submit_grouped`` over
+    ``core.simulator.node_pass_many``) instead of N per-node ``submit``
+    calls, including a single vectorized telemetry fold — per-query
+    results are identical either way (the equivalence tests pin this).
+    ``None``/``True`` (default) use it whenever eligible; ``False``
+    forces the per-node loop (the ``fleet_speed`` benchmark's baseline).
+    The driver falls back to per-node automatically for live/remote
+    fleets, single-node windows, and any window where a kill landed
+    (orphan re-routes and mid-submit deaths take the per-node path,
+    keeping the faults machinery exactly as exercised before).
     """
     times = np.asarray(times, float)
     sizes = np.asarray(sizes, np.int64)
@@ -334,10 +351,70 @@ def drive_fleet(times: np.ndarray, sizes: np.ndarray,
             tel.registry.counter("rpc_retries").inc(d)
             retry_seen[b.key] = rc
 
-    def _submit(active, assign, gidx, wt, ws, wm):
+    use_grouped = grouped is not False
+    # grouped-path structures, keyed on the serving list *object* (the
+    # controller returns the same cached list while membership is
+    # unchanged, so steady-state windows skip every O(nodes) rebuild).
+    # Eligibility cannot flip for a given list object: a kill or a
+    # membership change always produces a new serving list.
+    grp = {"ref": None, "ok": False, "engines": None, "pools": None}
+    # did any window go through the per-node submit loop with telemetry
+    # on?  Grouped windows stamp the span table inline; only per-node
+    # windows leave span stamps behind in backend chunk histories, so a
+    # run where every window grouped skips the end-of-run chunk walk
+    chunk_spans = [False]
+    # the grouped path may drop per-node chunk histories only when the
+    # run provably never reads them: no telemetry (span_arrays), no
+    # kills/chaos (cancel_pending rolls chunks back), no autoscaler or
+    # heal policy (DRAINING's idle probe), and no caller-owned backends
+    # (completed_records is public surface on those)
+    grp_records = (tel is not None or backends is not None
+                   or autoscaler is not None or self_heal is not None
+                   or bool(controller.faults.kills)
+                   or bool(getattr(controller.faults, "injections", None)))
+
+    def _grouped_parts(active):
+        if grp["ref"] is not active:
+            grp["ref"] = active
+            grp["ok"] = len(active) > 1 and grouped_eligible(active)
+            if grp["ok"]:
+                grp["engines"] = [b.engine for b in active]
+                grp["pools"] = np.array([b.pool for b in active], object)
+        return grp
+
+    def _submit(active, assign, gidx, wt, ws, wm, allow_grouped=False):
         """Submit a routed window; a node dying *inside* submit is not a
         driver crash — its share is returned as ``{key: lost global
-        indices}`` for the heal/re-route loop."""
+        indices}`` for the heal/re-route loop.
+
+        With ``allow_grouped`` (the plain-window call site) an all-sim
+        node list takes the batched path: one ``submit_grouped`` advance
+        plus one vectorized telemetry fold, no per-node Python loop.
+        Single-node windows stay per-node — the batched layout only pays
+        off across nodes."""
+        if allow_grouped and use_grouped and _grouped_parts(active)["ok"]:
+            ret, order, segb, xs = submit_grouped(
+                active, assign, gidx, wt, ws, wm,
+                engines=grp["engines"], keep_records=grp_records)
+            done[gidx] = ret
+            pool_of[gidx] = grp["pools"][assign]
+            if tel is not None:
+                v = np.subtract(ret, wt)
+                v *= 1e3
+                tel.registry.observe_grouped(
+                    "node_latency_ms", "node", assign, v,
+                    fmt=lambda i: _node_name(active[int(i)]),
+                    also=(fleet_hist,), order=order, bounds=segb)
+                if xs is not None:
+                    # stamp spans inline (released = arrival for the
+                    # analytic engine) — the end-of-run chunk walk only
+                    # runs for windows the per-node loop served
+                    tel.spans.record_many(gidx, wt, xs, ret)
+                else:
+                    chunk_spans[0] = True
+            return {}
+        if tel is not None:
+            chunk_spans[0] = True
         lost: dict[tuple, np.ndarray] = {}
         for i, b in enumerate(active):
             sel = assign == i
@@ -416,7 +493,11 @@ def drive_fleet(times: np.ndarray, sizes: np.ndarray,
         wm = model_ids[idx] if model_ids is not None else None
         if len(active):
             assign = router.assign(wt, ws, active, model_ids=wm)
-            lost.update(_submit(active, assign, idx, wt, ws, wm))
+            # a kill window (orphans just re-routed) stays on the
+            # per-node path end to end — the faults machinery is
+            # exercised exactly as it was before the grouped path existed
+            lost.update(_submit(active, assign, idx, wt, ws, wm,
+                                allow_grouped=not orphans))
         # else: no SERVING node this window — queries stay NaN (dropped)
         elif tel is not None and len(idx):
             tel.spans.mark_shed(idx)
@@ -542,10 +623,12 @@ def drive_fleet(times: np.ndarray, sizes: np.ndarray,
                 if tel is not None:
                     tel.spans.record(r.index, r.t_released, r.t_exec_start,
                                      r.t_done)
-    elif tel is not None:
+    elif tel is not None and chunk_spans[0]:
         # sim spans, vectorized per node: killed backends already rolled
         # orphaned completions out of their history, and re-routed queries
         # were re-recorded by whichever survivor actually served them
+        # (grouped windows were stamped inline at submit, and chunk
+        # replay simply re-writes those rows with identical values)
         for b in controller.all_created():
             sa = getattr(b, "span_arrays", None)
             if sa is not None:
@@ -589,7 +672,8 @@ def simulate_fleet(times: np.ndarray, sizes: np.ndarray, fleet: Fleet,
                    contention: ContentionModel | None = None,
                    model_ids: np.ndarray | None = None,
                    seed: int = 0,
-                   telemetry: bool = False) -> ClusterResult:
+                   telemetry: bool = False,
+                   grouped: bool | None = None) -> ClusterResult:
     """Run one trace through a simulated fleet.  ``times`` must be sorted.
 
     Fast path (default): ``drive_fleet`` over per-node ``SimNodeBackend``s
@@ -602,6 +686,9 @@ def simulate_fleet(times: np.ndarray, sizes: np.ndarray, fleet: Fleet,
     survivors) and stays on the fast path.  With per-node ``faults``/
     ``contention`` every node routes through the event-driven reference
     instead (single window, no autoscaling, no fleet faults).
+    ``grouped`` is forwarded to ``drive_fleet`` — ``False`` forces the
+    per-node submit loop, default uses the fleet-vectorized batched
+    advance whenever a window is eligible.
     """
     times = np.asarray(times, float)
     sizes = np.asarray(sizes, np.int64)
@@ -659,7 +746,7 @@ def simulate_fleet(times: np.ndarray, sizes: np.ndarray, fleet: Fleet,
                        autoscaler=autoscaler, fleet=work_fleet,
                        factory=SimNodeBackend, model_ids=model_ids,
                        fleet_faults=fleet_faults, self_heal=self_heal,
-                       telemetry=telemetry)
+                       telemetry=telemetry, grouped=grouped)
 
 
 def cluster_max_qps(fleet: Fleet, router: Router, sla_ms: float, *,

@@ -230,12 +230,27 @@ class Fleet:
 
     def node_views(self) -> list["NodeView"]:
         """Flattened per-node view (pool order, then member index within
-        pool) — what routers and the cluster driver iterate over."""
+        pool) — what routers and the cluster driver iterate over.
+
+        Memoized behind a cheap membership fingerprint: the windowed
+        driver calls this a few times per window, and at 1k–10k nodes
+        rebuilding the ``NodeView`` list dominated the per-window cost.
+        Any mutation that changes what the views would contain — tune,
+        scale, kill, readmit, a spec swap — changes the fingerprint and
+        invalidates the cache.  Callers must not mutate the returned
+        list (``NodeView`` itself is frozen)."""
+        fp = tuple((p.name, id(p.spec), p.count, p.qps_capacity,
+                    None if p.members is None else tuple(p.members))
+                   for p in self.pools)
+        cached = getattr(self, "_views_cache", None)
+        if cached is not None and cached[0] == fp:
+            return cached[1]
         out = []
         for p in self.pools:
             for i in p.member_ids():
                 out.append(NodeView(pool=p.name, index_in_pool=i, spec=p.spec,
                                     weight=max(p.qps_capacity, 1e-9)))
+        self._views_cache = (fp, out)
         return out
 
 

@@ -201,6 +201,13 @@ class FleetController:
         self._restarts: dict[tuple, int] = {}  # key → heal budget used
         self._owned = fleet is not None
         self._explicit = list(backends or [])
+        # membership revision: bumped on every state transition, it keys
+        # the serving-list / billable-count caches — at fleet scale the
+        # per-window O(nodes) rebuild was pure driver overhead (nothing
+        # changes in the vast majority of windows)
+        self._rev = 0
+        self._serving_cache: tuple | None = None
+        self._billable_cache: tuple | None = None
 
     # ------------------------------------------------------------ plumbing
 
@@ -216,6 +223,7 @@ class FleetController:
 
     def _transition(self, t: float, key: tuple, state: NodeState) -> None:
         self.events.append(LifecycleEvent(t, key[0], key[1], state))
+        self._rev += 1
 
     def _materialize(self, view: NodeView, t: float, *, warm: bool) -> None:
         b = self.factory(view, t)
@@ -301,12 +309,19 @@ class FleetController:
                                 spec=p.spec,
                                 weight=max(p.qps_capacity, 1e-9))
                 self._materialize(view, t, warm=False)
-        views = {(v.pool, v.index_in_pool): v
-                 for v in self.fleet.node_views()} if self.fleet else {}
         # ledger additions (autoscaler growth), cold — except a key whose
         # node is still DRAINING from an earlier shrink: the ledger naming
         # it again cancels the drain (the backend never stopped, so it
-        # resumes SERVING warm rather than colliding with a fresh twin)
+        # resumes SERVING warm rather than colliding with a fresh twin).
+        # The ledger's view list is cached on membership (``Fleet.node_views``)
+        # — the same object as last window means no ledger mutation, so the
+        # whole additions scan is skipped
+        vlist = self.fleet.node_views() if self.fleet else []
+        if vlist is getattr(self, "_seen_views", None):
+            views = {}
+        else:
+            self._seen_views = vlist
+            views = {(v.pool, v.index_in_pool): v for v in vlist}
         for key, v in views.items():
             node = self._nodes.get(key)
             if node is not None:
@@ -535,10 +550,22 @@ class FleetController:
 
     def serving(self) -> list[NodeBackend]:
         """The router-visible fleet, in ledger order (fleet mode) or
-        insertion order (explicit backends)."""
-        return [self._nodes[k].backend for k in self._view_keys()
-                if k in self._nodes
-                and self._nodes[k].state is NodeState.SERVING]
+        insertion order (explicit backends).
+
+        Cached against the transition revision (and the ledger's cached
+        view list, which a pure ledger mutation swaps): steady-state
+        windows return the *same list object*, which downstream callers
+        (the grouped driver path) use as their own cache key.  Callers
+        must treat the returned list as read-only."""
+        views = self.fleet.node_views() if self.fleet is not None else None
+        c = self._serving_cache
+        if c is not None and c[0] == self._rev and c[1] is views:
+            return c[2]
+        out = [self._nodes[k].backend for k in self._view_keys()
+               if k in self._nodes
+               and self._nodes[k].state is NodeState.SERVING]
+        self._serving_cache = (self._rev, views, out)
+        return out
 
     def advance_targets(self) -> list[NodeBackend]:
         """Realtime nodes that must track the window boundary: SERVING
@@ -571,8 +598,13 @@ class FleetController:
         instance from the moment it is provisioned) + SERVING.  DRAINING
         remainders and the dead are free, matching the pre-lifecycle
         driver's accounting."""
-        return sum(n.state in (NodeState.BOOTING, NodeState.SERVING)
-                   for n in self._nodes.values())
+        c = self._billable_cache
+        if c is not None and c[0] == self._rev:
+            return c[1]
+        n = sum(node.state in (NodeState.BOOTING, NodeState.SERVING)
+                for node in self._nodes.values())
+        self._billable_cache = (self._rev, n)
+        return n
 
     @property
     def n_nodes(self) -> int:

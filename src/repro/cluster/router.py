@@ -41,6 +41,7 @@ placement/SLA policies.
 """
 from __future__ import annotations
 
+import heapq
 from typing import Sequence
 
 import numpy as np
@@ -65,6 +66,26 @@ class Router:
         """Forget cross-window state (new simulation run)."""
 
 
+def _drain_consts(spec) -> float:
+    """Memoized per-request executor-pool cost of ``spec`` — the
+    ``service_time_table`` row lookup that ``_class_drain_seconds`` used
+    to redo for the same spec every window.  Cached *on the spec object*
+    (the same idiom the device models use for their service tables) and
+    keyed by the knob values it depends on, so an in-place ``tune`` of a
+    shared spec invalidates naturally; ``Fleet.tune``'s spec replacement
+    (``dataclasses.replace``) starts a fresh cache either way."""
+    knobs = (max(spec.batch_size, 1), spec.n_executors,
+             spec.request_overhead_s)
+    cached = getattr(spec, "_drain_cache", None)
+    if cached is not None and cached[0] == knobs:
+        return cached[1]
+    B = knobs[0]
+    per_req = float(service_time_table(spec.cpu, B)[B]
+                    + spec.request_overhead_s)
+    spec._drain_cache = (knobs, per_req)
+    return per_req
+
+
 def _class_drain_seconds(spec, sizes: np.ndarray
                          ) -> tuple[np.ndarray, np.ndarray]:
     """Estimated time (s) a node of ``spec`` needs to drain each query,
@@ -74,9 +95,9 @@ def _class_drain_seconds(spec, sizes: np.ndarray
     sizes = np.asarray(sizes, np.int64)
     B = max(spec.batch_size, 1)
     n_req = -(-sizes // B)
-    cpu_tab = service_time_table(spec.cpu, B)
-    est = n_req * (cpu_tab[B] + spec.request_overhead_s) \
-        / max(spec.n_executors, 1)
+    # evaluation order matches the pre-memoization expression bit for bit:
+    # (n_req * (tab[B] + overhead)) / n_executors
+    est = n_req * _drain_consts(spec) / max(spec.n_executors, 1)
     off = np.zeros(len(sizes), bool)
     if spec.has_accel and len(sizes):
         acc_tab = service_time_table(spec.accel, int(sizes.max()))
@@ -85,22 +106,42 @@ def _class_drain_seconds(spec, sizes: np.ndarray
     return est, off
 
 
+def _est_work_by_class(nodes: Sequence[NodeHandle], sizes: np.ndarray
+                       ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Class-compact drain estimates: ``(cls_of, est, off)`` where
+    ``est``/``off`` hold one row per distinct node *class* and
+    ``cls_of[i]`` maps node ``i`` to its row.  Classes are keyed by the
+    drain-relevant spec values (not object identity), so equal-but-
+    distinct specs — e.g. a copied fleet — share one row, and an N-node
+    fleet of C classes costs O(C·Q) instead of O(N·Q)."""
+    cls_of = np.empty(len(nodes), np.int64)
+    keymap: dict = {}
+    rows: list[tuple] = []
+    for i, nv in enumerate(nodes):
+        s = nv.spec
+        key = (id(s.cpu), id(s.accel), s.batch_size, s.offload_threshold,
+               s.n_executors, s.n_accelerators, s.request_overhead_s)
+        c = keymap.get(key)
+        if c is None:
+            c = keymap[key] = len(rows)
+            rows.append(_class_drain_seconds(s, sizes))
+        cls_of[i] = c
+    if not rows:
+        return cls_of, np.empty((0, len(sizes))), \
+            np.empty((0, len(sizes)), bool)
+    return cls_of, np.stack([r[0] for r in rows]), \
+        np.stack([r[1] for r in rows])
+
+
 def _est_work(nodes: Sequence[NodeHandle], sizes: np.ndarray
               ) -> tuple[np.ndarray, np.ndarray]:
     """(n_nodes, n_queries) drain-seconds estimate and offload-path mask,
-    one row per node, with per-class rows computed once (pools share spec
-    objects)."""
-    cache: dict[int, tuple] = {}
-    est_rows, off_rows = [], []
-    for nv in nodes:
-        key = id(nv.spec)
-        if key not in cache:
-            cache[key] = _class_drain_seconds(nv.spec, sizes)
-        est_rows.append(cache[key][0])
-        off_rows.append(cache[key][1])
-    if not est_rows:
-        return np.empty((0, len(sizes))), np.empty((0, len(sizes)), bool)
-    return np.stack(est_rows), np.stack(off_rows)
+    one row per node — the class-compact rows fanned back out for
+    policies that index per node."""
+    cls_of, est, off = _est_work_by_class(nodes, sizes)
+    if not len(cls_of):
+        return est, off
+    return est[cls_of], off[cls_of]
 
 
 def _load_state(store: dict, nodes: Sequence[NodeHandle]) -> np.ndarray:
@@ -144,6 +185,72 @@ class RoundRobinRouter(Router):
         return out.astype(np.int64)
 
 
+def _assign_scalar(times: np.ndarray, est: np.ndarray, backlog: np.ndarray,
+                   last_t: float) -> tuple[np.ndarray, np.ndarray, float]:
+    """The original greedy join-least-work loop — decay every node's
+    backlog at every query, argmin, add the winner's estimate.  O(N·Q)
+    Python-level work; kept verbatim as the semantic reference the
+    event-sorted heap evaluation below is tested against."""
+    out = np.empty(len(times), np.int64)
+    for j, t in enumerate(np.asarray(times, float)):
+        backlog -= t - last_t          # queues drain in real time
+        np.maximum(backlog, 0.0, out=backlog)
+        i = int(np.argmin(backlog))
+        backlog[i] += est[i, j]
+        out[j] = i
+        last_t = t
+    return out, backlog, last_t
+
+
+def _assign_heap(times: np.ndarray, est: np.ndarray, cls_of: np.ndarray,
+                 backlog: np.ndarray, last_t: float
+                 ) -> tuple[np.ndarray, np.ndarray, float]:
+    """Event-sorted evaluation of the greedy join-least-work policy.
+
+    "Decay and clamp" is memoryless: node *i*'s decayed backlog at time
+    ``t`` is exactly ``max(d_i − t, 0)`` where ``d_i`` — its *drain
+    instant* — is the time of its last update plus the backlog written
+    then.  So instead of decaying all N backlogs per query (the scalar
+    reference's O(N·Q)), keep the nodes in two heaps: busy ``(d_i, i)``
+    and idle ``(i,)``.  Arrivals pop drained nodes into the idle heap;
+    each query goes to the min-index idle node (its decayed backlog is
+    0, and ``np.argmin`` breaks the all-zeros tie at the lowest index)
+    or, with every node busy, to the smallest ``(d_i, i)`` — the same
+    winner the argmin picks, tie-broken identically, in
+    O((N + Q) log N).  ``est`` is class-compact; ``cls_of`` maps nodes
+    to rows."""
+    n = len(cls_of)
+    out = np.empty(len(times), np.int64)
+    if not len(times) or n == 0:
+        return out, backlog, last_t
+    busy = [(last_t + backlog[i], i) for i in range(n) if backlog[i] > 0.0]
+    idle = [i for i in range(n) if backlog[i] <= 0.0]
+    heapq.heapify(busy)
+    heapq.heapify(idle)
+    push, pop = heapq.heappush, heapq.heappop
+    class_rows = [row.tolist() for row in est]
+    node_rows = [class_rows[c] for c in cls_of.tolist()]
+    tl = np.asarray(times, float).tolist()
+    for j, t in enumerate(tl):
+        while busy and busy[0][0] <= t:
+            push(idle, pop(busy)[1])
+        if idle:
+            i = pop(idle)
+            d = t + node_rows[i][j]
+        else:
+            d0, i = pop(busy)
+            d = d0 + node_rows[i][j]
+        out[j] = i
+        push(busy, (d, i))
+    t_last = tl[-1]
+    new_backlog = np.zeros(n)
+    for d, i in busy:
+        b = d - t_last
+        if b > 0.0:
+            new_backlog[i] = b
+    return out, new_backlog, t_last
+
+
 class LeastOutstandingRouter(Router):
     name = "least_outstanding"
 
@@ -156,17 +263,10 @@ class LeastOutstandingRouter(Router):
 
     def assign(self, times, sizes, nodes, model_ids=None) -> np.ndarray:
         backlog = _load_state(self._store, nodes)
-        est, _ = _est_work(nodes, sizes)
-        out = np.empty(len(times), np.int64)
-        last_t = self._last_t
-        for j, t in enumerate(np.asarray(times, float)):
-            backlog -= t - last_t          # queues drain in real time
-            np.maximum(backlog, 0.0, out=backlog)
-            i = int(np.argmin(backlog))
-            backlog[i] += est[i, j]
-            out[j] = i
-            last_t = t
-        self._store, self._last_t = _store_state(backlog, nodes), last_t
+        cls_of, est, _ = _est_work_by_class(nodes, sizes)
+        out, backlog, self._last_t = _assign_heap(
+            np.asarray(times, float), est, cls_of, backlog, self._last_t)
+        self._store = _store_state(backlog, nodes)
         return out
 
 

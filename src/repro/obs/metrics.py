@@ -305,24 +305,47 @@ class MetricsRegistry:
         return h
 
     def observe_grouped(self, name: str, label: str, groups,
-                        values, fmt=str) -> None:
+                        values, fmt=str, also=(), order=None,
+                        bounds=None) -> None:
         """Fold a labeled batch into per-group histograms in one
         vectorized pass: the whole batch is bucketized once and group
         digests are carved out with ``reduceat``/``bincount``, so a
         window's per-model (or per-node) fold costs O(batch), not
         O(groups × batch) — the fleet-scale hot path.  ``fmt`` renders a
-        group value into its label string (e.g. node index -> name)."""
+        group value into its label string (e.g. node index -> name).
+
+        ``also`` takes extra :class:`Histogram` rollups (e.g. the
+        fleet-wide latency histogram) that absorb the *whole* batch's
+        digest — the column sums of the per-group bucket grid, so the
+        rollup is exactly the merge of the per-group digests (what
+        per-node ``observe_fanout`` calls would have produced) at no
+        extra bucketization cost.
+
+        ``order``/``bounds`` reuse a segmentation the caller already
+        owns (the grouped fleet submit stable-sorts each window by node
+        and returns the permutation + per-group end offsets): the
+        argsort here is skipped and group starts come straight from the
+        offsets.  Only taken when no value is NaN — a NaN filter would
+        misalign the offsets, so that case falls back to sorting."""
         a = np.asarray(values, float).ravel()
         g = np.asarray(groups).ravel()
         keep = ~np.isnan(a)
-        if not keep.all():
+        clean = keep.all()
+        if not clean:
             a, g = a[keep], g[keep]
         if not len(a):
             return
-        order = np.argsort(g, kind="stable")
-        a, g = a[order], g[order]
-        change = np.r_[True, g[1:] != g[:-1]]
-        starts = np.flatnonzero(change)
+        if clean and order is not None and bounds is not None:
+            a, g = a[order], g[order]
+            seg_starts = np.concatenate(([0], bounds[:-1]))
+            starts = seg_starts[bounds > seg_starts]
+            change = np.zeros(len(a), bool)
+            change[starts] = True
+        else:
+            order = np.argsort(g, kind="stable")
+            a, g = a[order], g[order]
+            change = np.r_[True, g[1:] != g[:-1]]
+            starts = np.flatnonzero(change)
         n_g = len(starts)
         counts = np.diff(np.r_[starts, len(a)])
         sums = np.add.reduceat(a, starts)
@@ -352,6 +375,13 @@ class MetricsRegistry:
             h = self.histogram(name, **{label: fmt(g[starts[k]])})
             h.total._absorb(d)
             h.window._absorb(d)
+        if also:
+            d_all = (int(len(a)), float(sums.sum()), float(mins.min()),
+                     float(maxs.max()), int(n_zero.sum()), lo,
+                     grid.sum(axis=0) if grid is not None else None)
+            for h in also:
+                h.total._absorb(d_all)
+                h.window._absorb(d_all)
 
     # -- read side ---------------------------------------------------------
 

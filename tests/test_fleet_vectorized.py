@@ -1,0 +1,303 @@
+"""Fleet-vectorized engine equivalence: the batched per-window advance
+(``advance_pool_many`` / ``node_pass_many`` / ``submit_grouped``) is an
+optimization of the per-node driver, not a model change — every test here
+pins bit-identical results against the scalar path it replaced.
+
+All traces are small and synthetic (canned device curves, no JAX) so the
+tier-1 wall-clock stays bounded.
+"""
+import numpy as np
+import pytest
+
+import repro.cluster.cluster_sim as cluster_sim
+from repro.cluster import (DiurnalTraffic, Fleet, FleetFaults, NodeKill,
+                           NodeSpec, Pool, ScaledDeviceModel, make_router,
+                           simulate_fleet)
+from repro.cluster.backend import submit_grouped
+from repro.cluster.router import (LeastOutstandingRouter, _assign_heap,
+                                  _assign_scalar, _est_work_by_class)
+from repro.core.latency_model import (GPU_1080TI, AnalyticalDeviceModel,
+                                      TableDeviceModel)
+from repro.core.simulator import (ExecPoolState, NodeEngine, SchedulerConfig,
+                                  advance_pool, advance_pool_many, node_pass,
+                                  node_pass_many, split_requests,
+                                  split_requests_many)
+
+pytestmark = pytest.mark.cluster
+
+CPU = TableDeviceModel(np.array([1., 4, 16, 64, 256, 1024]),
+                       np.array([.0008, .001, .0018, .0045, .015, .058]))
+ACCEL = AnalyticalDeviceModel(
+    flops_per_sample=5e6, mem_bytes_per_sample=1e5, in_bytes_per_sample=4e3,
+    **GPU_1080TI)
+
+
+def _fleet(sky=8, bdw=6, gpu=4) -> Fleet:
+    return Fleet([
+        Pool("sky", NodeSpec(cpu=CPU, batch_size=8, n_executors=4),
+             count=sky),
+        Pool("bdw", NodeSpec(cpu=ScaledDeviceModel(CPU, 1.5), batch_size=8,
+                             n_executors=4), count=bdw),
+        Pool("gpu", NodeSpec(cpu=CPU, accel=ACCEL, batch_size=8,
+                             n_executors=4, offload_threshold=150),
+             count=gpu),
+    ])
+
+
+def _trace(rng, horizon=6.0, qps=500.0):
+    t, s = DiurnalTraffic(base_qps=qps, amplitude=0.5,
+                          period_s=horizon / 2).generate(rng, horizon)
+    return t, s
+
+
+# ----------------------------------------------------- primitive parity
+
+
+def test_split_requests_many_matches_constant_batch(rng):
+    sizes = rng.integers(1, 700, 60)
+    for B in (1, 8, 64):
+        ref = split_requests(sizes, B)
+        got = split_requests_many(sizes, np.full(len(sizes), B, np.int64))
+        for a, b in zip(ref, got):
+            assert np.array_equal(a, b)
+
+
+def test_split_requests_many_mixed_batches_match_per_query(rng):
+    sizes = rng.integers(1, 500, 40)
+    batch = rng.choice([1, 4, 8, 32], 40)
+    group, req_batch, bounds = split_requests_many(sizes, batch)
+    starts = np.concatenate(([0], bounds[:-1]))
+    for q in range(len(sizes)):
+        _, rb, _ = split_requests(sizes[q:q + 1], int(batch[q]))
+        assert np.array_equal(req_batch[starts[q]:bounds[q]], rb)
+        assert np.all(group[starts[q]:bounds[q]] == q)
+
+
+def test_split_requests_many_rejects_zero_sizes():
+    with pytest.raises(ValueError):
+        split_requests_many(np.array([4, 0, 2]), np.array([8, 8, 8]))
+
+
+def test_advance_pool_many_matches_chained_scalar(rng):
+    """Randomized multi-window trials spanning every regime: idle pools
+    with room (closed form), busy pools (lockstep heap), idle-but-
+    overfull pools and zero-executor pools (scalar fallback)."""
+    for trial in range(20):
+        cs = [int(c) for c in rng.integers(0, 5, 6)]
+        states = [ExecPoolState(c) for c in cs]
+        frees = [np.zeros(c) for c in cs]
+        t0 = 0.0
+        for _ in range(4):
+            arr_segs, svc_segs = [], []
+            for _ in cs:
+                r = int(rng.integers(0, 12))
+                arr_segs.append(np.sort(t0 + rng.uniform(0, 0.4, r)))
+                svc_segs.append(rng.uniform(0.01, 0.5, r))
+            bounds = np.cumsum([len(a) for a in arr_segs])
+            arrivals = np.concatenate(arr_segs)
+            svc = np.concatenate(svc_segs)
+            out = advance_pool_many(arrivals, svc, bounds, states)
+            starts = np.concatenate(([0], bounds[:-1]))
+            for i in range(len(cs)):
+                dep, frees[i] = advance_pool(arr_segs[i], svc_segs[i],
+                                             frees[i])
+                assert np.array_equal(out[starts[i]:bounds[i]], dep,
+                                      equal_nan=True), (trial, i)
+                assert np.array_equal(np.sort(states[i].materialize()),
+                                      np.sort(frees[i]))
+            # next window overlaps the backlog → busy pools go lockstep
+            t0 += 0.2
+
+
+def test_advance_pool_many_empty_window_keeps_state():
+    st = ExecPoolState(2, t0=5.0)
+    out = advance_pool_many(np.empty(0), np.empty(0), np.array([0, 0]),
+                            [st, ExecPoolState(2)])
+    assert len(out) == 0
+    assert st.fmax == 5.0 and np.array_equal(st.materialize(), [5.0, 5.0])
+
+
+def test_node_pass_many_matches_node_pass_per_segment(rng):
+    """Three node classes (fast CPU, slow CPU, CPU+accel with offload),
+    three windows of carried state, spans on — done and exec_start must
+    match the per-node pipeline bit for bit."""
+    slow = ScaledDeviceModel(CPU, 1.5)
+    cfg = SchedulerConfig(batch_size=8, n_executors=2)
+    acfg = SchedulerConfig(batch_size=8, n_executors=2, n_accelerators=1,
+                           offload_threshold=150)
+    mk = [lambda: NodeEngine.make(CPU, cfg),
+          lambda: NodeEngine.make(slow, cfg),
+          lambda: NodeEngine.make(CPU, acfg, accel=ACCEL)]
+    engines = [mk[i % 3]() for i in range(7)]
+    ref_cpu = [None] * 7
+    ref_acc = [None] * 7
+    t0 = 0.0
+    for _ in range(3):
+        arr_segs, sz_segs = [], []
+        for _ in engines:
+            r = int(rng.integers(0, 10))
+            arr_segs.append(np.sort(t0 + rng.uniform(0, 0.3, r)))
+            sz_segs.append(rng.integers(1, 600, r))
+        bounds = np.cumsum([len(a) for a in arr_segs])
+        done, starts = node_pass_many(np.concatenate(arr_segs),
+                                      np.concatenate(sz_segs), bounds,
+                                      engines, want_starts=True)
+        seg0 = np.concatenate(([0], bounds[:-1]))
+        for i, e in enumerate(engines):
+            d, _, _, ref_cpu[i], ref_acc[i], xs = node_pass(
+                arr_segs[i], sz_segs[i], e.cpu, e.cfg, accel=e.accel,
+                cpu_free=ref_cpu[i], acc_free=ref_acc[i], want_starts=True)
+            assert np.array_equal(done[seg0[i]:bounds[i]], d,
+                                  equal_nan=True)
+            assert np.array_equal(starts[seg0[i]:bounds[i]], xs,
+                                  equal_nan=True)
+        t0 += 0.15
+
+
+def test_node_pass_many_identity_cache_is_transparent(rng):
+    """Reusing one engines list (the grouped driver's steady state, cache
+    hit) and rebuilding a fresh list per window (cache miss) advance the
+    same state to the same answer."""
+    arr = np.sort(rng.uniform(0, 1, 12))
+    sz = rng.integers(1, 300, 12)
+    bounds = np.array([5, 12])
+    cfg = SchedulerConfig(batch_size=8, n_executors=2)
+    a = [NodeEngine.make(CPU, cfg), NodeEngine.make(CPU, cfg)]
+    b = [NodeEngine.make(CPU, cfg), NodeEngine.make(CPU, cfg)]
+    for w in range(3):
+        t = arr + 0.3 * w
+        d1, _ = node_pass_many(t, sz, bounds, a)          # same list obj
+        d2, _ = node_pass_many(t, sz, bounds, list(b))    # fresh list
+        assert np.array_equal(d1, d2, equal_nan=True)
+
+
+# ------------------------------------------------------- driver parity
+
+
+@pytest.mark.parametrize("router", ["round_robin", "least_outstanding",
+                                    "hetero"])
+def test_grouped_driver_matches_per_node(rng, router):
+    fleet = _fleet()
+    t, s = _trace(rng)
+    ref = simulate_fleet(t, s, fleet, make_router(router), window_s=0.25,
+                         grouped=False)
+    vec = simulate_fleet(t, s, fleet, make_router(router), window_s=0.25,
+                         grouped=None)
+    assert ref.n_queries == vec.n_queries and ref.dropped == vec.dropped
+    assert ref.qps == vec.qps
+    assert (ref.p50_ms, ref.p95_ms, ref.p99_ms) == \
+        (vec.p50_ms, vec.p95_ms, vec.p99_ms)
+    assert ref.node_hours == vec.node_hours
+    assert ref.per_pool == vec.per_pool
+
+
+def test_grouped_driver_telemetry_matches_per_node(rng):
+    """Per-query spans are bit-identical; the metrics registry (whose
+    grouped fold sums per node segment instead of per submit call) agrees
+    on every count exactly and every float to 1e-9 relative."""
+    fleet = _fleet(4, 3, 2)
+    t, s = _trace(rng, horizon=4.0, qps=300.0)
+    ref = simulate_fleet(t, s, fleet, make_router("least_outstanding"),
+                         window_s=0.25, grouped=False, telemetry=True)
+    vec = simulate_fleet(t, s, fleet, make_router("least_outstanding"),
+                         window_s=0.25, grouped=None, telemetry=True)
+    assert np.array_equal(ref.telemetry.spans.t_done,
+                          vec.telemetry.spans.t_done, equal_nan=True)
+    assert np.array_equal(ref.telemetry.spans.t_exec_start,
+                          vec.telemetry.spans.t_exec_start, equal_nan=True)
+    a = ref.telemetry.registry.snapshot(reset_window=False)
+    b = vec.telemetry.registry.snapshot(reset_window=False)
+    assert a.keys() == b.keys()
+    for k in a:
+        assert np.isclose(a[k], b[k], rtol=1e-9, atol=1e-12), (k, a[k], b[k])
+
+
+def test_grouped_path_actually_taken(rng, monkeypatch):
+    calls = {"n": 0}
+    real = submit_grouped
+
+    def counting(*a, **kw):
+        calls["n"] += 1
+        return real(*a, **kw)
+
+    monkeypatch.setattr(cluster_sim, "submit_grouped", counting)
+    fleet = _fleet(3, 2, 1)
+    t, s = _trace(rng, horizon=2.0, qps=200.0)
+    simulate_fleet(t, s, fleet, make_router("round_robin"), window_s=0.25,
+                   grouped=None)
+    assert calls["n"] > 0
+    calls["n"] = 0
+    simulate_fleet(t, s, fleet, make_router("round_robin"), window_s=0.25,
+                   grouped=False)
+    assert calls["n"] == 0
+
+
+def test_kill_windows_fall_back_and_match_per_node(rng):
+    """A fleet-fault kill forces the per-node loop (grouped eligibility
+    excludes killed/orphan windows) — the grouped-default run must equal
+    the grouped=False run including re-route accounting."""
+    fleet = _fleet(3, 2, 1)
+    t, s = _trace(rng, horizon=2.0, qps=900.0)   # oversubscribed: the
+    faults = FleetFaults(kills=(NodeKill(0.5, "sky", 0),))  # kill orphans
+    ref = simulate_fleet(t, s, fleet, make_router("round_robin"),
+                         window_s=0.25, grouped=False, fleet_faults=faults)
+    vec = simulate_fleet(t, s, fleet, make_router("round_robin"),
+                         window_s=0.25, grouped=None, fleet_faults=faults)
+    assert vec.rerouted > 0 and vec.rerouted == ref.rerouted
+    assert ref.qps == vec.qps and ref.dropped == vec.dropped
+    assert (ref.p50_ms, ref.p95_ms, ref.p99_ms) == \
+        (vec.p50_ms, vec.p95_ms, vec.p99_ms)
+    assert ref.per_pool == vec.per_pool
+
+
+# -------------------------------------------------------- router parity
+
+
+def test_least_outstanding_heap_matches_scalar_reference(rng):
+    """The event-sorted heap evaluation is the O(N·Q) decay-all-argmin
+    loop verbatim: same assignments across stateful windows, same
+    carried backlogs."""
+    nodes = _fleet(3, 2, 2).node_views()
+    backlog_h = np.zeros(len(nodes))
+    backlog_s = backlog_h.copy()
+    lt_h = lt_s = 0.0
+    t0 = 0.0
+    for _ in range(4):
+        q = int(rng.integers(5, 40))
+        times = np.sort(t0 + rng.uniform(0, 0.5, q))
+        sizes = rng.integers(1, 600, q)
+        cls_of, est, _ = _est_work_by_class(nodes, sizes)
+        got, backlog_h, lt_h = _assign_heap(times, est, cls_of,
+                                            backlog_h, lt_h)
+        ref, backlog_s, lt_s = _assign_scalar(times, est[cls_of],
+                                              backlog_s, lt_s)
+        assert np.array_equal(got, ref)
+        np.testing.assert_allclose(backlog_h, backlog_s, atol=1e-9)
+        t0 += 0.5
+
+
+def test_least_outstanding_router_state_survives_resize(rng):
+    """The router's keyed store re-aligns when the node list shrinks —
+    the vectorized heap must keep that contract."""
+    r = LeastOutstandingRouter()
+    nodes = _fleet(3, 2, 0).node_views()
+    t = np.sort(rng.uniform(0, 1, 30))
+    s = rng.integers(1, 300, 30)
+    a1 = r.assign(t, s, nodes)
+    assert set(np.unique(a1)) <= set(range(len(nodes)))
+    a2 = r.assign(t + 1.0, s, nodes[:3])      # resize: two nodes retired
+    assert set(np.unique(a2)) <= {0, 1, 2}
+
+
+def test_est_work_by_class_collapses_equal_specs(rng):
+    """An N-node fleet of C classes prices queries C times, not N — and
+    the class-compact rows fan out to exactly the per-node estimates."""
+    nodes = _fleet(6, 4, 3).node_views()
+    sizes = rng.integers(1, 600, 50)
+    cls_of, est, off = _est_work_by_class(nodes, sizes)
+    assert est.shape[0] == 3 and len(np.unique(cls_of)) == 3
+    for i, nv in enumerate(nodes):
+        from repro.cluster.router import _class_drain_seconds
+        e, o = _class_drain_seconds(nv.spec, sizes)
+        assert np.array_equal(est[cls_of[i]], e)
+        assert np.array_equal(off[cls_of[i]], o)
