@@ -4,8 +4,15 @@ vs tail-latency target (DLRM-RMC1).
 Validates: (a) offload unlocks tail latencies CPUs can't reach; (b) the
 fraction of work on the accelerator DECREASES as the SLA relaxes; (c) QPS/W
 crosses over — accelerator wins at strict targets, CPU-only at relaxed ones.
+
+``--smoke`` (or ``BENCH_SMOKE=1``) skips the medium tier — the check only
+compares the strict and relaxed endpoints.
 """
 from __future__ import annotations
+
+import argparse
+import os
+import sys
 
 import numpy as np
 
@@ -18,12 +25,22 @@ from repro.core.simulator import SchedulerConfig, simulate
 NQ = 600
 
 
-def main() -> None:
+def main(argv: list[str] | None = None) -> None:
+    ap = argparse.ArgumentParser(prog="python -m benchmarks.gpu_fraction")
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast CI mode: strict and relaxed tiers only")
+    args = ap.parse_args([] if argv is None else argv)
+    smoke = args.smoke or bool(int(os.environ.get("BENCH_SMOKE", "0")))
+
+    tiers = ((0.6, "strict"), (1.0, "medium"), (1.8, "relaxed"))
+    if smoke:
+        tiers = ((0.6, "strict"), (1.8, "relaxed"))
+
     cpu = cpu_curves()["dlrm-rmc1"]
     gpu = gpu_model("dlrm-rmc1")
     base = sla("dlrm-rmc1", "medium")
     fracs = {}
-    for mult, tag in ((0.6, "strict"), (1.0, "medium"), (1.8, "relaxed")):
+    for mult, tag in tiers:
         target = base * mult
         r_cpu = tune(cpu, target, n_executors=N_EXECUTORS, n_queries=NQ)
         r_gpu = tune(cpu, target, accel=gpu, n_executors=N_EXECUTORS,
@@ -51,4 +68,4 @@ def main() -> None:
 
 
 if __name__ == "__main__":
-    main()
+    main(sys.argv[1:])

@@ -35,6 +35,7 @@ SUITES = [
     ("chaos", "benchmarks.chaos"),
     ("latency_attribution", "benchmarks.latency_attribution"),
     ("fleet_speed", "benchmarks.fleet_speed"),
+    ("cache_offload", "benchmarks.cache_offload"),
     ("roofline_report", "benchmarks.roofline_report"),
 ]
 

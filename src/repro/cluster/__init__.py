@@ -32,9 +32,13 @@ hundreds of machines", validated against real execution).
 * ``autoscaler`` — reactive p95-vs-SLA pool scaling plus the predictive
   boot-latency-ahead ``PredictiveAutoscaler`` over traffic forecasts,
   with node-hour accounting, against the ``CapacityLedger`` protocol.
+* ``cache`` — ``FleetCache``: the fleet-front result cache (sharded
+  LRU/LFU with TTL staleness) that answers popularity-keyed repeats
+  before the router; ``drive_fleet(cache=..., query_keys=...)``.
 * ``cluster_sim`` — ``drive_fleet``, the engine-agnostic shared-timeline
   driver (plus the event engine per node when faults/contention are
-  enabled).
+  enabled); ``OffloadTuning`` turns on the per-node online
+  offload-threshold controller.
 """
 from repro.cluster.autoscaler import (Autoscaler,  # noqa: F401
                                       CapacityLedger, PredictiveAutoscaler,
@@ -42,14 +46,15 @@ from repro.cluster.autoscaler import (Autoscaler,  # noqa: F401
 from repro.cluster.backend import (BackendDied,  # noqa: F401
                                    CompletedQuery, NodeBackend, NodeHandle,
                                    PendingQuery, SimNodeBackend, sim_backends)
+from repro.cluster.cache import CacheConfig, FleetCache  # noqa: F401
 from repro.cluster.chaos import (ChaosPlan, FrameGarble,  # noqa: F401
                                  RpcHang, SlowStart, crash_storm)
 from repro.cluster.lifecycle import (FleetController,  # noqa: F401
                                      FleetFaults, LifecycleEvent, NodeKill,
                                      NodeState, SelfHealPolicy)
 from repro.cluster.cluster_sim import (ClusterResult,  # noqa: F401
-                                       cluster_max_qps, drive_fleet,
-                                       simulate_fleet)
+                                       OffloadTuning, cluster_max_qps,
+                                       drive_fleet, simulate_fleet)
 from repro.cluster.fleet import (Fleet, NodeSpec, Pool,  # noqa: F401
                                  ScaledDeviceModel)
 from repro.cluster.live import (BucketedDeviceModel,  # noqa: F401

@@ -203,6 +203,21 @@ class NodeBackend:
         early (closing it would strand in-flight work)."""
         return False
 
+    def set_offload_threshold(self, threshold: int | None) -> None:
+        """Re-knob the node's query-size offload threshold mid-run — the
+        write side of the online ``OffloadController``.  The spec is
+        replaced (specs are frozen; router cost caches key on knob
+        values, so a fresh spec object re-prices correctly) and takes
+        effect for *subsequently* submitted windows; work already
+        accepted keeps the knobs it was priced with.  For live/remote
+        backends the spec swap alone is the whole semantics: execution
+        happens on this host's real devices and the threshold only
+        shapes how routers price the node."""
+        if threshold == self.spec.offload_threshold:
+            return
+        self.spec = dataclasses.replace(self.spec,
+                                        offload_threshold=threshold)
+
     def close(self) -> None:
         """Release node resources (worker threads, devices)."""
 
@@ -301,6 +316,19 @@ class SimNodeBackend(NodeBackend):
         """All analytic completions at or before ``t`` (NaN drops never
         complete and never will — they don't hold the node open)."""
         return all(not np.any(c[2] > t) for c in self._chunks)
+
+    def set_offload_threshold(self, threshold: int | None) -> None:
+        """Spec swap plus the simulated execution machinery: the engine's
+        ``SchedulerConfig`` is rebuilt so the *next* submitted window
+        splits CPU/accel work at the new threshold.  ``NodeEngine
+        .set_cfg`` drops the engine's interned class id and invalidates
+        the grouped-pass parts cache — the per-class threshold tables
+        there were built from the old knob."""
+        if threshold == self.spec.offload_threshold:
+            return
+        super().set_offload_threshold(threshold)
+        self.cfg = self.spec.scheduler_config()
+        self.engine.set_cfg(self.cfg)
 
     def cancel_pending(self, t: float) -> list[PendingQuery]:
         """A simulated kill at trace time ``t``: the analytically computed

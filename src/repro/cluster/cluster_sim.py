@@ -50,20 +50,41 @@ import numpy as np
 from repro.cluster.autoscaler import Autoscaler, ScalingEvent
 from repro.cluster.backend import (BackendDied, NodeBackend, SimNodeBackend,
                                    grouped_eligible, submit_grouped)
+from repro.cluster.cache import CacheConfig, FleetCache
 from repro.cluster.fleet import Fleet
 from repro.cluster.lifecycle import (FleetController, FleetFaults,
                                      LifecycleEvent, NodeState,
                                      SelfHealPolicy)
 from repro.cluster.router import Router
 from repro.core.latency_model import ContentionModel
-from repro.core.query_gen import (PRODUCTION, SizeDist, queries_from_arrays,
+from repro.core.query_gen import (PRODUCTION, PopularityDist, SizeDist,
+                                  keyed_sizes, queries_from_arrays,
                                   rescale_trace, sample_trace)
+from repro.core.scheduler import THRESHOLD_LADDER
 from repro.core.simulator import (SUSTAIN_FRACTION, FaultConfig,
                                   _fast_eligible, bracket_bisect,
                                   event_done_times, latency_percentiles_ms,
                                   warm_bracket)
 from repro.obs import (FleetTimeline, MetricsRegistry, RunTelemetry,
                        SpanTable, observe_fanout)
+from repro.serve.runtime import OffloadController
+
+
+@dataclasses.dataclass(frozen=True)
+class OffloadTuning:
+    """Enable the per-node online offload-threshold controller in
+    ``drive_fleet``: each accelerator node gets an
+    :class:`~repro.serve.runtime.OffloadController` stepped once per
+    window from the telemetry registry's p99-by-component — the node's
+    window e2e p99 plus the CPU-path vs accel-path queueing p99s
+    (``node_queue_cpu_ms``/``node_queue_acc_ms``, folded by the driver
+    from span exec-starts split at the node's *current* threshold).
+    Requires ``telemetry=True`` and ``window_s``; threshold writes go
+    through ``NodeBackend.set_offload_threshold`` so they take effect on
+    the next submitted window in every engine."""
+    sla_ms: float
+    ladder: tuple = THRESHOLD_LADDER
+    relax_frac: float = 0.6
 
 
 @dataclasses.dataclass
@@ -118,6 +139,17 @@ class ClusterResult:
     # drive_fleet(telemetry=True): spans + metrics registry + per-window
     # timeline (repro.obs.RunTelemetry); None with the kill switch off
     telemetry: RunTelemetry | None = None
+    # fleet-front result cache accounting (drive_fleet(cache=...)); hits
+    # complete without touching a node and count toward qps/percentiles
+    # under the "cache" pool label
+    cache_hits: int = 0
+    cache_misses: int = 0
+    cache_evictions: int = 0
+
+    @property
+    def cache_hit_rate(self) -> float:
+        n = self.cache_hits + self.cache_misses
+        return self.cache_hits / n if n else 0.0
 
     @property
     def error_rate(self) -> float:
@@ -151,7 +183,9 @@ def _result(times: np.ndarray, done: np.ndarray, pool_of: np.ndarray,
             errors: int = 0, rerouted: int = 0,
             lifecycle: list | None = None,
             errors_by_node: dict[str, int] | None = None,
-            telemetry: RunTelemetry | None = None) -> ClusterResult:
+            telemetry: RunTelemetry | None = None,
+            cache_stats: dict[str, int] | None = None) -> ClusterResult:
+    cs = cache_stats or {}
     completed = ~np.isnan(done)
     n_done = int(completed.sum())
     per_pool = {}
@@ -173,7 +207,9 @@ def _result(times: np.ndarray, done: np.ndarray, pool_of: np.ndarray,
         return ClusterResult(0, 0, 0, 0, 0, 0, len(times), n_nodes,
                              node_hours, per_pool, events, timeline,
                              per_model, errors, rerouted, lifecycle or [],
-                             errors_by_node or {}, telemetry)
+                             errors_by_node or {}, telemetry,
+                             cs.get("hits", 0), cs.get("misses", 0),
+                             cs.get("evictions", 0))
     lats = done[completed] - times[completed]
     dur = float(done[completed].max()) - float(times[0])
     p50, p95, p99, mean = latency_percentiles_ms(lats)
@@ -185,7 +221,9 @@ def _result(times: np.ndarray, done: np.ndarray, pool_of: np.ndarray,
         per_pool=per_pool, events=events, timeline=timeline,
         per_model=per_model, errors=errors, rerouted=rerouted,
         lifecycle=lifecycle or [], errors_by_node=errors_by_node or {},
-        telemetry=telemetry)
+        telemetry=telemetry, cache_hits=cs.get("hits", 0),
+        cache_misses=cs.get("misses", 0),
+        cache_evictions=cs.get("evictions", 0))
 
 
 def _window_grid(times: np.ndarray, window_s: float | None
@@ -216,7 +254,11 @@ def drive_fleet(times: np.ndarray, sizes: np.ndarray,
                 self_heal: SelfHealPolicy | None = None,
                 drain_timeout: float = 120.0,
                 telemetry: bool = False,
-                grouped: bool | None = None) -> ClusterResult:
+                grouped: bool | None = None,
+                cache: FleetCache | None = None,
+                query_keys: np.ndarray | None = None,
+                offload_tuning: OffloadTuning | None = None
+                ) -> ClusterResult:
     """Run one trace through a fleet of node backends.  ``times`` must be
     sorted; ``model_ids`` (optional) labels each query with its tenant and
     is threaded through both the router and ``NodeBackend.submit``.
@@ -276,6 +318,33 @@ def drive_fleet(times: np.ndarray, sizes: np.ndarray,
     fleets, single-node windows, and any window where a kill landed
     (orphan re-routes and mid-submit deaths take the per-node path,
     keeping the faults machinery exactly as exercised before).
+
+    ``cache`` + ``query_keys`` put a fleet-front result cache ahead of
+    the router: each window's queries are looked up by their popularity
+    key (``Traffic.generate_keyed``; key −1 never hits) and hits
+    complete analytically at ``arrival + hit_latency_s`` without
+    touching a node (pool label ``"cache"``, excluded from per-pool
+    stats but counted in qps/percentiles); only the misses are routed.
+    Completed misses are committed back at their completion times —
+    within a window, repeats of an uncommitted key are misses (no
+    request coalescing).  With telemetry on, hits get a ``cache`` span
+    component (attribution stays closed) and hit/miss/eviction counters
+    plus a per-window ``cache_hit_rate`` gauge stream into the registry.
+    A single-window run (``window_s=None``) commits results only after
+    the trace ends, so it observes no hits — pass a window to let
+    results become answerable mid-trace.
+
+    ``offload_tuning`` (:class:`OffloadTuning`, needs ``telemetry=True``
+    and ``window_s``) runs the online offload-threshold controller
+    per accelerator node: the driver folds each window's queueing delay
+    into per-node CPU-path vs accel-path histograms (split at the
+    node's current threshold) and steps a hill climb on the
+    ``THRESHOLD_LADDER`` rungs from the window's p99s — the
+    telemetry-driven closing of paper Fig. 10's static per-node tuning.
+
+    Both layers are pure opt-in: with ``cache=None`` and
+    ``offload_tuning=None`` every hot-loop branch is untaken and the
+    grouped fast path is bit-identical to before.
     """
     times = np.asarray(times, float)
     sizes = np.asarray(sizes, np.int64)
@@ -293,6 +362,22 @@ def drive_fleet(times: np.ndarray, sizes: np.ndarray,
                              "windows — pass the fleet ledger and a "
                              "backend factory(view, t0)")
         autoscaler.reset()
+    if cache is not None:
+        if query_keys is None:
+            raise ValueError("cache needs query_keys — per-query "
+                             "popularity keys aligned with the trace "
+                             "(Traffic.generate_keyed); without them no "
+                             "query can ever repeat")
+        query_keys = np.asarray(query_keys, np.int64)
+        if len(query_keys) != len(times):
+            raise ValueError(f"query_keys misaligned with trace: "
+                             f"{len(query_keys)} keys for {len(times)} "
+                             f"queries")
+    if offload_tuning is not None and (not telemetry or window_s is None):
+        raise ValueError("offload_tuning is telemetry-driven — the "
+                         "controller reads per-window p99-by-component "
+                         "from the metrics registry, so it needs "
+                         "telemetry=True and window_s")
     if (fleet_faults is not None and fleet_faults.kills
             and window_s is None):
         raise ValueError("fleet_faults kills need window_s — kills are "
@@ -350,6 +435,82 @@ def drive_fleet(times: np.ndarray, sizes: np.ndarray,
         if d:
             tel.registry.counter("rpc_retries").inc(d)
             retry_seen[b.key] = rc
+
+    tune = offload_tuning
+    tuners: dict[tuple, OffloadController] = {}
+    offl = [0, 0]                  # per-window (offloaded, submitted)
+    cache_prev = {"hits": 0, "misses": 0, "evictions": 0}
+
+    def _thr(b) -> float:
+        t = b.spec.offload_threshold
+        return float(t) if (t is not None and b.spec.accel is not None) \
+            else np.inf
+
+    def _tune_fold(active, assign, wt, ws, starts):
+        """Grouped-window queueing-by-path fold: split each query's
+        executor queueing delay (exec_start − arrival; the analytic
+        engine releases on arrival) at its node's *current* threshold
+        and stream both paths into per-node window histograms — the
+        component percentiles the controller consumes."""
+        thr = np.fromiter((_thr(b) for b in active), float, len(active))
+        off = ws >= thr[assign]
+        q = np.subtract(starts, wt)
+        q *= 1e3
+        offl[0] += int(off.sum())
+        offl[1] += len(ws)
+        if off.any():
+            tel.registry.observe_grouped(
+                "node_queue_acc_ms", "node", assign[off], q[off],
+                fmt=lambda i: _node_name(active[int(i)]))
+        if not off.all():
+            tel.registry.observe_grouped(
+                "node_queue_cpu_ms", "node", assign[~off], q[~off],
+                fmt=lambda i: _node_name(active[int(i)]))
+
+    def _tune_fold_node(b, t_arr, s_arr, starts):
+        """Per-node-path variant of ``_tune_fold`` for one backend's
+        window slice (sim per-node loop)."""
+        off = s_arr >= _thr(b)
+        q = np.subtract(starts, t_arr)
+        q *= 1e3
+        offl[0] += int(off.sum())
+        offl[1] += len(s_arr)
+        name = _node_name(b)
+        if off.any():
+            tel.registry.histogram(
+                "node_queue_acc_ms", node=name).observe_many(q[off])
+        if not off.all():
+            tel.registry.histogram(
+                "node_queue_cpu_ms", node=name).observe_many(q[~off])
+
+    def _tune_step(active):
+        """One controller decision per accelerator node per window, fed
+        by the window sketches — read here, *before* the timeline
+        snapshot steals them."""
+        for b in active:
+            if b.spec.accel is None:
+                continue
+            ctl = tuners.get(b.key)
+            if ctl is None:
+                ctl = tuners[b.key] = OffloadController(
+                    sla_ms=tune.sla_ms, threshold=b.spec.offload_threshold,
+                    ladder=tune.ladder, relax_frac=tune.relax_frac)
+            name = _node_name(b)
+            reg = tel.registry
+            thr = ctl.step(
+                reg.histogram("node_latency_ms",
+                              node=name).window.quantile(0.99),
+                reg.histogram("node_queue_cpu_ms",
+                              node=name).window.quantile(0.99),
+                reg.histogram("node_queue_acc_ms",
+                              node=name).window.quantile(0.99))
+            if thr != b.spec.offload_threshold:
+                b.set_offload_threshold(thr)
+            reg.gauge("offload_threshold", node=name).set(thr)
+        tel.registry.gauge("offload_fraction").set(
+            offl[0] / offl[1] if offl[1] else 0.0)
+        tel.registry.counter("queries_offloaded").inc(offl[0])
+        offl[0] = offl[1] = 0
 
     use_grouped = grouped is not False
     # grouped-path structures, keyed on the serving list *object* (the
@@ -410,6 +571,8 @@ def drive_fleet(times: np.ndarray, sizes: np.ndarray,
                     # analytic engine) — the end-of-run chunk walk only
                     # runs for windows the per-node loop served
                     tel.spans.record_many(gidx, wt, xs, ret)
+                    if tune is not None:
+                        _tune_fold(active, assign, wt, ws, xs)
                 else:
                     chunk_spans[0] = True
             return {}
@@ -448,6 +611,11 @@ def drive_fleet(times: np.ndarray, sizes: np.ndarray,
                     v = np.subtract(ret, st)
                     v *= 1e3
                     observe_fanout(v, h, fleet_hist)
+                    if tune is not None:
+                        ch = getattr(b, "_chunks", None)
+                        starts = ch[-1][5] if ch else None
+                        if starts is not None:
+                            _tune_fold_node(b, st, ssz, starts)
         return lost
 
     for w in range(n_windows):
@@ -491,16 +659,32 @@ def drive_fleet(times: np.ndarray, sizes: np.ndarray,
         node_hours += controller.billable_n * width / 3600.0
         wt, ws = times[idx], sizes[idx]
         wm = model_ids[idx] if model_ids is not None else None
+        midx, mt, msz, mm = idx, wt, ws, wm
+        if cache is not None and len(idx):
+            hmask = cache.lookup_many(query_keys[idx], wt)
+            if hmask.any():
+                hidx = idx[hmask]
+                hdone = wt[hmask] + cache.cfg.hit_latency_s
+                done[hidx] = hdone
+                pool_of[hidx] = "cache"
+                if tel is not None:
+                    tel.spans.mark_cache_hit(hidx, hdone)
+                    observe_fanout(
+                        np.full(len(hidx), cache.cfg.hit_latency_s * 1e3),
+                        fleet_hist)
+                miss = ~hmask
+                midx, mt, msz = idx[miss], wt[miss], ws[miss]
+                mm = wm[miss] if wm is not None else None
         if len(active):
-            assign = router.assign(wt, ws, active, model_ids=wm)
+            assign = router.assign(mt, msz, active, model_ids=mm)
             # a kill window (orphans just re-routed) stays on the
             # per-node path end to end — the faults machinery is
             # exercised exactly as it was before the grouped path existed
-            lost.update(_submit(active, assign, idx, wt, ws, wm,
+            lost.update(_submit(active, assign, midx, mt, msz, mm,
                                 allow_grouped=not orphans))
         # else: no SERVING node this window — queries stay NaN (dropped)
-        elif tel is not None and len(idx):
-            tel.spans.mark_shed(idx)
+        elif tel is not None and len(midx):
+            tel.spans.mark_shed(midx)
         while lost:
             # mid-submit deaths: retire each victim through the
             # controller (the heal policy decides whether it restarts),
@@ -528,6 +712,11 @@ def drive_fleet(times: np.ndarray, sizes: np.ndarray,
             lost = _submit(active, router.assign(rt_, rs_, active,
                                                  model_ids=rm_),
                            ridx, rt_, rs_, rm_)
+        if cache is not None and not controller.realtime and len(midx):
+            # commit this window's completed misses at their completion
+            # times — answerable by later arrivals once fresh_ts <= t
+            # (insert_many skips NaN drops itself)
+            cache.insert_many(query_keys[midx], done[midx])
         ctl_s = time.perf_counter() - ctl0
         if controller.realtime:
             advancing = controller.advance_targets()
@@ -541,6 +730,8 @@ def drive_fleet(times: np.ndarray, sizes: np.ndarray,
             # record the node ever finished.  A node dying mid-poll is
             # the next boundary's health-pass problem, not this one's.
             lats = []
+            ck: list[int] = []
+            cd: list[float] = []
             for b in advancing:
                 try:
                     recs = b.take_new_records()
@@ -548,6 +739,35 @@ def drive_fleet(times: np.ndarray, sizes: np.ndarray,
                     continue
                 node_lats = [r.latency_ms for r in recs if r.error is None]
                 lats += node_lats
+                if cache is not None:
+                    for r in recs:
+                        if r.error is None:
+                            ck.append(int(query_keys[r.index]))
+                            cd.append(r.t_done)
+                if tune is not None and recs:
+                    thr_b = _thr(b)
+                    qcpu: list[float] = []
+                    qacc: list[float] = []
+                    for r in recs:
+                        if r.error is not None or np.isnan(r.t_exec_start):
+                            continue
+                        rel = r.t_released
+                        if np.isnan(rel):
+                            rel = r.t_arrival
+                        q = (r.t_exec_start - rel) * 1e3
+                        (qacc if sizes[r.index] >= thr_b
+                         else qcpu).append(q)
+                    offl[0] += len(qacc)
+                    offl[1] += len(qacc) + len(qcpu)
+                    name = _node_name(b)
+                    if qacc:
+                        tel.registry.histogram(
+                            "node_queue_acc_ms",
+                            node=name).observe_many(qacc)
+                    if qcpu:
+                        tel.registry.histogram(
+                            "node_queue_cpu_ms",
+                            node=name).observe_many(qcpu)
                 if tel is not None:
                     if node_lats:
                         observe_fanout(
@@ -564,6 +784,8 @@ def drive_fleet(times: np.ndarray, sizes: np.ndarray,
                                 "model_latency_ms",
                                 model=str(r.model_id)).observe(r.latency_ms)
                     _tel_retry(b, None)
+            if cache is not None and ck:
+                cache.insert_many(np.asarray(ck, np.int64), np.asarray(cd))
             p95 = float(np.percentile(lats, 95)) if lats else 0.0
         else:
             wl = done[idx] - times[idx]
@@ -577,7 +799,18 @@ def drive_fleet(times: np.ndarray, sizes: np.ndarray,
                     "model_latency_ms", "model", wm[ok], wl[ok] * 1e3)
         offered = len(idx) / max(width, 1e-9)
         timeline.append((w0, offered, len(active), p95, width, ctl_s))
-        if tel is not None:
+        if tune is not None:
+            _tune_step(active)       # reads window sketches: must run
+        if tel is not None:          # before snapshot() steals them
+            if cache is not None:
+                st = cache.stats()
+                for k in ("hits", "misses", "evictions"):
+                    d = st[k] - cache_prev[k]
+                    if d:
+                        tel.registry.counter(f"cache_{k}").inc(d)
+                        cache_prev[k] = st[k]
+                tel.registry.gauge("cache_hit_rate").set(cache.hit_rate)
+                tel.registry.gauge("cache_size").set(st["size"])
             n_boot = controller.state_counts().get(NodeState.BOOTING.name, 0)
             tel.registry.gauge("serving_nodes").set(len(active))
             tel.registry.gauge("booting_nodes").set(n_boot)
@@ -660,7 +893,8 @@ def drive_fleet(times: np.ndarray, sizes: np.ndarray,
                    list(autoscaler.events) if autoscaler else [], timeline,
                    model_ids=model_ids, errors=errors, rerouted=rerouted,
                    lifecycle=list(controller.events),
-                   errors_by_node=errors_by_node, telemetry=tel)
+                   errors_by_node=errors_by_node, telemetry=tel,
+                   cache_stats=cache.stats() if cache is not None else None)
 
 
 def simulate_fleet(times: np.ndarray, sizes: np.ndarray, fleet: Fleet,
@@ -673,7 +907,11 @@ def simulate_fleet(times: np.ndarray, sizes: np.ndarray, fleet: Fleet,
                    model_ids: np.ndarray | None = None,
                    seed: int = 0,
                    telemetry: bool = False,
-                   grouped: bool | None = None) -> ClusterResult:
+                   grouped: bool | None = None,
+                   cache: FleetCache | None = None,
+                   query_keys: np.ndarray | None = None,
+                   offload_tuning: OffloadTuning | None = None
+                   ) -> ClusterResult:
     """Run one trace through a simulated fleet.  ``times`` must be sorted.
 
     Fast path (default): ``drive_fleet`` over per-node ``SimNodeBackend``s
@@ -717,6 +955,11 @@ def simulate_fleet(times: np.ndarray, sizes: np.ndarray, fleet: Fleet,
                              "windowed fast path; per-node faults/"
                              "contention force the unwindowed event "
                              "engine — use one fault layer per run")
+        if cache is not None or offload_tuning is not None:
+            raise ValueError("the fleet-front cache and online offload "
+                             "tuning need the windowed fast path; "
+                             "per-node faults/contention force the "
+                             "unwindowed event engine")
         router.reset()
         n = len(times)
         done = np.full(n, np.nan)
@@ -746,13 +989,20 @@ def simulate_fleet(times: np.ndarray, sizes: np.ndarray, fleet: Fleet,
                        autoscaler=autoscaler, fleet=work_fleet,
                        factory=SimNodeBackend, model_ids=model_ids,
                        fleet_faults=fleet_faults, self_heal=self_heal,
-                       telemetry=telemetry, grouped=grouped)
+                       telemetry=telemetry, grouped=grouped,
+                       cache=cache, query_keys=query_keys,
+                       offload_tuning=offload_tuning)
 
 
 def cluster_max_qps(fleet: Fleet, router: Router, sla_ms: float, *,
                     size_dist: SizeDist = PRODUCTION, n_queries: int = 1500,
                     seed: int = 0, lo: float = 1.0, hi: float | None = None,
-                    iters: int = 9, hint: float | None = None) -> float:
+                    iters: int = 9, hint: float | None = None,
+                    popularity: PopularityDist | None = None,
+                    cache_cfg: CacheConfig | None = None,
+                    offload_tuning: OffloadTuning | None = None,
+                    window_s: float | None = None,
+                    n_windows: int | None = None) -> float:
     """Largest stationary arrival rate whose fleet-wide p95 meets the SLA.
 
     Same discipline as the per-node ``max_qps_under_sla`` (the shared
@@ -761,17 +1011,39 @@ def cluster_max_qps(fleet: Fleet, router: Router, sla_ms: float, *,
     hiding in a finite trace, exponential bracket then bisection.
     ``hint`` warm-starts the bracket around a known-nearby rate — e.g.
     another policy's answer on the same fleet — instead of doubling up
-    from ``lo``."""
-    unit_times, sizes = sample_trace(np.random.default_rng(seed), n_queries,
-                                     size_dist)
+    from ``lo``.
+
+    ``popularity`` draws the trace with popularity keys (sizes coherent
+    per key), which lets ``cache_cfg`` put a *fresh* fleet-front cache in
+    front of each candidate rate (cache state must not leak across λ
+    steps) and ``offload_tuning`` run the online threshold controller
+    (implies telemetry; both layers want real windows).  Because the
+    rescaled trace's span shrinks as λ grows, ``n_windows`` fixes the
+    window *count* instead of the width — each candidate rate gets the
+    same number of cache-commit / controller-step boundaries."""
+    rng = np.random.default_rng(seed)
+    unit_times, sizes = sample_trace(rng, n_queries, size_dist)
+    keys = None
+    if popularity is not None:
+        keys = popularity.sample(rng, n_queries)
+        sizes = keyed_sizes(rng, keys, size_dist)
+    if cache_cfg is not None and popularity is None:
+        raise ValueError("cache_cfg needs popularity — without keys no "
+                         "query can ever repeat, so a cache can never hit")
     _memo: dict[float, bool] = {}
 
     def ok(qps: float) -> bool:
         hit = _memo.get(qps)
         if hit is not None:
             return hit
-        r = simulate_fleet(rescale_trace(unit_times, qps), sizes, fleet,
-                           router, seed=seed)
+        ws_ = window_s
+        if ws_ is None and n_windows:
+            ws_ = float(unit_times[-1]) / qps / n_windows
+        r = simulate_fleet(
+            rescale_trace(unit_times, qps), sizes, fleet, router, seed=seed,
+            window_s=ws_, telemetry=offload_tuning is not None,
+            cache=FleetCache(cache_cfg) if cache_cfg is not None else None,
+            query_keys=keys, offload_tuning=offload_tuning)
         v = r.meets(sla_ms) and r.qps >= SUSTAIN_FRACTION * qps
         _memo[qps] = v
         return v

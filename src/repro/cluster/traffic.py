@@ -25,7 +25,8 @@ import math
 
 import numpy as np
 
-from repro.core.query_gen import PRODUCTION, SizeDist
+from repro.core.query_gen import (PRODUCTION, PopularityDist, SizeDist,
+                                  keyed_sizes)
 
 # numpy 2.0 renamed trapz → trapezoid
 trapezoid = getattr(np, "trapezoid", None) or np.trapz
@@ -52,6 +53,21 @@ class Traffic:
                  ) -> tuple[np.ndarray, np.ndarray]:
         times = _thinned_poisson(rng, self.rate, self.peak_rate, horizon_s)
         return times, size_dist.sample(rng, len(times))
+
+    def generate_keyed(self, rng: np.random.Generator, horizon_s: float,
+                       size_dist: SizeDist = PRODUCTION,
+                       popularity: PopularityDist = PopularityDist()
+                       ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """(times, sizes, keys) with popularity-keyed repeats.
+
+        Arrivals come from the scenario's own ``generate`` (so every
+        subclass — stationary, diurnal, bursty, multi-tenant — carries
+        the cacheability axis for free); sizes are redrawn *coherent
+        with the keys* via ``keyed_sizes`` so that two queries with the
+        same key are the same query.  Key −1 marks a unique query."""
+        times, _ = self.generate(rng, horizon_s, size_dist)
+        keys = popularity.sample(rng, len(times))
+        return times, keyed_sizes(rng, keys, size_dist), keys
 
 
 def _homogeneous_arrivals(rng: np.random.Generator, rate: float,
@@ -213,6 +229,40 @@ class MultiTenantTraffic(Traffic):
         order = np.argsort(t, kind="stable")
         return (t[order], np.concatenate(sizes)[order],
                 np.concatenate(labels)[order])
+
+    def generate_labeled_keyed(self, rng: np.random.Generator,
+                               horizon_s: float,
+                               popularity: PopularityDist = PopularityDist()
+                               ) -> tuple[np.ndarray, np.ndarray,
+                                          np.ndarray, np.ndarray]:
+        """(times, sizes, labels, keys): per-tenant popularity keys with
+        sizes coherent per (tenant, key).  Tenants draw from disjoint
+        key ranges (tenant i owns ``[i·catalog, (i+1)·catalog)``) so a
+        hot key for one model never aliases another model's results in
+        a fleet-front cache."""
+        times, sizes, labels, keys = [], [], [], []
+        for i, (_, tr, dist) in enumerate(self.tenants):
+            t, s, k = tr.generate_keyed(rng, horizon_s, dist, popularity)
+            times.append(t)
+            sizes.append(s)
+            labels.append(np.full(len(t), i, np.int64))
+            keys.append(np.where(k >= 0, k + i * popularity.catalog, k))
+        t = np.concatenate(times)
+        order = np.argsort(t, kind="stable")
+        return (t[order], np.concatenate(sizes)[order],
+                np.concatenate(labels)[order], np.concatenate(keys)[order])
+
+    def generate_keyed(self, rng: np.random.Generator, horizon_s: float,
+                       size_dist: SizeDist = PRODUCTION,
+                       popularity: PopularityDist = PopularityDist()
+                       ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        if size_dist is not PRODUCTION:
+            raise ValueError(
+                "MultiTenantTraffic sizes come from each tenant's own "
+                "distribution; set them in `tenants`, not via "
+                "generate_keyed()")
+        t, s, _, k = self.generate_labeled_keyed(rng, horizon_s, popularity)
+        return t, s, k
 
     def generate(self, rng: np.random.Generator, horizon_s: float,
                  size_dist: SizeDist = PRODUCTION

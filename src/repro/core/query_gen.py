@@ -68,6 +68,91 @@ PRODUCTION = SizeDist("production")
 LOGNORMAL = SizeDist("lognormal")
 
 
+# ----------------------------------------------------------- popularity
+
+# inverse-CDF tables for bounded Zipf draws, keyed by (alpha, catalog) —
+# PopularityDist is frozen, so the O(catalog) weight normalization is
+# paid once per distinct shape, not once per trace
+_ZIPF_CDF: dict[tuple[float, int], np.ndarray] = {}
+
+
+@dataclasses.dataclass(frozen=True)
+class PopularityDist:
+    """Which *content* each query asks for — the cacheability axis.
+
+    Production recommendation traffic is heavily skewed (Gupta et al.,
+    arxiv 1906.03109 characterize power-law query/embedding locality):
+    a small set of hot items dominates, so identical queries repeat and
+    a result cache in front of the fleet can answer them.  ``sample``
+    draws one popularity *key* per query over a bounded catalog:
+
+      * ``zipf``    — P(key = k) ∝ 1 / (k + 1)**alpha over ``catalog``
+        keys (key 0 is the hottest), via one vectorized inverse-CDF
+        lookup — a single ``rng`` pass, no per-query Python loop;
+      * ``uniform`` — every catalog key equally likely (no skew, the
+        cache-hostile control);
+      * ``none``    — every query unique (key −1): nothing repeats, a
+        result cache can never hit.
+
+    Keys say nothing about *when* or *how big* — arrivals and sizes stay
+    with ``ArrivalDist``/``SizeDist``; ``Traffic.generate_keyed`` ties a
+    size to each distinct key so a repeated query really is the same
+    query."""
+    kind: str = "zipf"        # zipf | uniform | none
+    alpha: float = 1.1
+    catalog: int = 50_000
+
+    def __post_init__(self):
+        if self.kind not in ("zipf", "uniform", "none"):
+            raise ValueError(self.kind)
+        if self.catalog < 1:
+            raise ValueError(f"catalog must be >= 1: {self.catalog}")
+
+    def _cdf(self) -> np.ndarray:
+        key = (self.alpha, self.catalog)
+        cdf = _ZIPF_CDF.get(key)
+        if cdf is None:
+            w = 1.0 / np.power(np.arange(1, self.catalog + 1, dtype=float),
+                               self.alpha)
+            cdf = np.cumsum(w)
+            cdf /= cdf[-1]
+            _ZIPF_CDF[key] = cdf
+        return cdf
+
+    def sample(self, rng: np.random.Generator, n: int) -> np.ndarray:
+        """``n`` popularity keys (int64; −1 = unique/uncacheable)."""
+        if self.kind == "none":
+            return np.full(n, -1, np.int64)
+        if self.kind == "uniform":
+            return rng.integers(0, self.catalog, size=n, dtype=np.int64)
+        # bounded Zipf: one uniform batch + searchsorted over the cached
+        # inverse CDF — vectorized end to end
+        return np.searchsorted(self._cdf(), rng.random(n),
+                               side="left").astype(np.int64)
+
+
+ZIPF = PopularityDist("zipf")
+NO_REPEATS = PopularityDist("none")
+
+
+def keyed_sizes(rng: np.random.Generator, keys: np.ndarray,
+                size_dist: SizeDist) -> np.ndarray:
+    """Per-query sizes *coherent with the popularity keys*: every
+    occurrence of a key is the same query, so it carries the same
+    working-set size.  One ``size_dist`` draw per distinct key (unkeyed
+    ``-1`` queries each draw independently), fanned back out with the
+    ``np.unique`` inverse — no per-query loop."""
+    uk, inv = np.unique(keys, return_inverse=True)
+    usz = size_dist.sample(rng, len(uk))
+    sizes = usz[inv]
+    unkeyed = keys < 0
+    n_u = int(unkeyed.sum())
+    if n_u:
+        sizes = sizes.copy() if sizes.base is not None else sizes
+        sizes[unkeyed] = size_dist.sample(rng, n_u)
+    return sizes
+
+
 # --------------------------------------------------------------- arrivals
 
 

@@ -36,6 +36,12 @@ from repro.core.simulator import SchedulerConfig, max_qps_under_sla
 
 BATCH_LADDER = (1, 2, 4, 8, 16, 32, 64, 128, 256, 512, 1024)
 
+# offload-threshold hill-climb rungs (paper Fig. 10 sweep).  The last rung
+# means "never offload" for the default 1000-candidate size cap; ``tune``
+# swaps it for ``size_dist.max_size + 1`` so non-default caps keep an
+# explicit no-offload point.  The online controller climbs the same rungs.
+THRESHOLD_LADDER = (1, 25, 50, 100, 150, 200, 300, 450, 700, 1001)
+
 
 @dataclasses.dataclass
 class TuneResult:
@@ -135,8 +141,7 @@ def tune(cpu: DeviceModel, sla_ms: float, *, accel: DeviceModel | None = None,
             return TuneResult(best_b, None, best_q, trace)
 
         # ---- knob 2: offload threshold (paper: start at 1 = all offloaded)
-        thr_ladder = [1, 25, 50, 100, 150, 200, 300, 450, 700,
-                      size_dist.max_size + 1]
+        thr_ladder = list(THRESHOLD_LADDER[:-1]) + [size_dist.max_size + 1]
         best_t, best_tq = run_ladder("threshold", thr_ladder,
                                      lambda t: (best_b, t), pool)
         if best_tq >= best_q:

@@ -612,6 +612,21 @@ class NodeEngine:
         rehashing ``SchedulerConfig`` per engine."""
         return _CLASS_IDS.setdefault(self.class_key, len(_CLASS_IDS))
 
+    def set_cfg(self, cfg: SchedulerConfig) -> None:
+        """Re-knob this engine mid-run (online threshold/batch tuning).
+
+        The engine's class membership changes, so the interned
+        ``class_id`` is dropped (re-derived lazily against the new cfg)
+        and the grouped-pass parts cache is invalidated — its per-class
+        ``thr``/``Bcls`` tables were built from the old knobs and are
+        keyed only on the engines-*list* identity, which a knob write
+        does not change."""
+        if cfg == self.cfg:
+            return
+        self.cfg = cfg
+        self.__dict__.pop("class_id", None)
+        _NPM_CACHE["ref"] = None
+
 
 _CLASS_IDS: dict[tuple, int] = {}
 

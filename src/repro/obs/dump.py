@@ -26,6 +26,12 @@ def summarize(lines: list[dict], show_windows: bool = False) -> str:
                    f"errors={r.get('errors', 0)} "
                    f"rerouted={r.get('rerouted', 0)} "
                    f"nodes={r['n_nodes']}")
+        if r.get("cache_hits", 0) or r.get("cache_misses", 0):
+            rate = r.get("cache_hit_rate")
+            out.append(f"cache: hits={r['cache_hits']} "
+                       f"misses={r['cache_misses']} "
+                       f"evictions={r.get('cache_evictions', 0)} "
+                       f"hit_rate={_f(rate)}")
     attrib = [r for r in lines if r.get("kind") == "attribution"]
     if attrib:
         names = list(attrib[0]["components_s"])

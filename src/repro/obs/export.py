@@ -94,7 +94,12 @@ def run_lines(result: Any) -> Iterator[dict]:
            "errors": int(getattr(result, "errors", 0)),
            "rerouted": int(getattr(result, "rerouted", 0)),
            "n_nodes": int(result.n_nodes),
-           "node_hours": _clean(float(result.node_hours))}
+           "node_hours": _clean(float(result.node_hours)),
+           "cache_hits": int(getattr(result, "cache_hits", 0)),
+           "cache_misses": int(getattr(result, "cache_misses", 0)),
+           "cache_evictions": int(getattr(result, "cache_evictions", 0)),
+           "cache_hit_rate": _clean(float(getattr(result, "cache_hit_rate",
+                                                  0.0)))}
     for node, cnt in sorted(getattr(result, "errors_by_node", {}).items()):
         yield {"kind": "node", "node": node, "errors": int(cnt)}
     tel = getattr(result, "telemetry", None)

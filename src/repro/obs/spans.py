@@ -30,13 +30,20 @@ percentile-by-percentile:
 
   ``reroute``  = routed − enqueued      (wait for re-route after a kill)
   ``retry``    = retry_s                (RPC deadline/backoff stall)
-  ``dispatch`` = released − routed − retry_s   (submit + batch formation)
+  ``cache``    = cache_s                (fleet-front result-cache lookup;
+                                         for a hit it is the *whole*
+                                         residual latency)
+  ``dispatch`` = released − routed − retry_s − cache_s
+                                        (submit + batch formation)
   ``queueing`` = exec_start − released  (executor queue depth)
   ``service``  = exec_done − exec_start (device/model execution)
 
 plus ``boot_wait`` (admission deferred behind a booting fleet — zero
 under the current driver, which drops instead of deferring; the column
-keeps the decomposition closed for drivers that defer).
+keeps the decomposition closed for drivers that defer).  A cache hit
+never reaches a node: ``mark_cache_hit`` stamps released = done so
+dispatch/queueing/service telescope to zero and the hit's latency is
+attributed entirely to ``cache``.
 """
 from __future__ import annotations
 
@@ -51,8 +58,8 @@ STAGES = ("enqueued", "routed", "submitted", "batch_formed",
           "exec_start", "exec_done", "completed")
 
 # additive latency components, in stage order
-COMPONENTS = ("reroute", "retry", "dispatch", "queueing", "service",
-              "boot_wait")
+COMPONENTS = ("reroute", "retry", "cache", "dispatch", "queueing",
+              "service", "boot_wait")
 
 
 @dataclasses.dataclass
@@ -85,6 +92,7 @@ class SpanTable:
         self.t_exec_start = np.full(n, np.nan)
         self.t_done = np.full(n, np.nan)
         self.retry_s = np.zeros(n)
+        self.cache_s = np.zeros(n)
         self.boot_wait_s = np.zeros(n)
         self.reroutes = np.zeros(n, np.int32)
         self.shed = np.zeros(n, bool)
@@ -108,6 +116,16 @@ class SpanTable:
 
     def mark_shed(self, idx: np.ndarray) -> None:
         self.shed[idx] = True
+
+    def mark_cache_hit(self, idx: np.ndarray, done: np.ndarray) -> None:
+        """Queries answered by the fleet-front cache: they never reach a
+        node, so released = done (dispatch/queueing/service telescope to
+        zero) and the full residual latency lands in the ``cache``
+        component."""
+        self.t_released[idx] = done
+        self.t_exec_start[idx] = np.nan
+        self.t_done[idx] = done
+        self.cache_s[idx] = done - self.t_routed[idx]
 
     def record(self, index: int, released: float, exec_start: float,
                done: float) -> None:
@@ -156,7 +174,8 @@ class SpanTable:
         return {
             "reroute": self.t_routed - self.t_enqueued,
             "retry": self.retry_s.copy(),
-            "dispatch": rel - self.t_routed - self.retry_s,
+            "cache": self.cache_s.copy(),
+            "dispatch": rel - self.t_routed - self.retry_s - self.cache_s,
             "queueing": queueing,
             "service": service,
             "boot_wait": self.boot_wait_s.copy(),

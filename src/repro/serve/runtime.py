@@ -19,7 +19,7 @@ from typing import Callable
 
 import numpy as np
 
-from repro.core.scheduler import BATCH_LADDER
+from repro.core.scheduler import BATCH_LADDER, THRESHOLD_LADDER
 from repro.serve.batching import bucket_for, pad_batch
 
 
@@ -300,3 +300,73 @@ class OnlineController:
         i = min(range(len(self.ladder)), key=lambda k: abs(self.ladder[k] - b))
         self.rt.batch_size = self.ladder[i]
         return i
+
+
+class OffloadController:
+    """Online hill climbing on DeepRecSched's *second* knob — the
+    query-size offload threshold (paper §V, Fig. 10) — fed by
+    p99-by-component telemetry instead of a raw latency scalar.
+
+    The boot-time ``tune()`` climb freezes the threshold against an
+    offline profile; this controller re-runs the climb online, per node,
+    so the knob tracks the traffic the node is actually seeing (the
+    Hercules offline-profile + online-adjust split, arxiv 2203.07424).
+    One decision per telemetry window:
+
+      * **SLA breach** (e2e p99 > sla): move work toward the less-loaded
+        path.  If the CPU-side queueing p99 dominates the accelerator's,
+        step the threshold *down* one rung (offload more queries);
+        otherwise the accelerator is the bottleneck — step *up* (keep
+        more on CPU).
+      * **Deep headroom** (e2e p99 < ``relax_frac``·sla): drift one rung
+        back toward ``prefer`` — the offline-tuned operating point is
+        the best throughput rung, so idle periods undo emergency moves.
+      * otherwise hold.
+
+    The controller is engine-agnostic: it owns no runtime, just the knob
+    value.  Callers read ``threshold`` after each ``step`` and push it
+    into their backend (``NodeBackend.set_offload_threshold`` for the
+    fleet engines, ``SchedulerConfig`` rebuild for a bare runtime).
+    ``threshold is None`` means "never offload" and snaps to the top
+    rung, mirroring ``NodeSpec``'s convention."""
+
+    def __init__(self, sla_ms: float, threshold: int | None = None,
+                 ladder=THRESHOLD_LADDER, prefer: int | None = None,
+                 relax_frac: float = 0.6):
+        self.sla_ms = sla_ms
+        self.ladder = list(ladder)
+        self.threshold = self._snap(threshold)
+        self.prefer = self._snap(prefer if prefer is not None else threshold)
+        self.relax_frac = relax_frac
+        # (threshold, e2e p99, cpu-queue p99, accel-queue p99) per step
+        self.history: list[tuple[int, float, float, float]] = []
+
+    def _snap(self, thr: int | None) -> int:
+        if thr is None:
+            return self.ladder[-1]
+        if thr in self.ladder:
+            return thr
+        return min(self.ladder, key=lambda r: abs(r - thr))
+
+    def step(self, p99_ms: float, cpu_queue_p99_ms: float,
+             acc_queue_p99_ms: float) -> int:
+        """One control decision from this window's component percentiles;
+        returns the (possibly unchanged) threshold.  NaN inputs — an
+        empty window — hold the knob."""
+        i = self.ladder.index(self.threshold)
+        if not np.isnan(p99_ms):
+            if p99_ms > self.sla_ms:
+                cpu_q = 0.0 if np.isnan(cpu_queue_p99_ms) else cpu_queue_p99_ms
+                acc_q = 0.0 if np.isnan(acc_queue_p99_ms) else acc_queue_p99_ms
+                if cpu_q >= acc_q and i > 0:
+                    i -= 1                      # offload more
+                elif cpu_q < acc_q and i < len(self.ladder) - 1:
+                    i += 1                      # accel saturated: keep on CPU
+            elif p99_ms < self.relax_frac * self.sla_ms:
+                j = self.ladder.index(self.prefer)
+                i += (i < j) - (i > j)          # drift one rung toward prefer
+        self.threshold = self.ladder[i]
+        self.history.append((self.threshold, float(p99_ms),
+                             float(cpu_queue_p99_ms),
+                             float(acc_queue_p99_ms)))
+        return self.threshold

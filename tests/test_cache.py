@@ -1,0 +1,275 @@
+"""Fleet-front result cache + skewed-traffic axis + offload tuning (PR 9).
+
+Unit semantics of ``FleetCache`` (hit/miss/eviction/TTL), the Zipf
+popularity axis through the trace generators, grouped-path bit-parity
+with the cache disabled, sim-vs-live hit-path equivalence, and the
+per-node online offload-threshold controller moving under load.
+"""
+import numpy as np
+import pytest
+
+from repro.cluster import (CacheConfig, Fleet, FleetCache, NodeSpec,
+                           OffloadTuning, Pool, StationaryTraffic,
+                           cluster_max_qps, make_router, simulate_fleet)
+from repro.cluster.backend import SimNodeBackend, sim_backends
+from repro.cluster.cluster_sim import drive_fleet
+from repro.cluster.fleet import NodeView
+from repro.core.latency_model import (GPU_1080TI, AnalyticalDeviceModel,
+                                      TableDeviceModel)
+from repro.core.query_gen import (NO_REPEATS, PRODUCTION, PopularityDist,
+                                  keyed_sizes, sample_trace)
+
+pytestmark = pytest.mark.cluster
+
+CPU = TableDeviceModel(np.array([1., 4, 16, 64, 256, 1024]),
+                       np.array([.0008, .001, .0018, .0045, .015, .058]))
+ACCEL = AnalyticalDeviceModel(
+    flops_per_sample=5e6, mem_bytes_per_sample=1e5, in_bytes_per_sample=4e3,
+    **GPU_1080TI)
+ZIPF = PopularityDist(kind="zipf", alpha=1.1, catalog=500)
+
+
+def _accel_fleet(n=2, thr=150, batch=8) -> Fleet:
+    return Fleet([Pool("gpu", NodeSpec(cpu=CPU, accel=ACCEL, batch_size=batch,
+                                       offload_threshold=thr), count=n)])
+
+
+# ------------------------------------------------------------ unit: cache
+
+
+def test_cache_miss_then_hit_then_counters():
+    c = FleetCache(CacheConfig(capacity=16, ttl_s=10.0))
+    keys = np.array([3, 4, 3], np.int64)
+    t = np.zeros(3)
+    assert not c.lookup_many(keys, t).any()           # cold: all miss
+    c.insert_many(np.array([3], np.int64), np.array([1.0]))
+    hits = c.lookup_many(keys, np.full(3, 2.0))
+    assert hits.tolist() == [True, False, True]
+    assert c.hits == 2 and c.misses == 4 and c.size == 1
+    assert c.stats()["hits"] == 2
+
+
+def test_cache_ttl_staleness_and_future_entries():
+    c = FleetCache(CacheConfig(capacity=16, ttl_s=5.0))
+    c.insert_many(np.array([7], np.int64), np.array([10.0]))
+    # before the result exists -> miss (no time travel)
+    assert not c.lookup_many(np.array([7], np.int64), np.array([9.0])).any()
+    assert c.lookup_many(np.array([7], np.int64), np.array([12.0])).all()
+    # past fresh_ts + ttl the entry is dropped on touch
+    assert not c.lookup_many(np.array([7], np.int64), np.array([15.1])).any()
+    assert c.expirations == 1 and c.size == 0
+
+
+def test_cache_lru_evicts_oldest_lfu_evicts_coldest():
+    lru = FleetCache(CacheConfig(capacity=2, ttl_s=100.0, shards=1,
+                                 policy="lru"))
+    lru.insert_many(np.array([1, 2], np.int64), np.zeros(2))
+    lru.lookup_many(np.array([1], np.int64), np.array([1.0]))  # 1 is MRU
+    lru.insert_many(np.array([3], np.int64), np.array([1.0]))
+    assert lru.evictions == 1
+    assert lru.lookup_many(np.array([1], np.int64), np.array([2.0])).all()
+    assert not lru.lookup_many(np.array([2], np.int64), np.array([2.0])).any()
+
+    lfu = FleetCache(CacheConfig(capacity=2, ttl_s=100.0, shards=1,
+                                 policy="lfu"))
+    lfu.insert_many(np.array([1, 2], np.int64), np.zeros(2))
+    for _ in range(3):                                 # key 2 is hot
+        lfu.lookup_many(np.array([2], np.int64), np.array([1.0]))
+    lfu.insert_many(np.array([3], np.int64), np.array([1.0]))
+    assert not lfu.lookup_many(np.array([1], np.int64), np.array([2.0])).any()
+    assert lfu.lookup_many(np.array([2], np.int64), np.array([2.0])).all()
+
+
+def test_cache_unkeyed_and_nan_never_cached():
+    c = FleetCache(CacheConfig(capacity=8, ttl_s=10.0))
+    c.insert_many(np.array([-1, 5], np.int64), np.array([0.0, np.nan]))
+    assert c.size == 0
+    assert not c.lookup_many(np.array([-1], np.int64), np.array([1.0])).any()
+
+
+def test_cache_config_validation():
+    with pytest.raises(ValueError):
+        CacheConfig(policy="arc")
+    with pytest.raises(ValueError):
+        CacheConfig(capacity=0)
+    with pytest.raises(ValueError):
+        CacheConfig(ttl_s=-1.0)
+
+
+# ------------------------------------------------- unit: popularity axis
+
+
+def test_zipf_keys_deterministic_and_skewed(rng):
+    keys = ZIPF.sample(np.random.default_rng(3), 4000)
+    again = ZIPF.sample(np.random.default_rng(3), 4000)
+    np.testing.assert_array_equal(keys, again)
+    assert keys.min() >= 0 and keys.max() < ZIPF.catalog
+    # the head outweighs a uniform draw by a wide margin
+    top = np.bincount(keys, minlength=ZIPF.catalog).max()
+    assert top > 5 * (4000 / ZIPF.catalog)
+    none = PopularityDist(kind="none").sample(rng, 10)
+    assert (none == -1).all()
+
+
+def test_keyed_sizes_coherent_per_key(rng):
+    keys = ZIPF.sample(rng, 3000)
+    sizes = keyed_sizes(rng, keys, PRODUCTION)
+    for k in np.unique(keys)[:20]:
+        assert len(set(sizes[keys == k].tolist())) == 1
+    assert sizes.min() >= 1
+
+
+def test_traffic_generate_keyed_matches_unkeyed_times(rng):
+    tr = StationaryTraffic(500.0)
+    t0, s0 = tr.generate(np.random.default_rng(5), 2.0)
+    t1, s1, k1 = tr.generate_keyed(np.random.default_rng(5), 2.0,
+                                   popularity=ZIPF)
+    np.testing.assert_array_equal(t0, t1)
+    assert len(k1) == len(t1) and k1.max() < ZIPF.catalog
+    # the no-repeats axis marks every query unique
+    t2, s2, k2 = tr.generate_keyed(np.random.default_rng(5), 2.0,
+                                   popularity=NO_REPEATS)
+    np.testing.assert_array_equal(t0, t2)
+    assert (k2 == -1).all() and s2.min() >= 1
+
+
+# ------------------------------------------- driver: hits, parity, tuning
+
+
+def _keyed_trace(n=60, qps=600.0, n_keys=20, seed=0):
+    """First half unique keys, second half repeats them after a gap long
+    enough that every original has completed and committed."""
+    rng = np.random.default_rng(seed)
+    half = n // 2
+    t1 = np.sort(rng.uniform(0.0, half / qps, half))
+    t2 = np.sort(rng.uniform(0.5 + half / qps, 0.5 + n / qps, n - half))
+    keys = np.concatenate([np.arange(half) % n_keys,
+                           np.arange(n - half) % n_keys]).astype(np.int64)
+    sizes = (keys % 7 + 1) * 4
+    return np.concatenate([t1, t2]), sizes.astype(np.int64), keys
+
+
+def test_sim_cache_hits_complete_at_hit_latency():
+    times, sizes, keys = _keyed_trace()
+    fleet = _accel_fleet()
+    cache = FleetCache(CacheConfig(capacity=64, ttl_s=100.0,
+                                   hit_latency_s=1e-3))
+    r = simulate_fleet(times, sizes, fleet, make_router("round_robin"),
+                       window_s=0.05, telemetry=True, cache=cache,
+                       query_keys=keys)
+    assert r.cache_hits == 30 and r.cache_misses == 30
+    assert r.cache_hit_rate == pytest.approx(0.5)
+    sp = r.telemetry.spans
+    hit = sp.cache_s > 0
+    assert hit.sum() == 30
+    np.testing.assert_allclose(sp.t_done[hit] - sp.t_routed[hit], 1e-3)
+    assert r.telemetry.attribution().reconciles()
+
+
+def test_live_hit_path_matches_sim_counts():
+    """The realtime short-circuit commits at completion and answers
+    repeats identically to the analytic engine on the same keyed trace."""
+    from repro.cluster import LiveNodeBackend, WallClock
+    from repro.cluster.live import BucketedDeviceModel
+    from repro.serve.runtime import ServingRuntime
+
+    times, sizes, keys = _keyed_trace(n=40, qps=400.0)
+    cfg = CacheConfig(capacity=64, ttl_s=100.0, hit_latency_s=1e-3)
+    spec = NodeSpec(cpu=CPU, batch_size=8, offload_threshold=150)
+    sim = [SimNodeBackend(NodeView("p", i, spec, 1.0)) for i in range(2)]
+    r_sim = drive_fleet(times, sizes, sim, make_router("round_robin"),
+                        window_s=0.05, cache=FleetCache(cfg),
+                        query_keys=keys)
+
+    def apply_fn(batch):
+        return batch["x"].sum()
+
+    def make_batch(size, model_id):
+        return {"x": np.ones((size, 2), np.float32)}
+
+    dev = BucketedDeviceModel(np.array([1, 2, 4, 8, 16, 32, 64]),
+                              np.full(7, 2e-4))
+    lspec = NodeSpec(cpu=dev, n_executors=1, batch_size=16,
+                     request_overhead_s=0.0)
+    clock = WallClock()
+    live = [LiveNodeBackend(ServingRuntime(apply_fn, n_workers=1,
+                                           batch_size=16, max_bucket=64),
+                            make_batch, spec=lspec, pool="p", index_in_pool=i,
+                            clock=clock, own_runtime=True) for i in range(2)]
+    try:
+        r_live = drive_fleet(times, sizes, live, make_router("round_robin"),
+                             window_s=0.05, cache=FleetCache(cfg),
+                             query_keys=keys)
+    finally:
+        for b in live:
+            b.close()
+    assert r_sim.cache_hits == r_live.cache_hits == 20
+    assert r_sim.cache_misses == r_live.cache_misses == 20
+    assert r_live.dropped == 0 and r_live.errors == 0
+
+
+def test_cache_off_bit_parity_with_grouped_fast_path():
+    """With the cache disabled and thresholds static, the PR 9 driver is
+    bit-identical to the PR 8 grouped path — per-query completion times,
+    grouped vs per-node, keys present or not."""
+    rng = np.random.default_rng(2)
+    times, sizes = sample_trace(rng, 400, PRODUCTION)
+    times = times / 800.0
+    keys = ZIPF.sample(rng, 400)
+    fleet = _accel_fleet(n=3)
+    router = make_router("least_outstanding")
+
+    def run(**kw):
+        return simulate_fleet(times, sizes, fleet, router, window_s=0.05,
+                              telemetry=True, **kw)
+
+    base = run(grouped=False)                      # PR 8 reference path
+    grouped = run(grouped=None)
+    with_keys = run(grouped=None, query_keys=keys)  # keys alone: inert
+    for r in (grouped, with_keys):
+        np.testing.assert_array_equal(base.telemetry.spans.t_done,
+                                      r.telemetry.spans.t_done)
+        assert base.qps == r.qps and base.p99_ms == r.p99_ms
+    assert base.cache_hits == with_keys.cache_hits == 0
+
+
+def test_offload_tuning_moves_threshold_under_breach():
+    """Overdriven fleet + impossible SLA: the controller must leave the
+    initial rung; relaxed SLA: it must hold/drift back to prefer."""
+    rng = np.random.default_rng(4)
+    times, sizes = sample_trace(rng, 1500, PRODUCTION)
+    times = times / 4000.0                         # ~4k qps on 2 tiny nodes
+    fleet = _accel_fleet(n=2, thr=450)
+    r = simulate_fleet(times, sizes, fleet, make_router("round_robin"),
+                       window_s=float(times[-1]) / 30, telemetry=True,
+                       offload_tuning=OffloadTuning(sla_ms=0.05))
+    moved = {int(w.metrics[k])
+             for w in r.telemetry.timeline.windows
+             for k in w.metrics if k.startswith("offload_threshold")}
+    assert moved - {450}, f"controller never left 450: {moved}"
+    assert any(k.startswith("offload_fraction")
+               for k in r.telemetry.timeline.windows[-1].metrics)
+
+    calm = _accel_fleet(n=2, thr=450)
+    r2 = simulate_fleet(times * 50, sizes, calm, make_router("round_robin"),
+                        window_s=float(times[-1]) * 50 / 10, telemetry=True,
+                        offload_tuning=OffloadTuning(sla_ms=1e6))
+    held = {int(w.metrics[k])
+            for w in r2.telemetry.timeline.windows
+            for k in w.metrics if k.startswith("offload_threshold")}
+    assert held == {450}                           # prefer == initial rung
+
+
+def test_drive_fleet_validation_errors():
+    times, sizes, keys = _keyed_trace(n=10)
+    backends = sim_backends(_accel_fleet(n=1).node_views())
+    cache = FleetCache(CacheConfig())
+    with pytest.raises(ValueError, match="query_keys"):
+        drive_fleet(times, sizes, backends, make_router("round_robin"),
+                    window_s=0.05, cache=cache)
+    with pytest.raises(ValueError, match="telemetry"):
+        drive_fleet(times, sizes, backends, make_router("round_robin"),
+                    window_s=0.05, offload_tuning=OffloadTuning(sla_ms=1.0))
+    with pytest.raises(ValueError, match="popularity"):
+        cluster_max_qps(_accel_fleet(), make_router("round_robin"), 100.0,
+                        n_queries=50, cache_cfg=CacheConfig())

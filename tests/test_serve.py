@@ -7,7 +7,8 @@ import numpy as np
 import pytest
 
 from repro.serve.batching import bucket_for, pad_batch, slice_result
-from repro.serve.runtime import OnlineController, ServingRuntime
+from repro.serve.runtime import (OffloadController, OnlineController,
+                                 ServingRuntime)
 
 
 def test_bucketing():
@@ -219,3 +220,42 @@ def test_online_controller_holds_inside_hysteresis_band():
         assert ctl.history and ctl.history[-1][0] == 16
     finally:
         rt.shutdown()
+
+
+# --------------------------------------------- offload-threshold controller
+
+
+def test_offload_controller_breach_steps_toward_unloaded_path():
+    ctl = OffloadController(sla_ms=100.0, threshold=300)
+    # CPU queueing dominates -> offload more (threshold down one rung)
+    assert ctl.step(250.0, cpu_queue_p99_ms=80.0, acc_queue_p99_ms=5.0) == 200
+    # accelerator queueing dominates -> keep work on CPU (up one rung)
+    assert ctl.step(250.0, cpu_queue_p99_ms=5.0, acc_queue_p99_ms=80.0) == 300
+    assert [h[0] for h in ctl.history] == [200, 300]
+
+
+def test_offload_controller_headroom_drifts_to_prefer():
+    ctl = OffloadController(sla_ms=100.0, threshold=300)
+    ctl.threshold = 50                     # emergency moves left it low
+    assert ctl.step(10.0, 0.0, 0.0) == 100   # one rung back toward 300
+    assert ctl.step(10.0, 0.0, 0.0) == 150
+    # from above, drift comes DOWN toward prefer too
+    ctl.threshold = 700
+    assert ctl.step(10.0, 0.0, 0.0) == 450
+
+
+def test_offload_controller_holds_on_nan_and_mid_band():
+    ctl = OffloadController(sla_ms=100.0, threshold=300)
+    assert ctl.step(float("nan"), 1.0, 1.0) == 300      # empty window
+    assert ctl.step(80.0, 50.0, 1.0) == 300             # inside the band
+    # NaN queue components during a breach default to zero, not a crash
+    assert ctl.step(250.0, float("nan"), float("nan")) == 200
+
+
+def test_offload_controller_snaps_and_clamps():
+    assert OffloadController(sla_ms=1.0, threshold=None).threshold == 1001
+    assert OffloadController(sla_ms=1.0, threshold=333).threshold == 300
+    ctl = OffloadController(sla_ms=100.0, threshold=1)
+    assert ctl.step(500.0, 10.0, 0.0) == 1              # clamped at floor
+    ctl2 = OffloadController(sla_ms=100.0, threshold=1001)
+    assert ctl2.step(500.0, 0.0, 10.0) == 1001          # clamped at top
