@@ -5,7 +5,10 @@
 Prints ``name,us_per_call,derived`` CSV rows (the harness contract).
 ``--json`` additionally writes the same rows machine-readably, grouped per
 suite with wall-clock and pass/fail status — consumed by the CI bench-smoke
-artifact and future BENCH tracking.
+artifact and future BENCH tracking.  Every completed suite also writes its
+own report slice to ``$REPRO_ARTIFACTS/BENCH_<suite>.json`` (same shape as
+one entry of the ``--json`` ``suites`` map), so CI steps that run a single
+suite get a stable per-suite artifact without post-processing.
 ``--strict`` turns soft checks (rows whose derived column says ``FAIL``)
 into a nonzero exit, so CI can gate on thresholds like the sched_speed
 ≥10× bar instead of only on exceptions.
@@ -36,8 +39,19 @@ SUITES = [
     ("latency_attribution", "benchmarks.latency_attribution"),
     ("fleet_speed", "benchmarks.fleet_speed"),
     ("cache_offload", "benchmarks.cache_offload"),
+    ("slo_diagnosis", "benchmarks.slo_diagnosis"),
     ("roofline_report", "benchmarks.roofline_report"),
 ]
+
+
+def _write_suite_artifact(name: str, entry: dict) -> None:
+    """Standard per-suite artifact: ``$REPRO_ARTIFACTS/BENCH_<name>.json``."""
+    import os
+
+    from benchmarks.common import ART
+    os.makedirs(ART, exist_ok=True)
+    with open(os.path.join(ART, f"BENCH_{name}.json"), "w") as f:
+        json.dump({name: entry}, f, indent=1)
 
 
 def _git_sha() -> str | None:
@@ -104,6 +118,7 @@ def main() -> None:
             "rows": [{"name": r[0], "us_per_call": r[1], "derived": r[2]}
                      for r in rows()[seen:]],
         }
+        _write_suite_artifact(name, report[name])
     if args.json:
         meta = {"git_sha": _git_sha(),
                 "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S%z"),

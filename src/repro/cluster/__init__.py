@@ -31,7 +31,12 @@ hundreds of machines", validated against real execution).
   bursts the chaos benchmark gates on).
 * ``autoscaler`` — reactive p95-vs-SLA pool scaling plus the predictive
   boot-latency-ahead ``PredictiveAutoscaler`` over traffic forecasts,
-  with node-hour accounting, against the ``CapacityLedger`` protocol.
+  with node-hour accounting, against the ``CapacityLedger`` protocol;
+  ``TelemetrySignal`` swaps the driver-plumbed p95 scalar for the
+  registry's window sketches, and ``DiagnosisPolicy`` wraps any scaler
+  with SLO-breach-diagnosis-matched actions (scale out on queueing
+  saturation, hold on fault recovery, pre-warm on cold capacity) via
+  ``drive_fleet(slo=..., autoscaler=DiagnosisPolicy(...))``.
 * ``cache`` — ``FleetCache``: the fleet-front result cache (sharded
   LRU/LFU with TTL staleness) that answers popularity-keyed repeats
   before the router; ``drive_fleet(cache=..., query_keys=...)``.
@@ -41,8 +46,9 @@ hundreds of machines", validated against real execution).
   offload-threshold controller.
 """
 from repro.cluster.autoscaler import (Autoscaler,  # noqa: F401
-                                      CapacityLedger, PredictiveAutoscaler,
-                                      ScalingEvent)
+                                      CapacityLedger, DiagnosisPolicy,
+                                      PredictiveAutoscaler, ScalingEvent,
+                                      TelemetrySignal)
 from repro.cluster.backend import (BackendDied,  # noqa: F401
                                    CompletedQuery, NodeBackend, NodeHandle,
                                    PendingQuery, SimNodeBackend, sim_backends)

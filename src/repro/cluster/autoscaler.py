@@ -47,9 +47,12 @@ pay their spec's ``boot_s`` before serving).
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Protocol, Sequence, runtime_checkable
 
 import numpy as np
+
+from repro.obs.slo import ControlAction
 
 
 @runtime_checkable
@@ -77,6 +80,46 @@ class ScalingEvent:
     reason: str = ""          # trigger that fired: "p95" | "util" | "forecast"
 
 
+class TelemetrySignal:
+    """Registry-backed scaling signal: reads the latest window's p95 (and
+    queueing component) from the :class:`~repro.obs.metrics.FleetTimeline`
+    sketches instead of the driver-plumbed ``p95_ms`` scalar.  The sketch
+    p95 sees everything the registry folds — notably re-route wait on
+    orphaned queries, which the scalar window p95 cannot represent —
+    so a signal-fed scaler reacts to fault recovery the scalar one is
+    blind to.  Attach with ``Autoscaler(signal=TelemetrySignal())``; the
+    driver binds the run's telemetry at start (``bind``).  Windows with
+    no completions fall back to the scalar path."""
+
+    def __init__(self, telemetry=None):
+        self.telemetry = telemetry
+
+    def bind(self, telemetry) -> None:
+        self.telemetry = telemetry
+
+    def _window(self):
+        tl = getattr(self.telemetry, "timeline", None)
+        if tl is None or not tl.windows:
+            return None
+        return tl.windows[-1]
+
+    def _q(self, metric: str, q: float) -> float | None:
+        w = self._window()
+        sk = w.sketch(metric) if w is not None else None
+        if sk is None or not sk.n:
+            return None
+        return float(sk.quantile(q))
+
+    def window_p95_ms(self) -> float | None:
+        """Latest window's fleet-latency p95 from the sketch, or None."""
+        return self._q("fleet_latency_ms", 0.95)
+
+    def window_queueing_p95_ms(self) -> float | None:
+        """Latest window's p95 executor-queueing component, or None
+        (needs the SLO span folds: ``drive_fleet(slo=...)``)."""
+        return self._q("span_queueing_ms", 0.95)
+
+
 @dataclasses.dataclass
 class Autoscaler:
     sla_ms: float
@@ -86,11 +129,21 @@ class Autoscaler:
     util_low: float = 0.6
     step: int = 1
     cooldown_windows: int = 1
+    signal: TelemetrySignal | None = None   # registry p95 over the scalar
     events: list[ScalingEvent] = dataclasses.field(default_factory=list)
     _cooldown: int = 0
 
     def reset(self) -> None:
         self.events, self._cooldown = [], 0
+
+    def _p95(self, p95_ms: float) -> float:
+        """Effective p95 signal: the registry window sketch when a bound
+        ``TelemetrySignal`` has one, else the driver's scalar."""
+        if self.signal is not None:
+            v = self.signal.window_p95_ms()
+            if v is not None and not math.isnan(v):
+                return v
+        return p95_ms
 
     def _capacity(self, fleet: CapacityLedger) -> float:
         cap = fleet.total_capacity()
@@ -121,14 +174,18 @@ class Autoscaler:
         return self._apply(ranked, +self.step, t_s, p95_ms, fleet, reason)
 
     def _grow_to_rate(self, rate_qps: float, t_s: float, p95_ms: float,
-                      fleet: CapacityLedger, reason: str) -> int:
+                      fleet: CapacityLedger, reason: str,
+                      target_util: float | None = None) -> int:
         """Proportional sizing: order however many nodes close the gap
-        between the fleet's capacity and ``rate_qps / util_high`` in one
-        boundary (an HPA-style step, not a fixed increment — a steep ramp
-        would outrun one-node-per-window).  Greedy over the ranked pools,
-        one event per pool touched; the reactive scaler feeds the
-        *current* offered rate in, the predictive one its forecast."""
-        need = rate_qps / self.util_high - fleet.total_capacity()
+        between the fleet's capacity and ``rate_qps / target_util``
+        (default ``util_high``) in one boundary (an HPA-style step, not a
+        fixed increment — a steep ramp would outrun one-node-per-window).
+        Greedy over the ranked pools, one event per pool touched; the
+        reactive scaler feeds the *current* offered rate in, the
+        predictive one its forecast, the diagnosis policy passes its own
+        target."""
+        u = self.util_high if target_util is None else target_util
+        need = rate_qps / u - fleet.total_capacity()
         total = 0
         for pool in sorted(fleet.pools, key=lambda p: -p.qps_capacity):
             if need <= 0:
@@ -158,6 +215,7 @@ class Autoscaler:
                 fleet: CapacityLedger) -> int:
         """One window's verdict; mutates ``fleet`` and returns the node
         delta applied (0 when within band or cooling down)."""
+        p95_ms = self._p95(p95_ms)
         if self._cooldown > 0:
             self._cooldown -= 1
             return 0
@@ -212,6 +270,7 @@ class PredictiveAutoscaler(Autoscaler):
 
     def observe(self, t_s: float, p95_ms: float, offered_qps: float,
                 fleet: CapacityLedger) -> int:
+        p95_ms = self._p95(p95_ms)
         fc = self.forecast(t_s, offered_qps)   # keep EWMA warm every window
         if self._cooldown > 0:
             self._cooldown -= 1
@@ -230,3 +289,95 @@ class PredictiveAutoscaler(Autoscaler):
             return self._shrink(t_s, p95_ms, max(offered_qps, fc), cap,
                                 fleet, "util")
         return 0
+
+
+@dataclasses.dataclass
+class DiagnosisPolicy:
+    """Diagnosis-matched breach response: wraps a reactive scaler and,
+    when the window came with SLO breach diagnoses
+    (``drive_fleet(slo=..., autoscaler=DiagnosisPolicy(...))`` feeds them
+    in via :meth:`inform` each boundary), replaces the raw-latency
+    verdict with the action the *cause* calls for:
+
+      * ``QUEUEING_SATURATION`` — genuine capacity shortfall: one
+        rate-sized scale-out (``_grow_to_rate`` at ``target_util``), not
+        a node-per-window drip;
+      * ``FAULT_RECOVERY`` — retry/reroute growth: healing and re-route
+        own recovery, so **hold** scale (the raw-latency baseline buys
+        nodes here and pays node-hours for latency it cannot fix);
+      * ``COLD_CAPACITY`` — work stuck behind booting nodes: hold if
+        capacity is already booting, else pre-warm one step;
+      * ``CACHE_DEGRADATION`` / ``SERVICE_REGRESSION`` — not capacity
+        problems; delegate to the wrapped scaler's normal triggers.
+
+    Calm windows delegate wholesale, so outside incidents the policy is
+    exactly its wrapped scaler.  Every diagnosed decision is recorded as
+    a :class:`~repro.obs.slo.ControlAction` (the driver stitches these
+    into the incident log).  Duck-types the ``Autoscaler`` surface the
+    driver uses (``reset`` / ``observe`` / ``events`` / ``signal``).
+    """
+
+    scaler: Autoscaler
+    target_util: float = 0.85    # sizing bar for diagnosed scale-outs
+    prewarm_step: int = 1
+    actions: list[ControlAction] = dataclasses.field(default_factory=list)
+    _diags: list = dataclasses.field(default_factory=list)
+    _booting: float = 0.0
+
+    def reset(self) -> None:
+        self.scaler.reset()
+        self.actions, self._diags, self._booting = [], [], 0.0
+
+    @property
+    def events(self) -> list[ScalingEvent]:
+        return self.scaler.events
+
+    @property
+    def signal(self) -> TelemetrySignal | None:
+        return self.scaler.signal
+
+    def inform(self, diagnoses, booting: float = 0.0) -> None:
+        """Hand over this boundary's breach diagnoses (empty on calm
+        windows) and the booting-node gauge; consumed by the next
+        :meth:`observe`."""
+        self._diags = list(diagnoses)
+        self._booting = float(booting)
+
+    def _act(self, t_s: float, objective: str, verdict: str, action: str,
+             delta: int) -> int:
+        self.actions.append(ControlAction(t_s, objective, verdict, action,
+                                          delta))
+        return delta
+
+    def observe(self, t_s: float, p95_ms: float, offered_qps: float,
+                fleet: CapacityLedger) -> int:
+        diags, self._diags = self._diags, []
+        if not diags:
+            return self.scaler.observe(t_s, p95_ms, offered_qps, fleet)
+        d = max(diags, key=lambda x: x.burn)    # worst objective decides
+        v = d.verdict.name
+        s = self.scaler
+        p95_ms = s._p95(p95_ms)
+        if s._cooldown > 0:
+            s._cooldown -= 1
+            return self._act(t_s, d.objective, v, "cooldown", 0)
+        if v == "QUEUEING_SATURATION":
+            delta = s._grow_to_rate(offered_qps, t_s, p95_ms, fleet,
+                                    "diag:queueing",
+                                    target_util=self.target_util)
+            if delta == 0:      # capacity already sized; drain the backlog
+                delta = s._grow(t_s, p95_ms, fleet, "diag:queueing")
+            return self._act(t_s, d.objective, v, "scale_out", delta)
+        if v == "FAULT_RECOVERY":
+            return self._act(t_s, d.objective, v, "hold", 0)
+        if v == "COLD_CAPACITY":
+            if self._booting > 0:
+                return self._act(t_s, d.objective, v, "hold", 0)
+            old_step, s.step = s.step, self.prewarm_step
+            try:
+                delta = s._grow(t_s, p95_ms, fleet, "diag:cold")
+            finally:
+                s.step = old_step
+            return self._act(t_s, d.objective, v, "prewarm", delta)
+        delta = s.observe(t_s, p95_ms, offered_qps, fleet)
+        return self._act(t_s, d.objective, v, "delegate", delta)

@@ -145,6 +145,10 @@ class ClusterResult:
     cache_hits: int = 0
     cache_misses: int = 0
     cache_evictions: int = 0
+    # drive_fleet(slo=...): the run's SloEngine, carrying alerts,
+    # diagnoses, control actions and stitched incidents (repro.obs.slo);
+    # repro.obs.export serializes it and repro.obs.report renders it
+    slo: object | None = None
 
     @property
     def cache_hit_rate(self) -> float:
@@ -184,7 +188,8 @@ def _result(times: np.ndarray, done: np.ndarray, pool_of: np.ndarray,
             lifecycle: list | None = None,
             errors_by_node: dict[str, int] | None = None,
             telemetry: RunTelemetry | None = None,
-            cache_stats: dict[str, int] | None = None) -> ClusterResult:
+            cache_stats: dict[str, int] | None = None,
+            slo=None) -> ClusterResult:
     cs = cache_stats or {}
     completed = ~np.isnan(done)
     n_done = int(completed.sum())
@@ -209,7 +214,7 @@ def _result(times: np.ndarray, done: np.ndarray, pool_of: np.ndarray,
                              per_model, errors, rerouted, lifecycle or [],
                              errors_by_node or {}, telemetry,
                              cs.get("hits", 0), cs.get("misses", 0),
-                             cs.get("evictions", 0))
+                             cs.get("evictions", 0), slo)
     lats = done[completed] - times[completed]
     dur = float(done[completed].max()) - float(times[0])
     p50, p95, p99, mean = latency_percentiles_ms(lats)
@@ -223,7 +228,7 @@ def _result(times: np.ndarray, done: np.ndarray, pool_of: np.ndarray,
         lifecycle=lifecycle or [], errors_by_node=errors_by_node or {},
         telemetry=telemetry, cache_hits=cs.get("hits", 0),
         cache_misses=cs.get("misses", 0),
-        cache_evictions=cs.get("evictions", 0))
+        cache_evictions=cs.get("evictions", 0), slo=slo)
 
 
 def _window_grid(times: np.ndarray, window_s: float | None
@@ -257,7 +262,8 @@ def drive_fleet(times: np.ndarray, sizes: np.ndarray,
                 grouped: bool | None = None,
                 cache: FleetCache | None = None,
                 query_keys: np.ndarray | None = None,
-                offload_tuning: OffloadTuning | None = None
+                offload_tuning: OffloadTuning | None = None,
+                slo=None
                 ) -> ClusterResult:
     """Run one trace through a fleet of node backends.  ``times`` must be
     sorted; ``model_ids`` (optional) labels each query with its tenant and
@@ -342,9 +348,23 @@ def drive_fleet(times: np.ndarray, sizes: np.ndarray,
     ``THRESHOLD_LADDER`` rungs from the window's p99s — the
     telemetry-driven closing of paper Fig. 10's static per-node tuning.
 
-    Both layers are pure opt-in: with ``cache=None`` and
-    ``offload_tuning=None`` every hot-loop branch is untaken and the
-    grouped fast path is bit-identical to before.
+    ``slo`` (a :class:`repro.obs.SloEngine`, needs ``window_s``; implies
+    ``telemetry=True``) turns the run into an SLO-governed one: at every
+    boundary the driver folds the window's span components into
+    ``span_*_ms`` registry histograms (re-routed queries' latency enters
+    the window sketches from their *original* arrival, so fault recovery
+    is visible to the registry even though the scalar window p95 cannot
+    represent it), hands the frozen snapshot to ``slo.on_window`` (burn
+    rate, alert fire/clear, breach diagnosis), and — when the
+    ``autoscaler`` has an ``inform`` hook (``DiagnosisPolicy``) — passes
+    the diagnoses in before the scaling decision, stitching the policy's
+    ``ControlAction``s into the engine's incident log.  At end of run the
+    engine is finalized against the span table (per-incident
+    attribution) and attached as ``ClusterResult.slo``.
+
+    All three layers are pure opt-in: with ``cache=None``,
+    ``offload_tuning=None`` and ``slo=None`` every hot-loop branch is
+    untaken and the grouped fast path is bit-identical to before.
     """
     times = np.asarray(times, float)
     sizes = np.asarray(sizes, np.int64)
@@ -378,6 +398,13 @@ def drive_fleet(times: np.ndarray, sizes: np.ndarray,
                          "controller reads per-window p99-by-component "
                          "from the metrics registry, so it needs "
                          "telemetry=True and window_s")
+    if slo is not None:
+        if window_s is None:
+            raise ValueError("slo evaluation is per-window — burn rates, "
+                             "alerting and diagnosis all consume window "
+                             "snapshots, so pass window_s")
+        telemetry = True             # the engine reads the registry
+        slo.reset()
     if (fleet_faults is not None and fleet_faults.kills
             and window_s is None):
         raise ValueError("fleet_faults kills need window_s — kills are "
@@ -413,6 +440,17 @@ def drive_fleet(times: np.ndarray, sizes: np.ndarray,
         retry_seen: dict[tuple, int] = {}  # per-node retry_count cursor
         node_hist: dict[tuple, object] = {}  # hot-path histogram cache
         fleet_hist = tel.registry.histogram("fleet_latency_ms")
+    if slo is not None:
+        # per-window span-component histograms the SLO engine reads —
+        # folded only when an engine is attached so slo=None runs stay
+        # bit-identical (no extra registry traffic)
+        slo_q = tel.registry.histogram("span_queueing_ms")
+        slo_s = tel.registry.histogram("span_service_ms")
+    if autoscaler is not None and tel is not None:
+        # registry-backed scaling signal: bind the run's telemetry
+        sig = getattr(autoscaler, "signal", None)
+        if sig is not None and getattr(sig, "telemetry", None) is None:
+            sig.bind(tel)
 
     def _node_name(b) -> str:
         return f"{b.pool}[{b.index_in_pool}]"
@@ -429,6 +467,10 @@ def drive_fleet(times: np.ndarray, sizes: np.ndarray,
         if s > 0.0:
             if sel_idx is not None:
                 tel.spans.add_retry(sel_idx, s)
+                if slo is not None:
+                    # every query in the frame shared the stall
+                    tel.registry.histogram("span_retry_ms").observe_many(
+                        np.full(len(sel_idx), s * 1e3))
             tel.registry.counter("rpc_retry_seconds").inc(s)
         rc = getattr(b, "retry_count", 0)
         d = rc - retry_seen.get(b.key, 0)
@@ -440,6 +482,7 @@ def drive_fleet(times: np.ndarray, sizes: np.ndarray,
     tuners: dict[tuple, OffloadController] = {}
     offl = [0, 0]                  # per-window (offloaded, submitted)
     cache_prev = {"hits": 0, "misses": 0, "evictions": 0}
+    n_acts_seen = [0]              # policy ControlActions already stitched
 
     def _thr(b) -> float:
         t = b.spec.offload_threshold
@@ -543,7 +586,8 @@ def drive_fleet(times: np.ndarray, sizes: np.ndarray,
                 grp["pools"] = np.array([b.pool for b in active], object)
         return grp
 
-    def _submit(active, assign, gidx, wt, ws, wm, allow_grouped=False):
+    def _submit(active, assign, gidx, wt, ws, wm, allow_grouped=False,
+                obs_t=None):
         """Submit a routed window; a node dying *inside* submit is not a
         driver crash — its share is returned as ``{key: lost global
         indices}`` for the heal/re-route loop.
@@ -552,7 +596,13 @@ def drive_fleet(times: np.ndarray, sizes: np.ndarray,
         node list takes the batched path: one ``submit_grouped`` advance
         plus one vectorized telemetry fold, no per-node Python loop.
         Single-node windows stay per-node — the batched layout only pays
-        off across nodes."""
+        off across nodes.
+
+        ``obs_t`` (re-route call sites, SLO runs only) overrides the
+        arrival times the *registry* observes latency from: re-routed
+        queries re-arrive at the boundary but their SLO-visible latency
+        runs from the original arrival, so the window sketches see the
+        re-route wait the scalar window p95 structurally cannot."""
         if allow_grouped and use_grouped and _grouped_parts(active)["ok"]:
             ret, order, segb, xs = submit_grouped(
                 active, assign, gidx, wt, ws, wm,
@@ -573,6 +623,13 @@ def drive_fleet(times: np.ndarray, sizes: np.ndarray,
                     tel.spans.record_many(gidx, wt, xs, ret)
                     if tune is not None:
                         _tune_fold(active, assign, wt, ws, xs)
+                    if slo is not None:
+                        q = np.subtract(xs, wt)
+                        q *= 1e3
+                        slo_q.observe_many(q)
+                        sv = np.subtract(ret, xs)
+                        sv *= 1e3
+                        slo_s.observe_many(sv)
                 else:
                     chunk_spans[0] = True
             return {}
@@ -608,14 +665,23 @@ def drive_fleet(times: np.ndarray, sizes: np.ndarray,
                     if h is None:
                         h = node_hist[b.key] = tel.registry.histogram(
                             "node_latency_ms", node=_node_name(b))
-                    v = np.subtract(ret, st)
+                    v = np.subtract(ret, obs_t[sel] if obs_t is not None
+                                    else st)
                     v *= 1e3
                     observe_fanout(v, h, fleet_hist)
-                    if tune is not None:
+                    if tune is not None or slo is not None:
                         ch = getattr(b, "_chunks", None)
                         starts = ch[-1][5] if ch else None
                         if starts is not None:
-                            _tune_fold_node(b, st, ssz, starts)
+                            if tune is not None:
+                                _tune_fold_node(b, st, ssz, starts)
+                            if slo is not None:
+                                q = np.subtract(starts, st)
+                                q *= 1e3
+                                slo_q.observe_many(q)
+                                sv = np.subtract(ret, starts)
+                                sv *= 1e3
+                                slo_s.observe_many(sv)
         return lost
 
     for w in range(n_windows):
@@ -645,13 +711,23 @@ def drive_fleet(times: np.ndarray, sizes: np.ndarray,
                 if tel is not None:
                     tel.spans.mark_reroute(oidx, w0)
                     tel.registry.counter("queries_rerouted").inc(len(oidx))
+                    if slo is not None:
+                        rr = np.subtract(np.full(len(oidx), w0),
+                                         times[oidx])
+                        rr *= 1e3
+                        tel.registry.histogram(
+                            "span_reroute_ms").observe_many(rr)
                 lost = _submit(active, router.assign(ot, osz, active,
                                                      model_ids=om),
-                               oidx, ot, osz, om)
+                               oidx, ot, osz, om,
+                               obs_t=times[oidx] if slo is not None
+                               else None)
                 rerouted += len(orphans)
             else:
                 if tel is not None:
                     tel.spans.mark_shed(oidx)
+                    if slo is not None:
+                        tel.registry.counter("queries_shed").inc(len(oidx))
                 lost = {}
         else:
             lost = {}
@@ -672,6 +748,11 @@ def drive_fleet(times: np.ndarray, sizes: np.ndarray,
                     observe_fanout(
                         np.full(len(hidx), cache.cfg.hit_latency_s * 1e3),
                         fleet_hist)
+                    if slo is not None:
+                        tel.registry.histogram(
+                            "span_cache_ms").observe_many(
+                            np.full(len(hidx),
+                                    cache.cfg.hit_latency_s * 1e3))
                 miss = ~hmask
                 midx, mt, msz = idx[miss], wt[miss], ws[miss]
                 mm = wm[miss] if wm is not None else None
@@ -685,6 +766,8 @@ def drive_fleet(times: np.ndarray, sizes: np.ndarray,
         # else: no SERVING node this window — queries stay NaN (dropped)
         elif tel is not None and len(midx):
             tel.spans.mark_shed(midx)
+            if slo is not None:
+                tel.registry.counter("queries_shed").inc(len(midx))
         while lost:
             # mid-submit deaths: retire each victim through the
             # controller (the heal policy decides whether it restarts),
@@ -709,9 +792,15 @@ def drive_fleet(times: np.ndarray, sizes: np.ndarray,
             if tel is not None:
                 tel.spans.mark_reroute(ridx, rt_)
                 tel.registry.counter("queries_rerouted").inc(len(ridx))
+                if slo is not None:
+                    rr = np.subtract(rt_, times[ridx])
+                    rr *= 1e3
+                    tel.registry.histogram(
+                        "span_reroute_ms").observe_many(rr)
             lost = _submit(active, router.assign(rt_, rs_, active,
                                                  model_ids=rm_),
-                           ridx, rt_, rs_, rm_)
+                           ridx, rt_, rs_, rm_,
+                           obs_t=times[ridx] if slo is not None else None)
         if cache is not None and not controller.realtime and len(midx):
             # commit this window's completed misses at their completion
             # times — answerable by later arrivals once fresh_ts <= t
@@ -768,6 +857,24 @@ def drive_fleet(times: np.ndarray, sizes: np.ndarray,
                         tel.registry.histogram(
                             "node_queue_cpu_ms",
                             node=name).observe_many(qcpu)
+                if slo is not None and recs:
+                    qn: list[float] = []
+                    sn: list[float] = []
+                    for r in recs:
+                        if r.error is not None:
+                            continue
+                        rel = r.t_released
+                        if np.isnan(rel):
+                            rel = r.t_arrival
+                        if not np.isnan(r.t_exec_start):
+                            qn.append((r.t_exec_start - rel) * 1e3)
+                            sn.append((r.t_done - r.t_exec_start) * 1e3)
+                        else:
+                            qn.append(0.0)
+                            sn.append((r.t_done - rel) * 1e3)
+                    if qn:
+                        slo_q.observe_many(qn)
+                        slo_s.observe_many(sn)
                 if tel is not None:
                     if node_lats:
                         observe_fanout(
@@ -815,12 +922,24 @@ def drive_fleet(times: np.ndarray, sizes: np.ndarray,
             tel.registry.gauge("serving_nodes").set(len(active))
             tel.registry.gauge("booting_nodes").set(n_boot)
             tel.registry.counter("booting_node_seconds").inc(n_boot * width)
-            tel.timeline.snapshot(
+            snap = tel.timeline.snapshot(
                 tel.registry, w0, width,
                 extra={"offered_qps": offered, "n_active": len(active),
                        "p95_ms": p95, "ctl_s": ctl_s})
+            if slo is not None:
+                # evaluate against the frozen window sketches the
+                # snapshot just stole; breach diagnoses feed the scaler
+                diags = slo.on_window(snap)
         if autoscaler is not None:
+            if slo is not None and hasattr(autoscaler, "inform"):
+                autoscaler.inform(diags, booting=n_boot)
             autoscaler.observe(w1, p95, offered, fleet)
+            if slo is not None:
+                acts = getattr(autoscaler, "actions", None)
+                if acts is not None:
+                    for a in acts[n_acts_seen[0]:]:
+                        slo.record_action(a)   # stitch into the incident
+                    n_acts_seen[0] = len(acts)
             controller.reconcile(w1)
 
     # kills that landed after the last window boundary: no windows remain
@@ -884,6 +1003,9 @@ def drive_fleet(times: np.ndarray, sizes: np.ndarray,
             c = tel.registry.counter("node_errors", node=name)
             if c.value < cnt:        # drain-time errors the window
                 c.inc(cnt - c.value)  # monitor never saw
+        if slo is not None:
+            # close open incidents and attach per-incident attribution
+            slo.finalize(tel.spans, t_end=horizon)
     if fleet is not None:
         pool_counts = {p.name: p.count for p in fleet.pools}
     else:
@@ -894,7 +1016,8 @@ def drive_fleet(times: np.ndarray, sizes: np.ndarray,
                    model_ids=model_ids, errors=errors, rerouted=rerouted,
                    lifecycle=list(controller.events),
                    errors_by_node=errors_by_node, telemetry=tel,
-                   cache_stats=cache.stats() if cache is not None else None)
+                   cache_stats=cache.stats() if cache is not None else None,
+                   slo=slo)
 
 
 def simulate_fleet(times: np.ndarray, sizes: np.ndarray, fleet: Fleet,
@@ -910,7 +1033,8 @@ def simulate_fleet(times: np.ndarray, sizes: np.ndarray, fleet: Fleet,
                    grouped: bool | None = None,
                    cache: FleetCache | None = None,
                    query_keys: np.ndarray | None = None,
-                   offload_tuning: OffloadTuning | None = None
+                   offload_tuning: OffloadTuning | None = None,
+                   slo=None
                    ) -> ClusterResult:
     """Run one trace through a simulated fleet.  ``times`` must be sorted.
 
@@ -955,11 +1079,13 @@ def simulate_fleet(times: np.ndarray, sizes: np.ndarray, fleet: Fleet,
                              "windowed fast path; per-node faults/"
                              "contention force the unwindowed event "
                              "engine — use one fault layer per run")
-        if cache is not None or offload_tuning is not None:
-            raise ValueError("the fleet-front cache and online offload "
-                             "tuning need the windowed fast path; "
-                             "per-node faults/contention force the "
-                             "unwindowed event engine")
+        if cache is not None or offload_tuning is not None \
+                or slo is not None:
+            raise ValueError("the fleet-front cache, online offload "
+                             "tuning and SLO evaluation need the "
+                             "windowed fast path; per-node faults/"
+                             "contention force the unwindowed event "
+                             "engine")
         router.reset()
         n = len(times)
         done = np.full(n, np.nan)
@@ -991,7 +1117,7 @@ def simulate_fleet(times: np.ndarray, sizes: np.ndarray, fleet: Fleet,
                        fleet_faults=fleet_faults, self_heal=self_heal,
                        telemetry=telemetry, grouped=grouped,
                        cache=cache, query_keys=query_keys,
-                       offload_tuning=offload_tuning)
+                       offload_tuning=offload_tuning, slo=slo)
 
 
 def cluster_max_qps(fleet: Fleet, router: Router, sla_ms: float, *,

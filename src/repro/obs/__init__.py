@@ -19,6 +19,11 @@ from repro.obs.export import run_lines, to_prometheus, write_jsonl
 from repro.obs.metrics import (Counter, FleetTimeline, Gauge, Histogram,
                                MetricsRegistry, QuantileSketch,
                                WindowSnapshot, observe_fanout)
+from repro.obs.diagnose import (BreachDiagnoser, ComponentEvidence,
+                                Diagnosis, Verdict)
+from repro.obs.slo import (DEFAULT_RULES, AlertEvent, BurnRateRule,
+                           ControlAction, Incident, IncidentLog, SloEngine,
+                           SloObjective)
 from repro.obs.spans import COMPONENTS, STAGES, QuerySpan, SpanTable
 
 __all__ = [
@@ -27,6 +32,9 @@ __all__ = [
     "Counter", "FleetTimeline", "Gauge", "Histogram", "MetricsRegistry",
     "QuantileSketch", "WindowSnapshot", "observe_fanout",
     "COMPONENTS", "STAGES", "QuerySpan", "SpanTable",
+    "BreachDiagnoser", "ComponentEvidence", "Diagnosis", "Verdict",
+    "DEFAULT_RULES", "AlertEvent", "BurnRateRule", "ControlAction",
+    "Incident", "IncidentLog", "SloEngine", "SloObjective",
     "RunTelemetry",
 ]
 

@@ -83,9 +83,12 @@ class AttributionReport:
 
 def latency_attribution(spans: SpanTable,
                         percentiles: tuple[float, ...] = (50.0, 95.0, 99.0),
-                        band_frac: float = 0.02) -> AttributionReport:
-    """Build the attribution report for one run's span table."""
-    ok = spans.completed
+                        band_frac: float = 0.02,
+                        mask: np.ndarray | None = None) -> AttributionReport:
+    """Build the attribution report for one run's span table.  ``mask``
+    (boolean, one entry per span row) restricts the population — e.g. to
+    the queries that arrived during one incident."""
+    ok = spans.completed if mask is None else spans.completed & mask
     lat = spans.latency()[ok]
     comps = {k: v[ok] for k, v in spans.components().items()}
     n = len(lat)
@@ -114,6 +117,11 @@ def latency_attribution(spans: SpanTable,
                 sum_latency_s=float("nan"),
                 band_latency_s=float("nan"), band_n=0,
                 components_s={k: float("nan") for k in comps}))
+    if mask is None:
+        totals = spans.stage_totals()
+    else:
+        totals = {k: float(np.nansum(v[ok]))
+                  for k, v in spans.components().items()}
     return AttributionReport(
         n_completed=int(n), n_dropped=int(spans.n - n), percentiles=rows,
-        totals_s=spans.stage_totals())
+        totals_s=totals)

@@ -26,7 +26,7 @@ import numpy as np
 
 __all__ = ["QuantileSketch", "Counter", "Gauge", "Histogram",
            "MetricsRegistry", "FleetTimeline", "WindowSnapshot",
-           "observe_fanout"]
+           "RegistryCapture", "observe_fanout"]
 
 
 class QuantileSketch:
@@ -184,6 +184,27 @@ class QuantileSketch:
     def quantile(self, q: float) -> float:
         """Value at quantile ``q`` in [0, 1] (nearest-rank over buckets)."""
         return self.quantiles((q,))[0]
+
+    def count_above(self, v: float) -> int:
+        """Observations greater than ``v``, at bucket resolution: values
+        sharing ``v``'s bucket are *not* counted, so the answer can
+        undercount by up to ``rel_err`` of mass near ``v`` — the SLO
+        burn-rate evaluator's bad-event count, where the bound sits far
+        from the bulk of a healthy window."""
+        if self.n == 0 or v >= self.vmax:
+            return 0
+        if v < self.vmin:
+            return self.n
+        if v <= 0.0:
+            return self.n - self.n_zero
+        if not len(self._cnt):
+            return 0
+        j = int(math.floor(math.log(v) / self._lng)) - self._base + 1
+        if j <= 0:
+            return self.n - self.n_zero
+        if j >= len(self._cnt):
+            return 0
+        return int(self._cnt[j:].sum())
 
     def quantiles(self, qs) -> list[float]:
         """Values at several quantiles, sharing one pass over the
@@ -452,11 +473,33 @@ class RegistryCapture:
     pointer swaps, and the quantile math runs when the artifact is
     read."""
 
-    __slots__ = ("_scalars", "_wins")
+    __slots__ = ("_scalars", "_wins", "_sk_idx", "_sc_idx")
 
     def __init__(self, scalars, wins):
         self._scalars = scalars
         self._wins = wins
+        self._sk_idx = None
+        self._sc_idx = None
+
+    def sketch(self, name: str) -> QuantileSketch | None:
+        """The stolen window sketch for one formatted metric name (e.g.
+        ``fleet_latency_ms`` or ``node_latency_ms{node="cpu[0]"}``) —
+        ``None`` when the metric was untouched this window.  This is the
+        SLO engine's read side: evaluation happens against the *frozen*
+        window, after the capture has already stolen it."""
+        if self._sk_idx is None:
+            self._sk_idx = dict(self._wins)
+        return self._sk_idx.get(name)
+
+    def value(self, name: str) -> float | None:
+        """One captured scalar (counter/gauge) by formatted name."""
+        if self._sc_idx is None:
+            self._sc_idx = dict(self._scalars)
+        return self._sc_idx.get(name)
+
+    def scalar_items(self) -> list[tuple[str, float]]:
+        """All captured (formatted name, value) scalar pairs."""
+        return list(self._scalars)
 
     def render(self) -> dict[str, float]:
         out = dict(self._scalars)
@@ -496,6 +539,22 @@ class WindowSnapshot:
             c = self._capture
             self._metrics = c.render() if c is not None else {}
         return self._metrics
+
+    def sketch(self, name: str) -> "QuantileSketch | None":
+        """This window's frozen sketch for one formatted metric name
+        (``None`` off the capture path or when untouched) — what the SLO
+        engine evaluates objectives against."""
+        c = self._capture
+        return c.sketch(name) if c is not None else None
+
+    def value(self, name: str) -> float | None:
+        """One captured scalar (counter/gauge) by formatted name."""
+        c = self._capture
+        return c.value(name) if c is not None else None
+
+    def scalar_items(self) -> list[tuple[str, float]]:
+        c = self._capture
+        return c.scalar_items() if c is not None else []
 
     def __repr__(self) -> str:
         return (f"WindowSnapshot(t_s={self.t_s}, width_s={self.width_s}, "

@@ -140,6 +140,26 @@ def test_sketch_scalar_and_batch_paths_agree():
     assert np.isclose(one.total, many.total)
 
 
+def test_sketch_count_above():
+    s = QuantileSketch(REL_ERR)
+    assert s.count_above(1.0) == 0                   # empty
+    vals = np.array([0.0, -2.0, 0.5, 10.0, 100.0, 1000.0])
+    s.observe_many(vals)
+    assert s.count_above(-5.0) == len(vals)          # below vmin
+    assert s.count_above(1e6) == 0                   # above vmax
+    assert s.count_above(0.0) == 4                   # non-positives excluded
+    # interior thresholds are bucket-resolution: exact within rel_err mass
+    for t, exact in ((5.0, 3), (50.0, 2), (500.0, 1)):
+        assert s.count_above(t) == exact, t
+    rng = np.random.default_rng(17)
+    many = rng.lognormal(0.0, 2.0, 20_000)
+    m = QuantileSketch(REL_ERR)
+    m.observe_many(many)
+    for t in (0.1, 1.0, 10.0):
+        exact = int((many > t).sum())
+        assert abs(m.count_above(t) - exact) <= 0.03 * len(many), t
+
+
 def test_sketch_copy_and_reset_are_independent():
     s = QuantileSketch(REL_ERR)
     s.observe_many([1.0, 2.0, 4.0])
@@ -238,12 +258,51 @@ def test_prometheus_exposition_format():
     reg.gauge("serving_nodes").set(3)
     reg.histogram("lat_ms", node="cpu[0]").observe_many([1.0, 2.0, 10.0])
     text = to_prometheus(reg)
+    assert "# HELP queries_completed" in text
     assert "# TYPE queries_completed counter" in text
     assert "queries_completed 41" in text
     assert "# TYPE serving_nodes gauge" in text
     assert "# TYPE lat_ms summary" in text
     assert 'lat_ms_count{node="cpu[0]"} 3' in text
     assert 'quantile="0.95"' in text
+
+
+def test_prometheus_golden_exposition():
+    """Byte-exact golden rendering: HELP before TYPE once per family,
+    sorted label order regardless of insertion order, escaped label
+    values.  Single-observation histograms make the summary quantiles
+    exact, so the whole exposition is deterministic."""
+    reg = MetricsRegistry()
+    reg.counter("queries_shed").inc(7)
+    reg.gauge("booting_nodes").set(2)
+    # labels inserted b-first must render a-first (stable sorted order)
+    reg.histogram("fleet_latency_ms", zone='eu"1"', arch="dlrm\\x").observe(
+        4.0)
+    golden = (
+        "# HELP queries_shed Queries shed by admission control.\n"
+        "# TYPE queries_shed counter\n"
+        "queries_shed 7\n"
+        "# HELP booting_nodes Nodes currently booting.\n"
+        "# TYPE booting_nodes gauge\n"
+        "booting_nodes 2\n"
+        "# HELP fleet_latency_ms End-to-end query latency across the "
+        "fleet.\n"
+        "# TYPE fleet_latency_ms summary\n"
+        'fleet_latency_ms{arch="dlrm\\\\x",quantile="0.5",zone="eu\\"1\\""}'
+        " 4\n"
+        'fleet_latency_ms{arch="dlrm\\\\x",quantile="0.95",zone="eu\\"1\\"'
+        '"} 4\n'
+        'fleet_latency_ms{arch="dlrm\\\\x",quantile="0.99",zone="eu\\"1\\"'
+        '"} 4\n'
+        'fleet_latency_ms_count{arch="dlrm\\\\x",zone="eu\\"1\\""} 1\n'
+        'fleet_latency_ms_sum{arch="dlrm\\\\x",zone="eu\\"1\\""} 4\n'
+    )
+    assert to_prometheus(reg) == golden
+    # a family seen under several label sets gets exactly one header pair
+    reg.histogram("fleet_latency_ms", zone="us").observe(8.0)
+    text = to_prometheus(reg)
+    assert text.count("# TYPE fleet_latency_ms summary") == 1
+    assert text.count("# HELP fleet_latency_ms") == 1
 
 
 # ------------------------------------------------- spans + attribution
@@ -459,3 +518,54 @@ def test_dump_cli_main(tmp_path, capsys):
     assert dump_main([path]) == 0
     out = capsys.readouterr().out
     assert "run:" in out and "stage totals:" in out
+
+
+def test_dump_window_filter(tmp_path, capsys):
+    from repro.obs.dump import main as dump_main
+    r = _sim_result(n=300, horizon=1.0, window_s=0.1)
+    path = os.path.join(tmp_path, "run.jsonl")
+    write_jsonl(r, path)
+    n_windows = len(r.telemetry.timeline.windows)
+    assert dump_main([path, "--window", "0.15:0.45"]) == 0  # implies --windows
+    out = capsys.readouterr().out
+    assert f"windows: {n_windows} (3 selected)" in out
+    assert "t=0.20s" in out and "t=0.30s" in out and "t=0.40s" in out
+    assert "t=0.50s" not in out and "t=0.10s" not in out
+    # open-ended ranges: either side of the colon may be empty
+    assert dump_main([path, "--window", "0.75:"]) == 0
+    assert "selected)" in capsys.readouterr().out
+    with pytest.raises(SystemExit):
+        dump_main([path, "--window", "abc"])
+
+
+def test_dump_node_filter(tmp_path, capsys):
+    from repro.obs.dump import main as dump_main
+    times, sizes = _trace(60, 0.6, seed=6)
+
+    def apply_fn(batch):
+        if len(batch["x"]) > 8:
+            raise RuntimeError("boom")
+        return batch["x"].sum()
+
+    backends = [live_node(apply_fn, lambda size, model_id:
+                          {"x": np.ones(size, np.float32)},
+                          pool="live", index_in_pool=i,
+                          device=_canned(1e-3), batch_size=16,
+                          max_bucket=64, clock=WallClock())
+                for i in range(2)]
+    try:
+        r = drive_fleet(times, sizes, backends, make_router("round_robin"),
+                        window_s=0.2, telemetry=True)
+    finally:
+        for b in backends:
+            b.close()
+    assert set(r.errors_by_node)            # scenario produced node errors
+    path = os.path.join(tmp_path, "run.jsonl")
+    write_jsonl(r, path)
+    target = sorted(r.errors_by_node)[0]
+    other = "live[1]" if target == "live[0]" else "live[0]"
+    assert dump_main([path, "--node", target, "--windows"]) == 0
+    out = capsys.readouterr().out
+    assert f"node errors: {target}=" in out
+    assert other not in out.replace(f'node="{target}"', "")
+    assert f'node="{target}"' in out        # per-window node metrics shown

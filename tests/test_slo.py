@@ -1,0 +1,496 @@
+"""SLO engine: burn-rate alerting, breach diagnosis, incident stitching,
+and the diagnosis-driven control loop.
+
+Unit tests feed hand-built window snapshots (a registry + timeline pair,
+no engine run) so every verdict and alert transition is pinned against
+known component mixes; integration tests drive small traces through the
+sim and live engines and assert the *same* verdicts come out of real
+window sketches.
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.cluster import (Autoscaler, DiagnosisPolicy, Fleet, NodeSpec,
+                           Pool, TelemetrySignal, drive_fleet, live_node,
+                           make_router, sim_backends, simulate_fleet)
+from repro.cluster.live import BucketedDeviceModel, WallClock
+from repro.core.latency_model import TableDeviceModel
+from repro.obs import (BreachDiagnoser, BurnRateRule, ControlAction,
+                       FleetTimeline, IncidentLog, MetricsRegistry,
+                       SloEngine, SloObjective, Verdict, write_jsonl)
+from repro.obs.diagnose import Diagnosis
+from repro.obs.report import render as report_render
+from repro.obs.slo import AlertEvent
+
+pytestmark = pytest.mark.cluster
+
+CPU = TableDeviceModel(np.array([1., 4, 16, 64, 256, 1024]),
+                       np.array([.0008, .001, .0018, .0045, .015, .058]))
+
+
+def _canned(service_s: float) -> BucketedDeviceModel:
+    return BucketedDeviceModel(np.array([1, 2, 4, 8, 16, 32, 64]),
+                               np.full(7, service_s))
+
+
+class _Feed:
+    """Synthetic window feeder: builds the same frozen-snapshot stream
+    the driver hands the engine, from explicit latency samples and
+    per-query component averages."""
+
+    def __init__(self, width_s: float = 0.5):
+        self.reg = MetricsRegistry()
+        self.tl = FleetTimeline()
+        self.width = width_s
+        self.t = 0.0
+
+    def window(self, lat_ms, comps=None, *, metric="fleet_latency_ms",
+               hit_rate=None, booting=None, shed=0, err=0):
+        lat = np.asarray(lat_ms, float)
+        if "{" in metric:
+            name, label = metric.split("{")
+            key, val = label.rstrip("}").split("=")
+            self.reg.histogram(name, **{key: val.strip('"')}
+                               ).observe_many(lat)
+        else:
+            self.reg.histogram(metric).observe_many(lat)
+        for c, per_q in (comps or {}).items():
+            self.reg.histogram(f"span_{c}_ms").observe_many(
+                np.full(len(lat), per_q))
+        if hit_rate is not None:
+            self.reg.gauge("cache_hit_rate").set(hit_rate)
+        if booting is not None:
+            self.reg.gauge("booting_nodes").set(booting)
+        if shed:
+            self.reg.counter("queries_shed").inc(shed)
+        if err:
+            self.reg.counter("node_errors", node="n0").inc(err)
+        snap = self.tl.snapshot(self.reg, self.t, self.width)
+        self.t += self.width
+        return snap
+
+
+def _engine(bound_ms=100.0, rules=(BurnRateRule(4, 2, 2.0),), **kw):
+    return SloEngine(SloObjective("p95", latency_ms=bound_ms), rules=rules,
+                     **kw)
+
+
+# ------------------------------------------------------------ objectives
+
+
+def test_objective_budget_and_metric():
+    o = SloObjective("a", latency_ms=50.0)
+    assert o.budget == pytest.approx(0.05)
+    assert o.metric == "fleet_latency_ms"
+    m = SloObjective("b", latency_ms=50.0, percentile=99.0, error_rate=0.01,
+                     model_id=7)
+    assert m.budget == pytest.approx(0.02)
+    assert m.metric == 'model_latency_ms{model="7"}'
+    with pytest.raises(ValueError):
+        SloEngine(())
+
+
+# --------------------------------------------------- burn-rate alerting
+
+
+def test_burn_rate_fires_on_sustained_burn_and_clears():
+    eng, feed = _engine(), _Feed()
+    calm = np.full(40, 5.0)
+    # 30% of the window over the bound: burn 0.3/0.05 = 6
+    hot = np.where(np.arange(40) < 12, 400.0, 5.0)
+    for _ in range(4):
+        eng.on_window(feed.window(calm))
+    assert not eng.alerts
+    eng.on_window(feed.window(hot))    # long avg 6/4 = 1.5 < 2: no page
+    assert not eng.alerts
+    eng.on_window(feed.window(hot))    # long avg 3, short avg 6 — fire
+    assert [a.kind for a in eng.alerts] == ["fire"]
+    assert eng.alerts[0].rule == 0 and eng.alerts[0].burn_short >= 2.0
+    eng.on_window(feed.window(calm))   # short [6, 0] avg 3: still matching
+    assert len(eng.alerts) == 1
+    eng.on_window(feed.window(calm))   # short [0, 0] — clear
+    assert [a.kind for a in eng.alerts] == ["fire", "clear"]
+    assert len(eng.incidents) == 1
+    inc = eng.incidents[0]
+    assert inc.t_end is not None and inc.duration_s == pytest.approx(1.0)
+    assert eng.violation_minutes() == pytest.approx(2 * 0.5 / 60.0)
+
+
+def test_calm_run_is_silent_and_builds_baseline():
+    eng, feed = _engine(), _Feed()
+    for _ in range(20):
+        eng.on_window(feed.window(np.full(30, 4.0),
+                                  comps={"service": 4.0}, hit_rate=0.5))
+    assert not eng.alerts and not eng.diagnoses and not eng.incidents
+    assert eng.violation_minutes() == 0.0
+    assert eng.diagnoser.calm_windows == 20
+    assert eng.diagnoser.baseline["service"] == pytest.approx(4.0)
+    assert eng.diagnoser.baseline_hit_rate == pytest.approx(0.5)
+
+
+def test_first_window_never_pages():
+    eng, feed = _engine(rules=(BurnRateRule(1, 1, 1.0),)), _Feed()
+    # even an instant-fire rule needs short_windows of history
+    eng.on_window(feed.window(np.full(10, 500.0)))
+    assert [a.kind for a in eng.alerts] == ["fire"]
+    eng2, feed2 = _engine(rules=(BurnRateRule(4, 2, 1.0),)), _Feed()
+    eng2.on_window(feed2.window(np.full(10, 500.0)))
+    assert not eng2.alerts
+
+
+def test_shed_and_errors_count_against_fleet_budget():
+    eng, feed = _engine(bound_ms=100.0), _Feed()
+    # all served latencies healthy, but half the offered load was shed
+    eng.on_window(feed.window(np.full(10, 5.0), shed=10, err=2))
+    (_, _, _, burn) = eng.track["p95"][0]
+    assert burn == pytest.approx((12 / 22) / 0.05)
+    # second window: counters are cumulative, deltas must be per-window
+    eng.on_window(feed.window(np.full(10, 5.0)))
+    (_, _, _, burn2) = eng.track["p95"][1]
+    assert burn2 == 0.0
+
+
+def test_model_scoped_objective_reads_model_stream():
+    eng = SloEngine((SloObjective("fleet", latency_ms=100.0),
+                     SloObjective("tenant7", latency_ms=100.0, model_id=7)),
+                    rules=(BurnRateRule(1, 1, 1.0),))
+    feed = _Feed()
+    feed.reg.histogram("model_latency_ms", model="7").observe_many(
+        np.full(20, 400.0))
+    eng.on_window(feed.window(np.full(40, 5.0)))
+    fired = {a.objective for a in eng.alerts if a.kind == "fire"}
+    assert fired == {"tenant7"}
+    assert eng.violation_minutes("tenant7") > 0
+    assert eng.violation_minutes("fleet") == 0.0
+    with pytest.raises(KeyError):
+        eng.violation_minutes("nope")
+
+
+# --------------------------------------------------------- diagnosis
+
+
+CALM = {"service": 2.0, "queueing": 0.5}
+
+
+@pytest.mark.parametrize("comps,hit_rate,expect", [
+    ({"service": 2.0, "queueing": 60.0}, None,
+     Verdict.QUEUEING_SATURATION),
+    ({"service": 2.0, "queueing": 10.0, "reroute": 40.0}, None,
+     Verdict.FAULT_RECOVERY),
+    ({"service": 2.0, "retry": 30.0, "queueing": 8.0}, None,
+     Verdict.FAULT_RECOVERY),
+    ({"service": 2.0, "boot_wait": 50.0, "queueing": 10.0}, None,
+     Verdict.COLD_CAPACITY),
+    ({"service": 2.0, "queueing": 30.0}, 0.1,
+     Verdict.CACHE_DEGRADATION),
+    ({"service": 40.0, "queueing": 2.0}, None,
+     Verdict.SERVICE_REGRESSION),
+], ids=["queueing", "reroute", "retry", "cold", "cache", "service"])
+def test_component_mix_maps_to_expected_verdict(comps, hit_rate, expect):
+    d = BreachDiagnoser()
+    for _ in range(5):
+        d.update_baseline(dict(CALM), hit_rate=0.5)
+    got = d.diagnose(1.0, "p95", comps, p_ms=300.0, target_ms=100.0,
+                     burn=5.0, hit_rate=hit_rate)
+    assert got.verdict is expect
+    assert got.excess_ms > 0 and got.table()
+    by_name = {e.component: e for e in got.evidence}
+    assert by_name["service"].baseline_ms == pytest.approx(2.0)
+    assert sum(e.share for e in got.evidence) == pytest.approx(1.0)
+
+
+def test_engine_diagnoses_breach_windows_against_calm_baseline():
+    eng, feed = _engine(rules=(BurnRateRule(2, 1, 1.0),)), _Feed()
+    for _ in range(6):
+        eng.on_window(feed.window(np.full(30, 4.0),
+                                  comps={"service": 3.0, "queueing": 0.5}))
+    assert not eng.diagnoses
+    out = eng.on_window(feed.window(np.full(30, 400.0),
+                                    comps={"service": 3.0,
+                                           "queueing": 300.0}))
+    assert len(out) == 1 and out[0] is eng.diagnoses[0]
+    d = out[0]
+    assert d.verdict is Verdict.QUEUEING_SATURATION
+    assert d.p_ms == pytest.approx(400.0, rel=0.05)
+    assert d.burn == pytest.approx(20.0)
+    # breach windows must NOT contaminate the calm baseline
+    assert eng.diagnoser.baseline["queueing"] == pytest.approx(0.5)
+
+
+def test_incident_log_absorbs_leadin_and_stitches_actions():
+    log = IncidentLog()
+    d = Diagnosis(1.0, "p95", Verdict.QUEUEING_SATURATION, (), 300.0,
+                  100.0, 5.0)
+    a = ControlAction(1.0, "p95", "QUEUEING_SATURATION", "scale_out", 2)
+    log.on_diagnosis(d)
+    log.on_action(a)
+    assert not log.incidents               # nothing open yet
+    log.on_alert(AlertEvent(2.0, "p95", "fire", 3.0, 5.0, 0))
+    inc = log.incidents[0]
+    assert inc.diagnoses == [d] and inc.actions == [a]
+    assert inc.peak_ms == 300.0
+    log.on_alert(AlertEvent(4.0, "p95", "clear", 0.1, 0.0, 0))
+    assert inc.t_end == 4.0
+    kinds = [k for (_, k, _) in inc.timeline()]
+    assert kinds == ["diagnosis", "action", "alert", "alert"]
+    assert inc.dominant_verdict == "QUEUEING_SATURATION"
+    # an incident still open at end of run keeps t_end=None without a
+    # horizon, and gets one when the engine finalizes with one
+    log.on_alert(AlertEvent(5.0, "p95", "fire", 3.0, 5.0, 0))
+    log.close_all()
+    assert log.incidents[1].t_end is None
+
+
+# ------------------------------------------------ diagnosis-driven policy
+
+
+def _tuned_fleet(count=2, **pool_kw) -> Fleet:
+    fleet = Fleet([Pool("cpu", NodeSpec(cpu=CPU, batch_size=8),
+                        count=count, **pool_kw)])
+    fleet.estimate_capacity(100.0, n_queries=200)
+    return fleet
+
+
+def _diag(verdict: Verdict, burn: float = 5.0) -> Diagnosis:
+    return Diagnosis(1.0, "p95", verdict, (), 300.0, 100.0, burn)
+
+
+def test_policy_actions_match_verdicts():
+    fleet = _tuned_fleet(count=2, max_count=16)
+    pol = DiagnosisPolicy(Autoscaler(sla_ms=100.0, cooldown_windows=0))
+    cap = fleet.total_capacity()
+
+    pol.inform([_diag(Verdict.QUEUEING_SATURATION)])
+    delta = pol.observe(1.0, 300.0, 2.0 * cap, fleet)
+    assert delta > 1                       # rate-sized, not one-node drip
+    assert pol.actions[-1].action == "scale_out"
+    assert pol.actions[-1].delta == delta
+
+    n = fleet.n_nodes
+    pol.inform([_diag(Verdict.FAULT_RECOVERY)])
+    assert pol.observe(2.0, 300.0, 0.2 * cap, fleet) == 0
+    assert pol.actions[-1].action == "hold" and fleet.n_nodes == n
+
+    pol.inform([_diag(Verdict.COLD_CAPACITY)], booting=2)
+    assert pol.observe(3.0, 300.0, 0.2 * cap, fleet) == 0
+    assert pol.actions[-1].action == "hold"
+    pol.inform([_diag(Verdict.COLD_CAPACITY)], booting=0)
+    assert pol.observe(4.0, 300.0, 0.2 * cap, fleet) == 1
+    assert pol.actions[-1].action == "prewarm"
+
+    pol.inform([_diag(Verdict.SERVICE_REGRESSION)])
+    pol.observe(5.0, 10.0, 0.2 * cap, fleet)
+    assert pol.actions[-1].action == "delegate"
+
+    # calm windows delegate wholesale — no ControlAction recorded
+    seen = len(pol.actions)
+    pol.observe(6.0, 10.0, 0.2 * cap, fleet)
+    assert len(pol.actions) == seen
+    assert pol.events is pol.scaler.events
+
+    pol.reset()
+    assert not pol.actions and not pol.events
+
+
+def test_worst_burn_objective_decides():
+    fleet = _tuned_fleet(count=2, max_count=16)
+    pol = DiagnosisPolicy(Autoscaler(sla_ms=100.0, cooldown_windows=0))
+    pol.inform([_diag(Verdict.QUEUEING_SATURATION, burn=2.0),
+                _diag(Verdict.FAULT_RECOVERY, burn=9.0)])
+    assert pol.observe(1.0, 300.0, fleet.total_capacity(), fleet) == 0
+    assert pol.actions[-1].verdict == "FAULT_RECOVERY"
+
+
+# ------------------------------------------------------ engine integration
+
+
+def _overload_run(slo=None, autoscaler=None, n=600, horizon=0.3, count=2,
+                  service_s=4e-2, telemetry=True, seed=0):
+    rng = np.random.default_rng(seed)
+    times = np.sort(rng.uniform(0.0, horizon, n))
+    sizes = rng.integers(1, 17, n).astype(np.int64)
+    spec = NodeSpec(cpu=_canned(service_s), n_executors=2, batch_size=16,
+                    request_overhead_s=0.0)
+    fleet = Fleet([Pool("cpu", spec, count=count)])
+    return drive_fleet(times, sizes, sim_backends(fleet.node_views()),
+                       make_router("round_robin"), window_s=0.05,
+                       telemetry=telemetry, autoscaler=autoscaler, slo=slo)
+
+
+def test_drive_fleet_slo_queueing_overload_end_to_end(tmp_path, capsys):
+    eng = SloEngine(SloObjective("p95", latency_ms=50.0),
+                    rules=(BurnRateRule(2, 1, 1.0),))
+    r = _overload_run(slo=eng)
+    assert r.slo is eng
+    assert eng.diagnoses
+    verdicts = {d.verdict for d in eng.diagnoses}
+    assert verdicts == {Verdict.QUEUEING_SATURATION}
+    assert eng.violation_minutes() > 0
+    assert [a.kind for a in eng.alerts][0] == "fire"
+    assert eng.incidents and eng.incidents[0].t_end is not None
+    # finalize attached a per-incident attribution over the breach span
+    att = eng.incidents[0].attribution
+    assert att is not None and att.reconciles(0.05)
+    # the SLO folds must not break the run-level closure either
+    assert r.telemetry.attribution().reconciles(0.05)
+
+    # exporter round-trip: slo records ride the same JSONL artifact...
+    path = os.path.join(tmp_path, "run.jsonl")
+    write_jsonl(r, path)
+    with open(path) as f:
+        lines = [json.loads(ln) for ln in f if ln.strip()]
+    kinds = {ln["kind"] for ln in lines}
+    assert {"slo_objective", "alert", "diagnosis", "incident"} <= kinds
+    inc = next(ln for ln in lines if ln["kind"] == "incident")
+    assert inc["dominant_verdict"] == "QUEUEING_SATURATION"
+    assert inc["worst"]["evidence"]
+    # ...and the postmortem CLI renders them
+    from repro.obs.report import main as report_main
+    assert report_main([path]) == 0
+    out = capsys.readouterr().out
+    assert "QUEUEING_SATURATION" in out and "worst window" in out
+
+
+def test_slo_requires_windows_and_calm_run_is_quiet():
+    with pytest.raises(ValueError, match="window_s"):
+        drive_fleet(np.array([0.0]), np.array([1]), sim_backends(Fleet(
+            [Pool("cpu", NodeSpec(cpu=_canned(1e-4)), count=1)]
+        ).node_views()), make_router("round_robin"),
+            slo=SloEngine(SloObjective("p", latency_ms=50.0)))
+    eng = SloEngine(SloObjective("p95", latency_ms=50.0),
+                    rules=(BurnRateRule(2, 1, 1.0),))
+    r = _overload_run(slo=eng, n=60, horizon=1.0, service_s=2e-4)
+    assert not eng.alerts and not eng.diagnoses and not eng.incidents
+    assert eng.violation_minutes() == 0.0
+    assert r.slo is eng and len(eng.track["p95"]) > 0
+
+
+def test_slo_engine_resets_between_runs():
+    eng = SloEngine(SloObjective("p95", latency_ms=50.0),
+                    rules=(BurnRateRule(2, 1, 1.0),),
+                    diagnoser=BreachDiagnoser(dominant_frac=0.4))
+    _overload_run(slo=eng)
+    first = (len(eng.diagnoses), len(eng.alerts),
+             eng.violation_minutes())
+    assert first[0] > 0
+    _overload_run(slo=eng)                 # driver resets at entry
+    assert (len(eng.diagnoses), len(eng.alerts),
+            eng.violation_minutes()) == first
+    assert eng.diagnoser.dominant_frac == 0.4   # tuning survives reset
+
+
+# --------------------------------------------- autoscaler signal source
+
+
+def test_autoscaler_scalar_and_signal_sources_agree_on_clear_margin():
+    def run(signal):
+        rng = np.random.default_rng(3)
+        n, horizon = 900, 1.5
+        times = np.sort(rng.uniform(0.0, horizon, n))
+        sizes = rng.integers(1, 17, n).astype(np.int64)
+        fleet = Fleet([Pool("cpu", NodeSpec(cpu=CPU, batch_size=8),
+                            count=2, max_count=12)])
+        fleet.estimate_capacity(100.0, n_queries=200)
+        scaler = Autoscaler(sla_ms=100.0, cooldown_windows=0, signal=signal)
+        simulate_fleet(times, sizes, fleet, make_router("round_robin"),
+                       window_s=0.25, autoscaler=scaler, telemetry=True)
+        return [(e.t_s, e.pool, e.delta, e.reason) for e in scaler.events]
+
+    scalar_events = run(None)
+    signal_events = run(TelemetrySignal())
+    assert scalar_events == signal_events
+    assert scalar_events                    # the scenario actually scales
+
+
+def test_telemetry_signal_reads_latest_window_or_falls_back():
+    sig = TelemetrySignal()
+    assert sig.window_p95_ms() is None      # unbound -> scalar fallback
+    scaler = Autoscaler(sla_ms=100.0, signal=sig)
+    assert scaler._p95(42.0) == 42.0
+
+    class _Tel:
+        timeline = FleetTimeline()
+    reg = MetricsRegistry()
+    reg.histogram("fleet_latency_ms").observe_many(np.full(50, 200.0))
+    _Tel.timeline.snapshot(reg, 0.0, 0.5)
+    sig.bind(_Tel)
+    assert sig.window_p95_ms() == pytest.approx(200.0, rel=0.05)
+    assert scaler._p95(42.0) == pytest.approx(200.0, rel=0.05)
+
+
+# -------------------------------------------- sim-vs-live consistency
+
+
+def test_sim_and_live_engines_agree_on_verdict():
+    """The same saturating trace through the analytic sim and real
+    runtime threads must diagnose the same cause."""
+    service_s = 5e-3
+    n = 200
+    rng = np.random.default_rng(4)
+    times = np.sort(rng.uniform(0.0, 0.1, n))
+    sizes = rng.integers(1, 9, n).astype(np.int64)
+
+    def engine():
+        return SloEngine(SloObjective("p95", latency_ms=30.0),
+                         rules=(BurnRateRule(2, 1, 1.0),))
+
+    sim_eng = engine()
+    drive_fleet(times, sizes,
+                sim_backends(Fleet([Pool("cpu", NodeSpec(
+                    cpu=_canned(service_s), n_executors=1, batch_size=2,
+                    request_overhead_s=0.0), count=2)]).node_views()),
+                make_router("round_robin"), window_s=0.1, slo=sim_eng)
+
+    def apply_fn(batch):
+        import time as _t
+        _t.sleep(service_s)
+        return batch["x"].sum()
+
+    backends = [live_node(apply_fn, lambda size, model_id:
+                          {"x": np.ones(size, np.float32)},
+                          pool="live", index_in_pool=i,
+                          device=_canned(service_s), batch_size=2,
+                          max_bucket=64, clock=WallClock())
+                for i in range(2)]
+    live_eng = engine()
+    try:
+        drive_fleet(times, sizes, backends, make_router("round_robin"),
+                    window_s=0.1, slo=live_eng)
+    finally:
+        for b in backends:
+            b.close()
+
+    for eng in (sim_eng, live_eng):
+        assert eng.diagnoses, "saturating trace must breach on both engines"
+        worst = max(eng.diagnoses, key=lambda d: d.burn)
+        assert worst.verdict is Verdict.QUEUEING_SATURATION
+
+
+# ------------------------------------------------------------ report CLI
+
+
+def test_report_cli_rejects_artifacts_without_slo(tmp_path, capsys):
+    from repro.obs.report import main as report_main
+    r = _overload_run(n=60, horizon=1.0, service_s=2e-4)
+    path = os.path.join(tmp_path, "calm.jsonl")
+    write_jsonl(r, path)
+    assert report_main([path]) == 1
+    assert "no SLO records" in capsys.readouterr().err
+
+
+def test_report_renders_calm_engine_as_no_incidents():
+    eng = SloEngine(SloObjective("p95", latency_ms=50.0),
+                    rules=(BurnRateRule(2, 1, 1.0),))
+    r = _overload_run(slo=eng, n=60, horizon=1.0, service_s=2e-4)
+    lines = [json.loads(s) for s in
+             (json.dumps(x) for x in _stream(r))]
+    text = report_render(lines)
+    assert "incidents: none" in text
+
+
+def _stream(result):
+    from repro.obs.export import run_lines
+    return run_lines(result)
